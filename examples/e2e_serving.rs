@@ -1,0 +1,64 @@
+//! End-to-end serving driver (the headline validation): every layer of
+//! the stack composes on real compute —
+//!
+//!   Pallas kernels (L1) → JAX models (L2) → AOT HLO text + npz weights
+//!   → rust PJRT engine → RASS-selected designs → router/batcher →
+//!   batched request serving with latency/throughput reporting.
+//!
+//! Python is not involved at any point of this binary's execution.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_serving`
+
+use std::sync::mpsc;
+
+use carin::coordinator::ServingCoordinator;
+use carin::moo::rass;
+use carin::prelude::*;
+use carin::runtime::load_manifest;
+use carin::workload;
+
+fn main() -> anyhow::Result<()> {
+    let zoo = Registry::paper();
+    let manifest = load_manifest(std::path::Path::new("artifacts"))?;
+    println!("manifest: {} artifacts", manifest.len());
+
+    for uc in ["uc1", "uc3", "uc4"] {
+        let device = profiles::by_name("s20").unwrap();
+        let p = carin::config::use_case(uc, &zoo, &device).unwrap();
+        let sol = rass::solve(&p);
+        println!("\n==== {} on {} ====", uc, device.name);
+        println!("d0 = {}", sol.designs[0].describe(&p));
+
+        let mut coord = ServingCoordinator::new(&zoo, &sol, manifest.clone())?;
+        println!(
+            "engine: PJRT CPU, {} design-set models preloaded (vs {} in the full zoo)",
+            coord.loaded_models(),
+            manifest.len()
+        );
+
+        let n = 120;
+        let (tx, rx) = mpsc::channel();
+        let producers =
+            workload::spawn_producers(workload::for_use_case(uc, n), tx, 7, 0.005);
+        let report = coord.serve(rx)?;
+        for h in producers {
+            let _ = h.join();
+        }
+        for t in &report.tasks {
+            println!(
+                "task {} [{:18}] {:4} reqs  exec mean {:7.3} ms  p95 {:7.3} ms  e2e mean {:7.3} ms",
+                t.task,
+                t.artifact,
+                t.completed,
+                t.latency_ms.mean,
+                t.latency_ms.percentile(95.0),
+                t.e2e_ms.mean,
+            );
+        }
+        println!(
+            "=> {} requests in {:.2} s = {:.1} req/s",
+            report.total_requests, report.wall_s, report.throughput_rps
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Quickstart: formulate the paper's UC1 (real-time image classification)
+//! for a device, solve it with RASS, and inspect the designs + switching
+//! policy — the complete offline phase of CARIn in ~20 lines.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use carin::prelude::*;
+
+fn main() {
+    // 1. The model repository (paper Tables 2-5) and target device (Table 6).
+    let zoo = Registry::paper();
+    let device = profiles::by_name("s20").unwrap();
+    println!("device: {} ({}, engines {:?})", device.name, device.soc,
+             device.engines.iter().map(|e| e.name()).collect::<Vec<_>>());
+
+    // 2. Formulate the device-specific MOO problem from the use case's SLOs:
+    //    max accuracy & throughput s.t. max latency <= 41.67 ms (24 FPS).
+    let problem = carin::config::use_case("uc1", &zoo, &device).unwrap();
+    println!(
+        "decision space |X| = {} ({} objectives, {} constraints)",
+        problem.space.len(),
+        problem.objectives.len(),
+        problem.constraints.len()
+    );
+    for o in &problem.objectives {
+        println!("  objective:  {}", o.describe());
+    }
+    for c in &problem.constraints {
+        println!("  constraint: {}", c.describe());
+    }
+
+    // 3. Solve once with RASS: a design set + switching policy, ready for
+    //    zero-overhead runtime adaptation.
+    let solution = rass::solve(&problem);
+    println!(
+        "\nRASS: |X'| = {} feasible, solved in {:?}",
+        solution.feasible_count, solution.solve_time
+    );
+    for (i, d) in solution.designs.iter().enumerate() {
+        println!("  d[{i}] {}", d.describe(&problem));
+    }
+
+    // 4. The Runtime Manager adapts by table lookup — no re-solving.
+    let mut rm = RuntimeManager::new(solution);
+    println!("\ninitial design: d[{}]", rm.current_design());
+    let cpu_overload = carin::moo::rass::EnvState::calm().with_engine(Engine::Cpu);
+    if let Some(d) = rm.observe(cpu_overload, 1.0) {
+        println!("CPU overload   -> d[{d}]");
+    }
+    if let Some(d) = rm.observe(carin::moo::rass::EnvState::calm().with_memory(), 2.0) {
+        println!("memory squeeze -> d[{d}]");
+    }
+    if let Some(d) = rm.observe(carin::moo::rass::EnvState::calm(), 3.0) {
+        println!("recovered      -> d[{d}]");
+    }
+    println!("mean decision latency: {:.0} ns", rm.mean_decision_ns());
+}

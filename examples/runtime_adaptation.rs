@@ -1,0 +1,58 @@
+//! Runtime adaptation (the paper's §7.2, Figures 7 & 8): replay the
+//! Figure-7 event script — CPU overload, then a RAM squeeze, then
+//! recovery — against UC1 on the Galaxy S20, with the Runtime Manager
+//! switching designs by policy lookup.
+//!
+//! Run: `cargo run --release --example runtime_adaptation`
+
+use carin::coordinator::run_trace;
+use carin::manager::EventSchedule;
+use carin::moo::rass;
+use carin::prelude::*;
+
+fn main() {
+    let zoo = Registry::paper();
+    let device = profiles::by_name("s20").unwrap();
+    let p = carin::config::use_case("uc1", &zoo, &device).unwrap();
+    let sol = rass::solve(&p);
+    println!("{}", carin::harness::tables::table7_8_designs(&p, &sol));
+
+    let schedule = EventSchedule::figure7(p.device.ram_bytes());
+    let log = run_trace(&p, sol, schedule, 30.0, 1.0 / 24.0, 11);
+
+    println!(
+        "{} inference rounds, {} design switches, mean decision {:.0} ns\n",
+        log.points.len(),
+        log.switches,
+        log.mean_decision_ns
+    );
+    println!("  time   design  latency    thr/s   acc     mem");
+    let mut mark = 0.0;
+    for pt in &log.points {
+        if pt.switched_to.is_none() && pt.events.is_empty() && pt.t_s < mark {
+            continue;
+        }
+        mark = pt.t_s + 2.0;
+        println!(
+            "  {:5.1}s  d[{}]   {:7.2}ms {:7.1} {:6.2} {:6.1}MB {}{}",
+            pt.t_s,
+            pt.design,
+            pt.latency_ms[0],
+            pt.throughput,
+            pt.accuracy[0],
+            pt.mem_mb,
+            if pt.events.is_empty() { String::new() } else { format!(" !! {}", pt.events.join("; ")) },
+            match pt.switched_to {
+                Some(d) => format!(" -> d[{d}]"),
+                None => String::new(),
+            }
+        );
+    }
+
+    // Accuracy preservation takeaway (§7.2.1): the design set keeps
+    // accuracy within a tight band across all switches.
+    let accs: Vec<f64> = log.points.iter().map(|p| p.accuracy[0]).collect();
+    let min = accs.iter().copied().fold(f64::MAX, f64::min);
+    let max = accs.iter().copied().fold(f64::MIN, f64::max);
+    println!("\naccuracy band across adaptation: [{min:.2}, {max:.2}]");
+}

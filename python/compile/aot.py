@@ -1,0 +1,161 @@
+"""AOT compile path: lower every (model, scheme) pair in the executable
+zoo to HLO **text** + a weights ``.npz`` + ``artifacts/manifest.json``.
+
+Interchange format notes (see /opt/xla-example/README.md):
+
+* HLO text, not ``.serialize()`` — jax >= 0.5 emits HloModuleProtos with
+  64-bit instruction ids which the rust side's xla_extension 0.5.1
+  rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids.
+* Weights are graph *parameters*, not baked constants — the HLO text
+  printer elides large constants (``constant({...})``), and multi-MB
+  decimal-printed tensors would bloat artifacts and parse time anyway.
+  The transformed (scheme-specific) weight tensors are saved to an
+  ``.npz`` whose key order is recorded in the manifest; the rust runtime
+  uploads them once as PJRT device buffers and passes them after the
+  input on every execute call.
+
+Run once via ``make artifacts``; python never executes on the request
+path.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--models cnn_s,bert_s]
+                          [--schemes fp32,ffx8] [--check]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import nn
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def example_for(md: M.ModelDef, scheme: str) -> np.ndarray:
+    ex = md.example_input()
+    if scheme == "ffx8" and ex.dtype != np.int32:
+        return np.zeros(ex.shape, np.int8)
+    return ex
+
+
+def random_input(ex: np.ndarray, seed: int = 7) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    if ex.dtype == np.int32:
+        return rng.integers(0, 1024, ex.shape).astype(np.int32)
+    if ex.dtype == np.int8:
+        return rng.integers(-100, 100, ex.shape).astype(np.int8)
+    return rng.standard_normal(ex.shape).astype(np.float32)
+
+
+def export_one(md: M.ModelDef, scheme: str, out_dir: str, calib, check: bool):
+    run, example, keys, arrays, in_scale = md.fn_params(scheme, calib=calib)
+    ex = example_for(md, scheme)
+    specs = [jax.ShapeDtypeStruct(ex.shape, ex.dtype)] + [
+        jax.ShapeDtypeStruct(a.shape, a.dtype) for a in arrays
+    ]
+    lowered = jax.jit(run).lower(*specs)
+    text = to_hlo_text(lowered)
+    stem = f"{md.name}_{scheme}"
+    with open(os.path.join(out_dir, stem + ".hlo.txt"), "w") as f:
+        f.write(text)
+    # npz with sorted keys == parameter order after the input.
+    np.savez(os.path.join(out_dir, stem + ".npz"), **dict(zip(keys, arrays)))
+
+    out_shapes = [
+        {"shape": list(o.shape), "dtype": str(o.dtype)}
+        for o in jax.eval_shape(run, *specs)
+    ]
+    if check:
+        x = random_input(ex)
+        got = jax.jit(run)(x, *arrays)
+        ref = run(jnp.asarray(x), *[jnp.asarray(a) for a in arrays])
+        # dr8's dynamic activation scales are absmax reductions whose
+        # jit/eager evaluation order may differ by 1 ulp, which perturbs
+        # the int8 rounding; allow a quantisation-step-sized tolerance on
+        # the integer schemes.
+        atol, rtol = (2e-2, 5e-2) if scheme in nn.INT8_SCHEMES else (2e-4, 1e-3)
+        for g, r in zip(got, ref):
+            np.testing.assert_allclose(
+                np.asarray(g).astype(np.float32),
+                np.asarray(r).astype(np.float32),
+                atol=atol, rtol=rtol,
+            )
+
+    weight_bytes = int(sum(a.nbytes for a in arrays))
+    return {
+        "file": stem + ".hlo.txt",
+        "weights": stem + ".npz",
+        "weight_keys": keys,
+        "model": md.name,
+        "task": md.task,
+        "scheme": scheme,
+        "input": {"shape": list(ex.shape), "dtype": str(ex.dtype)},
+        "outputs": out_shapes,
+        "params": md.num_params,
+        "flops": md.flops,
+        "weight_bytes": weight_bytes,
+        "input_scale": in_scale if scheme == "ffx8" else None,
+        "hlo_bytes": len(text),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="")
+    ap.add_argument("--schemes", default="")
+    ap.add_argument("--check", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    want_models = set(filter(None, args.models.split(",")))
+    want_schemes = set(filter(None, args.schemes.split(",")))
+
+    manifest = []
+    for md in M.ZOO:
+        if want_models and md.name not in want_models:
+            continue
+        calib = md.calibrate()
+        for scheme in md.schemes:
+            if want_schemes and scheme not in want_schemes:
+                continue
+            t0 = time.time()
+            entry = export_one(md, scheme, args.out_dir, calib, args.check)
+            manifest.append(entry)
+            print(
+                f"[aot] {entry['file']:28s} params={entry['params']:>8d} "
+                f"flops={entry['flops']:>12d} hlo={entry['hlo_bytes']:>9d}B "
+                f"({time.time() - t0:.1f}s)",
+                flush=True,
+            )
+
+    man_path = os.path.join(args.out_dir, "manifest.json")
+    existing = []
+    if (want_models or want_schemes) and os.path.exists(man_path):
+        with open(man_path) as f:
+            existing = [
+                e for e in json.load(f)
+                if not any(e["file"] == n["file"] for n in manifest)
+            ]
+    with open(man_path, "w") as f:
+        json.dump(existing + manifest, f, indent=1)
+    print(f"[aot] wrote {len(manifest)} artifacts + manifest to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

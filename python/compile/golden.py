@@ -1,0 +1,55 @@
+"""Golden outputs for cross-language validation.
+
+For every artifact in the manifest, runs the jitted model on an all-zeros
+input and records the first 8 output values. The rust test-suite
+(`rust/tests/runtime_pjrt.rs`) replays the same zero input through the
+PJRT engine and asserts the numbers match — proving the HLO-text + npz
+interchange preserves semantics end to end.
+
+Usage: python -m compile.golden --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+
+from . import model as M
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+
+    with open(os.path.join(args.out_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    goldens = {}
+    calib_cache = {}
+    for e in manifest:
+        md = M.get(e["model"])
+        if e["model"] not in calib_cache:
+            calib_cache[e["model"]] = md.calibrate()
+        run, _, keys, arrays, _ = md.fn_params(e["scheme"], calib=calib_cache[e["model"]])
+        assert keys == e["weight_keys"], f"key order drift for {e['file']}"
+        dtype = {"float32": np.float32, "int32": np.int32, "int8": np.int8}[
+            e["input"]["dtype"]
+        ]
+        x = np.zeros(e["input"]["shape"], dtype)
+        out = np.asarray(jax.jit(run)(x, *arrays)[0]).reshape(-1)
+        stem = e["file"].replace(".hlo.txt", "")
+        goldens[stem] = [float(v) for v in out[:8]]
+        print(f"[golden] {stem:28s} {goldens[stem][:4]}", flush=True)
+
+    with open(os.path.join(args.out_dir, "goldens.json"), "w") as f:
+        json.dump(goldens, f, indent=1)
+    print(f"[golden] wrote {len(goldens)} entries")
+
+
+if __name__ == "__main__":
+    main()

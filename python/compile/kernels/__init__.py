@@ -1,0 +1,13 @@
+# NOTE: the `qmatmul` *function* is intentionally not re-exported here —
+# binding it at package level would shadow the `kernels.qmatmul` submodule
+# (tests import the module for direct kernel access).
+from .qmatmul import (  # noqa: F401
+    dense_dr8,
+    dense_f32,
+    dense_fx8,
+    matmul_f32,
+    matmul_int8,
+    quantize_dynamic,
+    quantize_static,
+    quantize_weights,
+)

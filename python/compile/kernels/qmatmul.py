@@ -1,0 +1,212 @@
+"""L1 Pallas kernels: the inference hot-spot of every model in the zoo.
+
+Two tiled matmul kernels back all dense layers and all im2col-lowered
+convolutions in the CARIn model zoo:
+
+* ``matmul_f32``   — f32 x f32 -> f32 (FP32 / FP16-fallback paths)
+* ``matmul_int8``  — int8 x int8 -> int32 (DR8 / FX8 / FFX8 paths)
+
+Hardware adaptation (paper -> TPU, see DESIGN.md §Hardware-Adaptation):
+the paper's quantised TFLite kernels target ARM NEON / Hexagon HVX; here
+the same insight — int8 halves/quarters memory traffic and unlocks the
+integer engine — is expressed as MXU-friendly tiles: blocks of
+(bm, K) x (K, bn) staged through VMEM via BlockSpec, accumulating in
+i32/f32. Kernels are lowered with ``interpret=True``: the CPU PJRT client
+cannot execute Mosaic custom-calls, and correctness is what the interpret
+path validates (TPU perf is estimated analytically in DESIGN.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. 128 matches the MXU systolic-array edge; tiles are
+# shrunk to the (padded) problem size for the small end of the zoo.
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, acc_dtype):
+    """One (bm, K) x (K, bn) tile. K is kept whole-in-VMEM: every model in
+    the zoo has K <= 1536, so x-tile + w-tile + acc fit comfortably in the
+    ~16 MB VMEM budget (see DESIGN.md §Perf for the footprint table)."""
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=acc_dtype
+    ).astype(o_ref.dtype)
+
+
+def _pallas_matmul(x, w, *, out_dtype, acc_dtype, block_m=BLOCK_M, block_n=BLOCK_N):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+
+    bm = min(block_m, _ceil_to(m, 8))
+    bn = min(block_n, _ceil_to(n, 8))
+    mp, np_ = _ceil_to(m, bm), _ceil_to(n, bn)
+    if mp != m or np_ != n:
+        x = jnp.pad(x, ((0, mp - m), (0, 0)))
+        w = jnp.pad(w, ((0, 0), (0, np_ - n)))
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, acc_dtype=acc_dtype),
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        interpret=True,
+    )(x, w)
+    return out[:m, :n]
+
+
+def matmul_f32(x: jax.Array, w: jax.Array) -> jax.Array:
+    """f32 (M, K) @ (K, N) -> f32 (M, N) through the Pallas tile kernel."""
+    return _pallas_matmul(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        out_dtype=jnp.float32,
+        acc_dtype=jnp.float32,
+    )
+
+
+def matmul_int8(x_q: jax.Array, w_q: jax.Array) -> jax.Array:
+    """int8 (M, K) @ (K, N) -> int32 (M, N). Raw integer accumulation;
+    dequantisation is applied by the caller (XLA fuses the elementwise
+    epilogue into the surrounding graph)."""
+    assert x_q.dtype == jnp.int8 and w_q.dtype == jnp.int8
+    return _pallas_matmul(x_q, w_q, out_dtype=jnp.int32, acc_dtype=jnp.int32)
+
+
+def qmatmul(
+    x_q: jax.Array,
+    w_q: jax.Array,
+    x_scale: jax.Array,
+    w_scale: jax.Array,
+) -> jax.Array:
+    """Quantised matmul with dequant epilogue.
+
+    x_q      : int8 (M, K) activations
+    w_q      : int8 (K, N) weights
+    x_scale  : f32 scalar or (M, 1) per-row activation scale
+    w_scale  : f32 (N,)   per-channel weight scale
+    returns  : f32 (M, N) = (x_q @ w_q) * x_scale * w_scale
+    """
+    acc = matmul_int8(x_q, w_q)
+    return acc.astype(jnp.float32) * x_scale * w_scale.reshape(1, -1)
+
+
+def _qmatmul_fused_kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref):
+    """Perf-pass L1 iteration (EXPERIMENTS.md §Perf): the int32
+    accumulator never leaves VMEM — the dequant epilogue runs on the tile
+    before the f32 result is written, saving the M*N*4B int32 round trip
+    to HBM that the unfused pair (matmul_int8 + XLA elementwise) pays."""
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.int32)
+    o_ref[...] = acc.astype(jnp.float32) * xs_ref[0] * ws_ref[...].reshape(1, -1)
+
+
+def qmatmul_fused(
+    x_q: jax.Array,
+    w_q: jax.Array,
+    x_scale: jax.Array,
+    w_scale: jax.Array,
+) -> jax.Array:
+    """Fused variant of [`qmatmul`]: int8 x int8 -> i32 accumulate ->
+    dequant, all inside one Pallas tile. Numerically identical."""
+    assert x_q.dtype == jnp.int8 and w_q.dtype == jnp.int8
+    m, k = x_q.shape
+    k2, n = w_q.shape
+    assert k == k2
+    bm = min(BLOCK_M, _ceil_to(m, 8))
+    bn = min(BLOCK_N, _ceil_to(n, 8))
+    mp, np_ = _ceil_to(m, bm), _ceil_to(n, bn)
+    if mp != m or np_ != n:
+        x_q = jnp.pad(x_q, ((0, mp - m), (0, 0)))
+        w_q = jnp.pad(w_q, ((0, 0), (0, np_ - n)))
+        w_scale = jnp.pad(w_scale, (0, np_ - n))
+    xs = jnp.reshape(jnp.asarray(x_scale, jnp.float32), (1,))
+    out = pl.pallas_call(
+        _qmatmul_fused_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(x_q, w_q, xs, w_scale)
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# Quantisation helpers (TFLite-converter semantics, symmetric int8).
+# ---------------------------------------------------------------------------
+
+def quantize_weights(w, axis: int = -1):
+    """Symmetric per-channel int8 quantisation of a weight matrix.
+
+    Returns (w_q int8, scale f32 per output channel).
+    """
+    w = jnp.asarray(w, jnp.float32)
+    amax = jnp.max(jnp.abs(w), axis=tuple(i for i in range(w.ndim) if i != axis % w.ndim))
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    shape = [1] * w.ndim
+    shape[axis % w.ndim] = -1
+    w_q = jnp.clip(jnp.round(w / scale.reshape(shape)), -127, 127).astype(jnp.int8)
+    return w_q, scale.astype(jnp.float32)
+
+
+def quantize_dynamic(x):
+    """TFLite DR8 dynamic-range activation quantisation: per-tensor scale
+    computed at inference time. Returns (x_q int8, scale f32 scalar)."""
+    x = jnp.asarray(x, jnp.float32)
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    x_q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return x_q, scale
+
+
+def quantize_static(x, scale: float):
+    """FX8/FFX8 static activation quantisation with a calibration-time
+    scale baked into the graph."""
+    x_q = jnp.clip(jnp.round(jnp.asarray(x, jnp.float32) / scale), -127, 127)
+    return x_q.astype(jnp.int8)
+
+
+def dense_f32(x, w, b=None):
+    """FP32/FP16 dense layer on the Pallas f32 kernel."""
+    out = matmul_f32(x, w)
+    if b is not None:
+        out = out + b
+    return out
+
+
+def dense_dr8(x, w_q, w_scale, b=None):
+    """DR8 dense layer: dynamic activation quant + int8 kernel + dequant."""
+    x_q, x_scale = quantize_dynamic(x)
+    out = qmatmul(x_q, w_q, x_scale, w_scale)
+    if b is not None:
+        out = out + b
+    return out
+
+
+def dense_fx8(x, w_q, w_scale, x_scale: float, b=None):
+    """FX8/FFX8 dense layer: static activation quant + the fused int8
+    kernel (dequant epilogue in-tile — see qmatmul_fused)."""
+    x_q = quantize_static(x, x_scale)
+    out = qmatmul_fused(x_q, w_q, jnp.float32(x_scale), w_scale)
+    if b is not None:
+        out = out + b
+    return out

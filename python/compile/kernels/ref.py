@@ -1,0 +1,34 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Every kernel in ``qmatmul.py`` must agree with its oracle here to within
+float tolerance (exactly, for the integer path). The pytest suite sweeps
+shapes and dtypes with hypothesis and asserts allclose.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_f32_ref(x, w):
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def matmul_int8_ref(x_q, w_q):
+    return jnp.dot(x_q.astype(jnp.int32), w_q.astype(jnp.int32))
+
+
+def qmatmul_ref(x_q, w_q, x_scale, w_scale):
+    acc = matmul_int8_ref(x_q, w_q).astype(jnp.float32)
+    return acc * x_scale * jnp.asarray(w_scale).reshape(1, -1)
+
+
+def quantize_weights_ref(w, axis: int = -1):
+    w = jnp.asarray(w, jnp.float32)
+    axes = tuple(i for i in range(w.ndim) if i != axis % w.ndim)
+    amax = jnp.max(jnp.abs(w), axis=axes)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    shape = [1] * w.ndim
+    shape[axis % w.ndim] = -1
+    w_q = jnp.clip(jnp.round(w / scale.reshape(shape)), -127, 127).astype(jnp.int8)
+    return w_q, scale.astype(jnp.float32)

@@ -1,0 +1,338 @@
+"""L2 model zoo: the executable DNNs served by the rust coordinator.
+
+Compact JAX re-implementations of the paper's four model families
+(§6.2, Tables 2-5), scaled to laptop-class artifact sizes (documented
+substitution — DESIGN.md §6):
+
+* ``cnn_*``    — MobileNetV2-style inverted-residual image classifiers
+                 (UC1 image classification, UC3 scene classification).
+* ``bert_*``   — BERT-style transformer text classifiers with the paper's
+                 mobile-friendly tweaks (ReLU instead of GELU, affine
+                 instead of LayerNorm) (UC2 emotion classification).
+* ``yamnet_lite`` — audio event classifier: fixed framing front-end +
+                 depthwise-separable conv stack (UC3 audio).
+* ``face_*``   — MobileNetV2-backbone facial-attribute heads, batch 4
+                 (UC4 gender / age / ethnicity).
+
+Each model is a pure function of its input with weights baked in as
+constants, built per quantisation scheme (Table 1) via ``nn.Ctx``, so a
+single (model, scheme) pair lowers to one self-contained HLO module.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import nn
+from .nn import Ctx
+
+
+# ---------------------------------------------------------------------------
+# Architecture builders. Each returns (param_spec, forward, example_input,
+# flops). forward(ctx, x) -> logits.
+# ---------------------------------------------------------------------------
+
+
+def _cnn_spec(hw: int, widths: List[int], num_classes: int):
+    """MobileNetV2-style: stem conv s2, one inverted-residual block per
+    width entry (expand 2x -> depthwise s2 -> project), GAP, classifier."""
+    spec: Dict[str, tuple] = {}
+    flops = 0
+    c_in = 3
+    h = hw // 2
+    spec["stem"] = (3, 3, 3, widths[0])
+    spec["stem/b"] = (widths[0],)
+    flops += 2 * h * h * 3 * 3 * 3 * widths[0]
+    c_in = widths[0]
+    for i, c_out in enumerate(widths):
+        e = c_in * 2
+        spec[f"blk{i}/exp"] = (1, 1, c_in, e)
+        spec[f"blk{i}/exp/b"] = (e,)
+        spec[f"blk{i}/dw"] = (3, 3, e, 1)
+        spec[f"blk{i}/dw/b"] = (e,)
+        spec[f"blk{i}/proj"] = (1, 1, e, c_out)
+        spec[f"blk{i}/proj/b"] = (c_out,)
+        flops += 2 * h * h * c_in * e  # expand
+        h2 = h // 2
+        flops += 2 * h2 * h2 * 9 * e  # depthwise (s2)
+        flops += 2 * h2 * h2 * e * c_out  # project
+        h = h2
+        c_in = c_out
+    spec["head"] = (c_in, num_classes)
+    spec["head/b"] = (num_classes,)
+    flops += 2 * c_in * num_classes
+
+    def forward(ctx: Ctx, x):
+        x = ctx.conv2d(x, "stem", stride=2, act="relu6")
+        for i in range(len(widths)):
+            y = ctx.conv2d(x, f"blk{i}/exp", act="relu6")
+            y = ctx.depthwise(y, f"blk{i}/dw", stride=2, act="relu6")
+            y = ctx.conv2d(y, f"blk{i}/proj")
+            x = y
+        x = nn.avg_pool_all(x)
+        return ctx.dense(x, "head")
+
+    example = np.zeros((1, hw, hw, 3), np.float32)
+    return spec, forward, example, flops
+
+
+def _bert_spec(layers: int, hidden: int, seq: int, vocab: int, num_classes: int,
+               num_heads: int = 4):
+    """BERT-style encoder with the paper's mobile tweaks (ReLU FFN,
+    affine norm). Input: int32 token ids of shape (seq,)."""
+    spec: Dict[str, tuple] = {}
+    spec["embed"] = (vocab, hidden)
+    spec["pos"] = (seq, hidden)
+    flops = 0
+    for l in range(layers):
+        for nm in ("q", "k", "v", "o"):
+            spec[f"l{l}/att/{nm}"] = (hidden, hidden)
+            spec[f"l{l}/att/{nm}/b"] = (hidden,)
+        spec[f"l{l}/n1/g"] = (hidden,)
+        spec[f"l{l}/n1/bb"] = (hidden,)
+        spec[f"l{l}/ffn/up"] = (hidden, hidden * 4)
+        spec[f"l{l}/ffn/up/b"] = (hidden * 4,)
+        spec[f"l{l}/ffn/down"] = (hidden * 4, hidden)
+        spec[f"l{l}/ffn/down/b"] = (hidden,)
+        spec[f"l{l}/n2/g"] = (hidden,)
+        spec[f"l{l}/n2/bb"] = (hidden,)
+        flops += 2 * seq * hidden * hidden * 4  # qkv+o
+        flops += 2 * seq * seq * hidden * 2  # attention core
+        flops += 2 * seq * hidden * hidden * 4 * 2  # ffn
+    spec["cls"] = (hidden, num_classes)
+    spec["cls/b"] = (num_classes,)
+    flops += 2 * hidden * num_classes
+
+    def forward(ctx: Ctx, ids):
+        x = ctx.embed(ids, "embed") + ctx.aux("pos")
+        for l in range(layers):
+            a = nn.attention(ctx, x, f"l{l}/att", num_heads)
+            x = ctx.affine(x + a, f"l{l}/n1")
+            f = ctx.dense(x, f"l{l}/ffn/up", act="relu")
+            f = ctx.dense(f, f"l{l}/ffn/down")
+            x = ctx.affine(x + f, f"l{l}/n2")
+        pooled = jnp.mean(x, axis=0, keepdims=True)
+        return ctx.dense(pooled, "cls")
+
+    example = np.zeros((seq,), np.int32)
+    return spec, forward, example, flops
+
+
+def _yamnet_spec(num_classes: int = 521, samples: int = 15600):
+    """YAMNet-lite: strided framing (96 frames x 162 samples) -> learned
+    'mel' projection to 64 bands -> 2 depthwise-separable conv blocks ->
+    GAP -> classifier."""
+    frames, flen, mel = 96, 162, 64
+    spec: Dict[str, tuple] = {
+        "mel": (flen, mel),
+        "mel/b": (mel,),
+    }
+    flops = 2 * frames * flen * mel
+    c_in, h, w = 1, frames, mel
+    chans = [24, 48]
+    for i, c_out in enumerate(chans):
+        spec[f"blk{i}/dw"] = (3, 3, c_in, 1)
+        spec[f"blk{i}/dw/b"] = (c_in,)
+        spec[f"blk{i}/pw"] = (1, 1, c_in, c_out)
+        spec[f"blk{i}/pw/b"] = (c_out,)
+        h2, w2 = h // 2, w // 2
+        flops += 2 * h2 * w2 * 9 * c_in + 2 * h2 * w2 * c_in * c_out
+        h, w, c_in = h2, w2, c_out
+    spec["head"] = (c_in, num_classes)
+    spec["head/b"] = (num_classes,)
+    flops += 2 * c_in * num_classes
+
+    def forward(ctx: Ctx, wav):
+        hop = (samples - flen) // (frames - 1)
+        idx = jnp.arange(frames)[:, None] * hop + jnp.arange(flen)[None, :]
+        framed = wav[idx]  # (frames, flen)
+        x = ctx.dense(framed, "mel", act="relu")
+        x = x[None, :, :, None]  # (1, frames, mel, 1)
+        for i in range(len(chans)):
+            x = ctx.depthwise(x, f"blk{i}/dw", stride=2, act="relu")
+            x = ctx.conv2d(x, f"blk{i}/pw", act="relu")
+        x = nn.avg_pool_all(x)
+        return ctx.dense(x, "head")
+
+    example = np.zeros((samples,), np.float32)
+    return spec, forward, example, flops
+
+
+def _face_spec(num_out: int, batch: int = 4, hw: int = 62):
+    """UC4 facial-attribute model: MNV2-style backbone, batch-4 inference
+    (the face-detector upstream yields multiple crops per frame)."""
+    spec, fwd_cnn, _, flops = _cnn_spec(hw=hw + 2, widths=[16, 32], num_classes=num_out)
+
+    def forward(ctx: Ctx, x):
+        x = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))  # 62 -> 64
+        return fwd_cnn(ctx, x)
+
+    example = np.zeros((batch, hw, hw, 3), np.float32)
+    return spec, forward, example, flops * batch
+
+
+# ---------------------------------------------------------------------------
+# Executable zoo registry (python side; mirrored by rust/src/zoo).
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ModelDef:
+    name: str
+    task: str
+    builder: Callable[[], tuple]
+    seed: int
+    schemes: Tuple[str, ...] = nn.SCHEMES
+    # filled lazily
+    _built: Optional[tuple] = field(default=None, repr=False)
+
+    def build(self):
+        if self._built is None:
+            spec, fwd, example, flops = self.builder()
+            params = nn.init_params(spec, self.seed)
+            self._built = (params, fwd, example, flops)
+        return self._built
+
+    @property
+    def num_params(self) -> int:
+        params, _, _, _ = self.build()
+        return int(sum(p.size for p in params.values()))
+
+    @property
+    def flops(self) -> int:
+        return self.build()[3]
+
+    def example_input(self) -> np.ndarray:
+        return self.build()[2]
+
+    def calibrate(self, num_batches: int = 4):
+        """Run the fp32 path on random inputs recording per-layer input
+        absmax (the TFLite representative-dataset step for FX8/FFX8) and
+        per-parameter usage kinds (consumed by ``nn.transform_params``).
+
+        Returns (calib, kinds).
+        """
+        params, fwd, example, _ = self.build()
+        record: Dict[str, float] = {}
+        kinds: Dict[str, str] = {}
+        rng = np.random.default_rng(self.seed + 1)
+        logit_max = 0.0
+        for _ in range(num_batches):
+            x = _random_like(example, rng)
+            ctx = Ctx(params, "fp32", record=record, kinds=kinds)
+            out = fwd(ctx, jnp.asarray(x))
+            logit_max = max(logit_max, float(jnp.max(jnp.abs(out))))
+        # FFX8 output quantisation scale: logits absmax over the
+        # representative dataset (mirrors TFLite's output calibration).
+        record["__logits__"] = max(logit_max, 1e-6)
+        return record, kinds
+
+    def _calib_kinds(self, calib):
+        if calib is None:
+            return self.calibrate()
+        return calib
+
+    def fn(self, scheme: str, calib=None):
+        """Return forward(x) for the given scheme, transformed weights
+        closed over as graph constants (eval path).
+
+        Returns (run, example, in_scale).
+        """
+        params, fwd, example, _ = self.build()
+        calib_map, kinds = self._calib_kinds(calib)
+        tp = nn.transform_params(params, kinds, scheme)
+        in_scale = _input_scale(example, self.seed)
+
+        def run(x):
+            ctx = Ctx(tp, scheme, calib=calib_map)
+            return _wrap_io(fwd, ctx, x, scheme, example, in_scale)
+
+        return run, example, in_scale
+
+    def fn_params(self, scheme: str, calib=None):
+        """AOT path: forward(x, *weights) with the scheme-transformed
+        weights as graph *parameters* (shipped as .npz; uploaded once by
+        the rust runtime as device buffers).
+
+        Returns (run, example, weight_keys, weight_arrays, in_scale).
+        """
+        params, fwd, example, _ = self.build()
+        calib_map, kinds = self._calib_kinds(calib)
+        tp = nn.transform_params(params, kinds, scheme)
+        keys = sorted(tp.keys())
+        arrays = [tp[k] for k in keys]
+        in_scale = _input_scale(example, self.seed)
+
+        def run(x, *weights):
+            traced = dict(zip(keys, weights))
+            ctx = Ctx(traced, scheme, calib=calib_map)
+            return _wrap_io(fwd, ctx, x, scheme, example, in_scale)
+
+        return run, example, keys, arrays, in_scale
+
+
+def _input_scale(example: np.ndarray, seed: int) -> float:
+    scale = float(np.abs(_random_like(example, np.random.default_rng(0))).max()) / 127.0
+    return max(scale, 1e-6)
+
+
+def _wrap_io(fwd, ctx: Ctx, x, scheme: str, example: np.ndarray, in_scale: float):
+    """Apply Table 1 I/O conventions around the forward pass."""
+    if scheme == "ffx8":
+        # Full-integer I/O: int8 input (int32 for token ids), int8 logits.
+        if example.dtype == np.int32:
+            logits = fwd(ctx, x)
+        else:
+            logits = fwd(ctx, x.astype(jnp.float32) * in_scale)
+        # calibration-derived logit scale (TFLite output quantisation)
+        ls = ctx.calib.get("__logits__", 31.75) / 127.0
+        return (jnp.clip(jnp.round(logits / ls), -127, 127).astype(jnp.int8),)
+    return (fwd(ctx, x),)
+
+
+def _random_like(example: np.ndarray, rng) -> np.ndarray:
+    if example.dtype == np.int32:
+        return rng.integers(0, 1024, example.shape).astype(np.int32)
+    return rng.standard_normal(example.shape).astype(np.float32)
+
+
+def _int_example(example: np.ndarray) -> np.ndarray:
+    return np.zeros(example.shape, np.int8)
+
+
+ZOO: List[ModelDef] = [
+    # UC1 — image classification (ImageNet-100 synthetic stand-in).
+    ModelDef("cnn_s", "uc1", lambda: _cnn_spec(96, [16, 24, 32], 100), seed=11),
+    ModelDef("cnn_m", "uc1", lambda: _cnn_spec(96, [24, 36, 48], 100), seed=12),
+    ModelDef("cnn_l", "uc1", lambda: _cnn_spec(128, [32, 48, 64], 100), seed=13),
+    # MobileViT stand-in: transformer-ish image model, float-only (the
+    # paper's Tables 2 show no int8 variants for MobileViT).
+    ModelDef("vit_xs", "uc1", lambda: _cnn_spec(128, [24, 48, 96], 100), seed=14,
+             schemes=("fp32", "fp16")),
+    # UC2 — text classification on Emotions (6 classes).
+    ModelDef("bert_s", "uc2", lambda: _bert_spec(2, 128, 64, 1024, 6), seed=21),
+    ModelDef("bert_m", "uc2", lambda: _bert_spec(4, 192, 64, 1024, 6), seed=22),
+    ModelDef("bert_l", "uc2", lambda: _bert_spec(6, 256, 64, 1024, 6), seed=23),
+    # UC3 — scene classification (67 classes) + audio (521 classes).
+    ModelDef("scene_s", "uc3", lambda: _cnn_spec(96, [16, 24, 32], 67), seed=31),
+    ModelDef("scene_m", "uc3", lambda: _cnn_spec(112, [24, 36, 48], 67), seed=32),
+    ModelDef("scene_l", "uc3", lambda: _cnn_spec(128, [32, 48, 64], 67), seed=33),
+    ModelDef("yamnet_lite", "uc3", lambda: _yamnet_spec(), seed=34,
+             schemes=("fp32", "fp16", "dr8")),  # Table 4: YAMNet has no FX8/FFX8
+    # UC4 — facial attributes, batch 4.
+    ModelDef("face_gender", "uc4", lambda: _face_spec(2), seed=41),
+    ModelDef("face_age", "uc4", lambda: _face_spec(1), seed=42),
+    ModelDef("face_eth", "uc4", lambda: _face_spec(5), seed=43),
+]
+
+
+def get(name: str) -> ModelDef:
+    for m in ZOO:
+        if m.name == name:
+            return m
+    raise KeyError(name)

@@ -1,0 +1,280 @@
+"""L2 neural-network primitives, built on the L1 Pallas kernels.
+
+Every matmul-shaped computation (dense layers and im2col-lowered
+convolutions) goes through ``kernels.qmatmul`` so that the Pallas kernel
+is the single compute hot-spot of the whole zoo. Depthwise convolutions
+are executed as grouped ``lax.conv`` in f32 (they are <3% of the FLOPs of
+any zoo model; TFLite quantises them too, a divergence documented in
+DESIGN.md §6).
+
+Weight handling mirrors the TFLite converter: a *transform* step turns the
+raw f32 training parameters into the scheme-specific tensor set (Table 1 of
+the paper) — f16 casts for FP16, symmetric per-channel int8 + scales for
+DR8/FX8/FFX8. The transformed tensors are either baked into the graph as
+constants (eval path) or exposed as graph *parameters* and shipped as an
+``.npz`` next to the HLO (AOT path; the rust runtime uploads them once as
+device buffers — python never runs at serving time).
+
+``Ctx`` dispatches each layer according to the quantisation scheme and
+doubles as the calibration recorder for the static-range schemes
+(FX8/FFX8).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kernels as K
+
+SCHEMES = ("fp32", "fp16", "dr8", "fx8", "ffx8")
+INT8_SCHEMES = ("dr8", "fx8", "ffx8")
+
+# Weight bytes per parameter for each scheme (Table 1: fp16 halves, the
+# int8 schemes quarter the model size).
+BYTES_PER_PARAM = {"fp32": 4.0, "fp16": 2.0, "dr8": 1.0, "fx8": 1.0, "ffx8": 1.0}
+
+
+def init_params(spec, seed: int) -> Dict[str, np.ndarray]:
+    """Deterministic He-style init for a dict of {name: shape}."""
+    rng = np.random.default_rng(seed)
+    params = {}
+    for name, shape in spec.items():
+        if name.endswith("/b"):
+            params[name] = np.zeros(shape, np.float32)
+        else:
+            fan_in = int(np.prod(shape[:-1])) if len(shape) > 1 else shape[0]
+            std = math.sqrt(2.0 / max(fan_in, 1))
+            params[name] = rng.standard_normal(shape).astype(np.float32) * std
+    return params
+
+
+def np_quantize_weights(w: np.ndarray):
+    """Symmetric per-output-channel int8 quantisation (numpy, convert-time).
+
+    w is 2D (K, N); returns (w_q int8 (K, N), scale f32 (N,)).
+    """
+    amax = np.max(np.abs(w), axis=0)
+    scale = np.maximum(amax, 1e-8) / 127.0
+    w_q = np.clip(np.round(w / scale[None, :]), -127, 127).astype(np.int8)
+    return w_q, scale.astype(np.float32)
+
+
+def transform_params(
+    params: Dict[str, np.ndarray], kinds: Dict[str, str], scheme: str
+) -> Dict[str, np.ndarray]:
+    """TFLite-converter step: raw f32 params -> scheme-specific tensor set.
+
+    kinds maps each non-bias parameter to its usage recorded during the
+    calibration pass: 'dense' (matmul weight), 'dw' (depthwise filter),
+    'embed' (lookup table) or 'aux' (affine/positional, stays float).
+    """
+    assert scheme in SCHEMES, scheme
+    tp: Dict[str, np.ndarray] = {}
+    for name, w in params.items():
+        kind = "bias" if name.endswith("/b") else kinds.get(name, "aux")
+        if kind == "dense":
+            w2 = w.reshape(-1, w.shape[-1]).astype(np.float32)
+            if scheme in INT8_SCHEMES:
+                tp[name + "!q"], tp[name + "!s"] = np_quantize_weights(w2)
+            elif scheme == "fp16":
+                tp[name] = w2.astype(np.float16)
+            else:
+                tp[name] = w2
+        elif kind == "dw":
+            # (kh, kw, c, 1) -> HWIO (kh, kw, 1, c); float path always.
+            w4 = np.transpose(w, (0, 1, 3, 2)).astype(np.float32)
+            tp[name] = w4.astype(np.float16) if scheme == "fp16" else w4
+        elif kind == "embed":
+            if scheme in INT8_SCHEMES:
+                amax = max(float(np.max(np.abs(w))), 1e-8)
+                scale = amax / 127.0
+                tp[name + "!q"] = np.clip(np.round(w / scale), -127, 127).astype(np.int8)
+                tp[name + "!s"] = np.array([scale], np.float32)
+            elif scheme == "fp16":
+                tp[name] = w.astype(np.float16)
+            else:
+                tp[name] = w.astype(np.float32)
+        else:  # bias / aux — always f32
+            tp[name] = w.astype(np.float32)
+    return tp
+
+
+class Ctx:
+    """Scheme-dispatching layer context.
+
+    tp:     transformed parameter dict (np arrays for the baked path, or
+            traced jax arrays for the AOT-parameterised path). In record
+            mode this is the *raw* f32 param dict instead.
+    calib:  {dense layer name: activation absmax} from a calibration pass,
+            used by fx8/ffx8 static quantisation.
+    record: when not None, runs the fp32 path recording each dense layer's
+            input absmax into ``record`` and parameter usage kinds into
+            ``kinds`` (calibration mode).
+    """
+
+    def __init__(
+        self,
+        tp: Dict[str, np.ndarray],
+        scheme: str,
+        calib: Optional[Dict[str, float]] = None,
+        record: Optional[Dict[str, float]] = None,
+        kinds: Optional[Dict[str, str]] = None,
+    ):
+        assert scheme in SCHEMES, scheme
+        self.tp = tp
+        self.recording = record is not None
+        self.scheme = "fp32" if self.recording else scheme
+        self.calib = calib or {}
+        self.record = record
+        self.kinds = kinds if kinds is not None else {}
+
+    # -- parameter access ---------------------------------------------------
+
+    def _get(self, name: str):
+        v = self.tp[name]
+        v = jnp.asarray(v)
+        if v.dtype == jnp.float16:
+            # FP16 scheme: weights stored half precision, dequantised to f32
+            # before first use (Table 1 CPU-fallback path).
+            v = v.astype(jnp.float32)
+        return v
+
+    def _b(self, name: str):
+        key = name + "/b"
+        return self._get(key) if key in self.tp else None
+
+    def aux(self, name: str):
+        """Float auxiliary parameter (positional embeddings etc.)."""
+        if self.recording:
+            self.kinds.setdefault(name, "aux")
+        return self._get(name)
+
+    # -- layers ---------------------------------------------------------------
+
+    def dense(self, x, name: str, act: Optional[str] = None):
+        """(M, K) @ W (K, N) + bias, through the Pallas kernel."""
+        if self.recording:
+            self.kinds[name] = "dense"
+            self.record[name] = max(
+                self.record.get(name, 0.0), float(jnp.max(jnp.abs(x)))
+            )
+            w = jnp.asarray(self.tp[name].reshape(-1, self.tp[name].shape[-1]))
+            out = K.dense_f32(x, w, self._b(name))
+        elif self.scheme in ("fp32", "fp16"):
+            out = K.dense_f32(x, self._get(name), self._b(name))
+        elif self.scheme == "dr8":
+            out = K.dense_dr8(x, self._get(name + "!q"), self._get(name + "!s"),
+                              self._b(name))
+        else:  # fx8 / ffx8
+            x_scale = self.calib.get(name, 1.0) / 127.0
+            out = K.dense_fx8(x, self._get(name + "!q"), self._get(name + "!s"),
+                              x_scale, self._b(name))
+        return _activate(out, act)
+
+    def conv2d(self, x, name: str, stride: int = 1, act: Optional[str] = None):
+        """NHWC conv via im2col + the dense path (same quant dispatch).
+
+        The raw parameter has shape (kh, kw, cin, cout); transform flattens
+        it to (kh*kw*cin, cout), matching the patch feature order below.
+        """
+        n, h, w_, cin = x.shape
+        if self.recording:
+            kh, kw, _, cout = self.tp[name].shape
+        else:
+            key = name + "!q" if self.scheme in INT8_SCHEMES else name
+            kdim, cout = self.tp[key].shape
+            kk = kdim // cin
+            kh = kw = int(math.isqrt(kk))
+        pad = ((kh - 1) // 2, kh // 2), ((kw - 1) // 2, kw // 2)
+        patches = jax.lax.conv_general_dilated_patches(
+            x,
+            filter_shape=(kh, kw),
+            window_strides=(stride, stride),
+            padding=pad,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        oh, ow = patches.shape[1], patches.shape[2]
+        # conv_general_dilated_patches yields channel-major (C, kh, kw)
+        # feature order; permute to (kh, kw, C) to match HWIO weights.
+        patches = patches.reshape(n, oh, ow, cin, kh * kw)
+        patches = jnp.moveaxis(patches, 3, 4).reshape(n * oh * ow, kh * kw * cin)
+        out = self.dense(patches, name, act=None)
+        out = out.reshape(n, oh, ow, cout)
+        return _activate(out, act)
+
+    def depthwise(self, x, name: str, stride: int = 1, act: Optional[str] = None):
+        """Depthwise 3x3 conv, f32 path (grouped lax.conv)."""
+        if self.recording:
+            self.kinds[name] = "dw"
+            wdw = jnp.transpose(jnp.asarray(self.tp[name]), (0, 1, 3, 2))
+        else:
+            wdw = self._get(name)  # already HWIO from transform
+        kh = wdw.shape[0]
+        out = jax.lax.conv_general_dilated(
+            x.astype(jnp.float32),
+            wdw,
+            window_strides=(stride, stride),
+            padding=[((kh - 1) // 2, kh // 2)] * 2,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=x.shape[-1],
+        )
+        b = self._b(name)
+        if b is not None:
+            out = out + b
+        return _activate(out, act)
+
+    def embed(self, ids, name: str):
+        """Token embedding lookup; int8 table for the quantised schemes."""
+        if self.recording:
+            self.kinds[name] = "embed"
+            return jnp.take(jnp.asarray(self.tp[name]), ids, axis=0)
+        if self.scheme in INT8_SCHEMES:
+            t_q = self._get(name + "!q")
+            scale = self._get(name + "!s")[0]
+            return jnp.take(t_q, ids, axis=0).astype(jnp.float32) * scale
+        return jnp.take(self._get(name), ids, axis=0)
+
+    def affine(self, x, name: str):
+        """Folded batch-norm (inference-time affine): x * g + b."""
+        if self.recording:
+            self.kinds.setdefault(name + "/g", "aux")
+            self.kinds.setdefault(name + "/bb", "aux")
+        return x * self._get(name + "/g") + self._get(name + "/bb")
+
+
+def _activate(x, act: Optional[str]):
+    if act is None:
+        return x
+    if act == "relu":
+        return jax.nn.relu(x)
+    if act == "relu6":
+        return jnp.clip(x, 0.0, 6.0)
+    if act == "gelu":
+        return jax.nn.gelu(x)
+    if act == "tanh":
+        return jnp.tanh(x)
+    raise ValueError(act)
+
+
+def attention(ctx: Ctx, x, prefix: str, num_heads: int):
+    """Multi-head self-attention block; QKV/out projections go through the
+    Pallas dense path, the softmax core stays f32 (as in TFLite)."""
+    s, h = x.shape
+    dh = h // num_heads
+    q = ctx.dense(x, f"{prefix}/q").reshape(s, num_heads, dh)
+    k = ctx.dense(x, f"{prefix}/k").reshape(s, num_heads, dh)
+    v = ctx.dense(x, f"{prefix}/v").reshape(s, num_heads, dh)
+    att = jnp.einsum("qhd,khd->hqk", q, k) / math.sqrt(dh)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("hqk,khd->qhd", att, v).reshape(s, h)
+    return ctx.dense(out, f"{prefix}/o")
+
+
+def avg_pool_all(x):
+    """Global average pool NHWC -> NC."""
+    return jnp.mean(x, axis=(1, 2))

@@ -1,0 +1,95 @@
+"""AOT export tests: HLO text integrity (no elided constants), manifest
+schema, and jit-vs-eager numeric agreement for an exported model."""
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+
+@pytest.fixture(scope="module")
+def export_cnn_s(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    md = M.get("cnn_s")
+    calib = md.calibrate(num_batches=1)
+    entries = [
+        aot.export_one(md, scheme, str(out), calib, check=True)
+        for scheme in ("fp32", "ffx8")
+    ]
+    return out, entries
+
+
+def test_hlo_has_no_elided_constants(export_cnn_s):
+    out, entries = export_cnn_s
+    for e in entries:
+        text = (out / e["file"]).read_text()
+        assert "constant({...})" not in text, "weights were elided from HLO text"
+        assert text.startswith("HloModule")
+
+
+def test_manifest_entry_schema(export_cnn_s):
+    out, entries = export_cnn_s
+    e = entries[0]
+    for key in ("file", "weights", "weight_keys", "model", "task", "scheme",
+                "input", "outputs", "params", "flops", "weight_bytes",
+                "hlo_bytes"):
+        assert key in e
+    assert e["input"]["shape"] == [1, 96, 96, 3]
+    assert e["weight_bytes"] == e["params"] * 4  # fp32
+    assert (out / e["weights"]).exists()
+
+
+def test_weight_keys_sorted_and_match_npz(export_cnn_s):
+    out, entries = export_cnn_s
+    for e in entries:
+        assert e["weight_keys"] == sorted(e["weight_keys"])
+        npz = np.load(out / e["weights"])
+        assert sorted(npz.files) == e["weight_keys"]
+
+
+def test_ffx8_manifest_int8_io(export_cnn_s):
+    _, entries = export_cnn_s
+    e = next(x for x in entries if x["scheme"] == "ffx8")
+    assert e["input"]["dtype"] == "int8"
+    assert e["outputs"][0]["dtype"] == "int8"
+    assert e["input_scale"] is not None and e["input_scale"] > 0
+    # int8 weights + small f32 scales/biases: ~4x reduction vs fp32
+    fp32 = next(x for x in entries if x["scheme"] == "fp32")
+    assert e["weight_bytes"] < fp32["weight_bytes"] / 2.5
+
+
+def test_entry_layout_declared(export_cnn_s):
+    out, entries = export_cnn_s
+    text = (out / entries[0]["file"]).read_text()
+    assert "entry_computation_layout" in text
+
+
+def test_jit_matches_eager():
+    md = M.get("cnn_s")
+    run, example, _ = md.fn("fp32")
+    x = np.random.default_rng(0).standard_normal(example.shape).astype(np.float32)
+    eager = np.asarray(run(x)[0])
+    jitted = np.asarray(jax.jit(run)(x)[0])
+    np.testing.assert_allclose(jitted, eager, rtol=1e-4, atol=1e-4)
+
+
+def test_repo_manifest_consistent_if_built():
+    """If `make artifacts` has run, the manifest must match the files."""
+    art = Path(__file__).resolve().parents[2] / "artifacts"
+    man = art / "manifest.json"
+    if not man.exists():
+        pytest.skip("artifacts not built")
+    entries = json.loads(man.read_text())
+    assert entries, "empty manifest"
+    for e in entries:
+        f = art / e["file"]
+        assert f.exists(), f"missing artifact {e['file']}"
+        assert f.stat().st_size == e["hlo_bytes"]
+        assert e["scheme"] in ("fp32", "fp16", "dr8", "fx8", "ffx8")

@@ -1,0 +1,142 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes and dtypes; the integer path must match the
+oracle exactly, the float path to tight tolerance.
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import compile.kernels.qmatmul as K
+from compile.kernels import ref as R
+
+dims = st.integers(min_value=1, max_value=200)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_matmul_f32_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    got = np.asarray(K.matmul_f32(jnp.asarray(x), jnp.asarray(w)))
+    ref = np.asarray(R.matmul_f32_ref(jnp.asarray(x), jnp.asarray(w)))
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_matmul_int8_exact(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-127, 128, (m, k)).astype(np.int8)
+    w = rng.integers(-127, 128, (k, n)).astype(np.int8)
+    got = np.asarray(K.matmul_int8(jnp.asarray(x), jnp.asarray(w)))
+    ref = x.astype(np.int32) @ w.astype(np.int32)
+    assert got.dtype == np.int32
+    np.testing.assert_array_equal(got, ref)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_qmatmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-127, 128, (m, k)).astype(np.int8)
+    w = rng.integers(-127, 128, (k, n)).astype(np.int8)
+    xs = np.float32(rng.uniform(0.001, 0.1))
+    ws = rng.uniform(0.001, 0.1, n).astype(np.float32)
+    got = np.asarray(K.qmatmul(jnp.asarray(x), jnp.asarray(w), xs, jnp.asarray(ws)))
+    ref = np.asarray(R.qmatmul_ref(jnp.asarray(x), jnp.asarray(w), xs, ws))
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,k,n", [(1, 1, 1), (1, 1536, 1), (128, 128, 128),
+                                   (129, 64, 257), (7, 3, 5), (200, 200, 200)])
+def test_matmul_edge_shapes(m, k, n):
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    got = np.asarray(K.matmul_f32(jnp.asarray(x), jnp.asarray(w)))
+    np.testing.assert_allclose(got, x @ w, rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_quantize_weights_roundtrip(k, n, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    w_q, scale = K.quantize_weights(jnp.asarray(w))
+    w_q, scale = np.asarray(w_q), np.asarray(scale)
+    assert w_q.dtype == np.int8 and scale.shape == (n,)
+    assert np.all(np.abs(w_q) <= 127)
+    # dequantised weights within half an lsb per channel
+    err = np.abs(w_q.astype(np.float32) * scale[None, :] - w)
+    assert np.all(err <= scale[None, :] * 0.5 + 1e-6)
+    # matches the oracle exactly
+    wq_r, s_r = R.quantize_weights_ref(jnp.asarray(w))
+    np.testing.assert_array_equal(w_q, np.asarray(wq_r))
+    np.testing.assert_allclose(scale, np.asarray(s_r), rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=dims, k=dims, seed=st.integers(0, 2**31 - 1))
+def test_quantize_dynamic_bounds(m, k, seed):
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((m, k)) * rng.uniform(0.01, 100)).astype(np.float32)
+    x_q, scale = K.quantize_dynamic(jnp.asarray(x))
+    x_q, scale = np.asarray(x_q), float(scale)
+    assert x_q.dtype == np.int8
+    assert np.max(np.abs(x_q)) <= 127
+    np.testing.assert_allclose(
+        x_q.astype(np.float32) * scale, x, atol=scale * 0.5 + 1e-6
+    )
+
+
+def test_dense_dr8_close_to_f32():
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((16, 64)).astype(np.float32)
+    w = rng.standard_normal((64, 32)).astype(np.float32)
+    b = rng.standard_normal((32,)).astype(np.float32)
+    w_q, w_s = K.quantize_weights(jnp.asarray(w))
+    got = np.asarray(K.dense_dr8(jnp.asarray(x), w_q, w_s, jnp.asarray(b)))
+    ref = x @ w + b
+    # int8 x int8 quantisation noise: relative error ~1%
+    assert np.mean(np.abs(got - ref)) / np.mean(np.abs(ref)) < 0.05
+
+
+def test_dense_fx8_close_to_f32():
+    rng = np.random.default_rng(4)
+    x = rng.standard_normal((16, 64)).astype(np.float32)
+    w = rng.standard_normal((64, 32)).astype(np.float32)
+    w_q, w_s = K.quantize_weights(jnp.asarray(w))
+    x_scale = float(np.abs(x).max()) / 127.0
+    got = np.asarray(K.dense_fx8(jnp.asarray(x), w_q, w_s, x_scale))
+    ref = x @ w
+    assert np.mean(np.abs(got - ref)) / np.mean(np.abs(ref)) < 0.05
+
+
+def test_quantize_static_saturates():
+    x = jnp.asarray(np.array([[1000.0, -1000.0, 0.0, 0.5]], np.float32))
+    x_q = np.asarray(K.quantize_static(x, 1.0))
+    np.testing.assert_array_equal(x_q[0], np.array([127, -127, 0, 0], np.int8))
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_qmatmul_fused_matches_unfused(m, k, n, seed):
+    """Perf-pass L1 iteration: the fused dequant-epilogue kernel must be
+    numerically identical to the unfused (matmul_int8 + XLA epilogue)."""
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-127, 128, (m, k)).astype(np.int8)
+    w = rng.integers(-127, 128, (k, n)).astype(np.int8)
+    xs = np.float32(rng.uniform(0.001, 0.1))
+    ws = rng.uniform(0.001, 0.1, n).astype(np.float32)
+    fused = np.asarray(K.qmatmul_fused(jnp.asarray(x), jnp.asarray(w), xs, jnp.asarray(ws)))
+    ref = np.asarray(R.qmatmul_ref(jnp.asarray(x), jnp.asarray(w), xs, ws))
+    np.testing.assert_allclose(fused, ref, rtol=1e-5, atol=1e-6)

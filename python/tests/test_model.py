@@ -1,0 +1,134 @@
+"""Model-zoo tests: shapes, scheme agreement, determinism, calibration."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import nn
+
+
+def _input_for(md, scheme, seed=0):
+    ex = md.example_input()
+    rng = np.random.default_rng(seed)
+    if ex.dtype == np.int32:
+        return rng.integers(0, 1024, ex.shape).astype(np.int32)
+    if scheme == "ffx8":
+        return rng.integers(-100, 100, ex.shape).astype(np.int8)
+    return rng.standard_normal(ex.shape).astype(np.float32)
+
+
+def test_zoo_complete():
+    names = {m.name for m in M.ZOO}
+    assert len(names) == len(M.ZOO), "duplicate model names"
+    tasks = {m.task for m in M.ZOO}
+    assert tasks == {"uc1", "uc2", "uc3", "uc4"}
+
+
+@pytest.mark.parametrize("name", ["cnn_s", "bert_s", "yamnet_lite", "face_gender"])
+def test_output_shapes_all_schemes(name):
+    md = M.get(name)
+    calib = md.calibrate(num_batches=1) if any(
+        s in md.schemes for s in ("fx8", "ffx8")) else None
+    shapes = set()
+    for scheme in md.schemes:
+        run, _, _ = md.fn(scheme, calib=calib)
+        out = run(jnp.asarray(_input_for(md, scheme)))
+        assert len(out) == 1
+        shapes.add(out[0].shape)
+        if scheme == "ffx8":
+            assert out[0].dtype == jnp.int8
+        else:
+            assert out[0].dtype == jnp.float32
+    assert len(shapes) == 1, "schemes must agree on logits shape"
+
+
+@pytest.mark.parametrize("name,classes", [("cnn_s", 100), ("bert_s", 6),
+                                          ("scene_s", 67), ("yamnet_lite", 521),
+                                          ("face_eth", 5)])
+def test_class_counts(name, classes):
+    md = M.get(name)
+    run, _, _ = md.fn("fp32")
+    out = run(jnp.asarray(_input_for(md, "fp32")))
+    assert out[0].shape[-1] == classes
+
+
+def test_face_models_batch4():
+    for name in ("face_gender", "face_age", "face_eth"):
+        md = M.get(name)
+        assert md.example_input().shape[0] == 4
+
+
+@pytest.mark.parametrize("name", ["cnn_s", "bert_s"])
+def test_quantised_schemes_track_fp32(name):
+    """Top-1 agreement between fp32 and each quantised variant: quantised
+    logits must correlate strongly (the accuracy-preservation premise of
+    Table 2-5)."""
+    md = M.get(name)
+    calib = md.calibrate(num_batches=2)
+    ref_run, _, _ = md.fn("fp32")
+    for scheme in ("fp16", "dr8", "fx8"):
+        if scheme not in md.schemes:
+            continue
+        run, _, _ = md.fn(scheme, calib=calib)
+        agree = 0
+        for seed in range(5):
+            x = _input_for(md, scheme, seed)
+            ref = np.asarray(ref_run(jnp.asarray(x))[0])
+            got = np.asarray(run(jnp.asarray(x))[0])
+            agree += int(np.argmax(ref) == np.argmax(got))
+        assert agree >= 4, f"{name}/{scheme}: top-1 agreement {agree}/5"
+
+
+def test_ffx8_logits_order_preserved():
+    md = M.get("cnn_s")
+    calib = md.calibrate(num_batches=2)
+    ref_run, _, _ = md.fn("fp32")
+    run, _, in_scale = md.fn("ffx8", calib=calib)
+    agree = 0
+    for seed in range(5):
+        xf = _input_for(md, "fp32", seed)
+        ref = np.asarray(ref_run(jnp.asarray(xf))[0])
+        # quantise the same input with the baked-in input scale
+        xq = np.clip(np.round(xf / in_scale), -127, 127).astype(np.int8)
+        got = np.asarray(run(jnp.asarray(xq))[0])
+        agree += int(np.argmax(ref) == np.argmax(got))
+    assert agree >= 4
+
+
+def test_model_deterministic():
+    md = M.get("cnn_s")
+    run, _, _ = md.fn("fp32")
+    x = jnp.asarray(_input_for(md, "fp32", 9))
+    a = np.asarray(run(x)[0])
+    b = np.asarray(run(x)[0])
+    np.testing.assert_array_equal(a, b)
+
+
+def test_calibration_nonempty_and_positive():
+    md = M.get("cnn_s")
+    calib, kinds = md.calibrate(num_batches=1)
+    assert calib
+    assert all(v > 0 for v in calib.values())
+    assert set(kinds.values()) <= {"dense", "dw", "embed", "aux"}
+
+
+def test_params_and_flops_ordering():
+    """Bigger family members must cost more (drives the MOO trade-off)."""
+    for fam in (("cnn_s", "cnn_m", "cnn_l"), ("bert_s", "bert_m", "bert_l"),
+                ("scene_s", "scene_m", "scene_l")):
+        sizes = [M.get(n).num_params for n in fam]
+        flops = [M.get(n).flops for n in fam]
+        assert sizes == sorted(sizes)
+        assert flops == sorted(flops)
+
+
+def test_bytes_per_param_table1():
+    assert nn.BYTES_PER_PARAM["fp32"] / nn.BYTES_PER_PARAM["fp16"] == 2.0
+    for s in ("dr8", "fx8", "ffx8"):
+        assert nn.BYTES_PER_PARAM["fp32"] / nn.BYTES_PER_PARAM[s] == 4.0

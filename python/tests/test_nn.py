@@ -1,0 +1,162 @@
+"""L2 layer-level tests: Ctx scheme dispatch, conv-as-im2col vs lax.conv,
+attention, calibration recording."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import nn
+from compile.nn import Ctx
+
+
+def _params(spec, seed=0):
+    return nn.init_params(spec, seed)
+
+
+class TestDense:
+    spec = {"d": (32, 16), "d/b": (16,)}
+
+    def _x(self):
+        return jnp.asarray(np.random.default_rng(1).standard_normal((8, 32)), jnp.float32)
+
+    def test_fp32(self):
+        p = _params(self.spec)
+        out = Ctx(p, "fp32").dense(self._x(), "d")
+        ref = np.asarray(self._x()) @ p["d"] + p["d/b"]
+        np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-5, atol=1e-5)
+
+    def test_fp16_quantisation_error_bounded(self):
+        p = _params(self.spec)
+        out32 = Ctx(p, "fp32").dense(self._x(), "d")
+        tp16 = nn.transform_params(p, {"d": "dense"}, "fp16")
+        out16 = Ctx(tp16, "fp16").dense(self._x(), "d")
+        err = np.abs(np.asarray(out32) - np.asarray(out16))
+        assert err.max() < 0.05  # fp16 weight rounding only
+        assert err.max() > 0.0  # but it *is* a different graph
+
+    @pytest.mark.parametrize("scheme", ["dr8", "fx8", "ffx8"])
+    def test_int8_schemes_close(self, scheme):
+        p = _params(self.spec)
+        x = self._x()
+        calib = {"d": float(jnp.max(jnp.abs(x)))}
+        kinds = {"d": "dense"}
+        out32 = np.asarray(Ctx(nn.transform_params(p, kinds, "fp32"), "fp32").dense(x, "d"))
+        tp = nn.transform_params(p, kinds, scheme)
+        outq = np.asarray(Ctx(tp, scheme, calib=calib).dense(x, "d"))
+        rel = np.mean(np.abs(outq - out32)) / np.mean(np.abs(out32))
+        assert rel < 0.05, rel
+
+    def test_record_mode_captures_absmax(self):
+        p = _params(self.spec)
+        rec = {}
+        x = self._x()
+        Ctx(p, "ffx8", record=rec).dense(x, "d")
+        assert rec["d"] == pytest.approx(float(jnp.max(jnp.abs(x))))
+
+    def test_record_mode_takes_running_max(self):
+        p = _params(self.spec)
+        rec = {"d": 1e9}
+        Ctx(p, "fp32", record=rec).dense(self._x(), "d")
+        assert rec["d"] == 1e9
+
+    def test_activations(self):
+        p = _params(self.spec)
+        out = Ctx(p, "fp32").dense(self._x(), "d", act="relu6")
+        o = np.asarray(out)
+        assert o.min() >= 0.0 and o.max() <= 6.0
+
+
+class TestConv:
+    def test_conv2d_matches_lax_conv(self):
+        rng = np.random.default_rng(2)
+        p = {"c": rng.standard_normal((3, 3, 4, 8)).astype(np.float32) * 0.1,
+             "c/b": np.zeros((8,), np.float32)}
+        x = jnp.asarray(rng.standard_normal((2, 9, 9, 4)), jnp.float32)
+        tp = nn.transform_params(p, {"c": "dense"}, "fp32")
+        for stride in (1, 2):
+            got = Ctx(tp, "fp32").conv2d(x, "c", stride=stride)
+            ref = jax.lax.conv_general_dilated(
+                x, jnp.asarray(p["c"]), (stride, stride),
+                padding=[(1, 1), (1, 1)],
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            )
+            np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                       rtol=1e-4, atol=1e-4)
+
+    def test_conv2d_even_kernel_shape(self):
+        rng = np.random.default_rng(3)
+        p = {"c": rng.standard_normal((1, 1, 4, 6)).astype(np.float32),
+             "c/b": np.zeros((6,), np.float32)}
+        x = jnp.asarray(rng.standard_normal((1, 5, 5, 4)), jnp.float32)
+        tp = nn.transform_params(p, {"c": "dense"}, "fp32")
+        out = Ctx(tp, "fp32").conv2d(x, "c")
+        assert out.shape == (1, 5, 5, 6)
+
+    def test_depthwise_shape_and_grouping(self):
+        rng = np.random.default_rng(4)
+        c = 6
+        p = {"d": rng.standard_normal((3, 3, c, 1)).astype(np.float32),
+             "d/b": np.zeros((c,), np.float32)}
+        x = np.zeros((1, 8, 8, c), np.float32)
+        x[0, :, :, 2] = 1.0  # only channel 2 lit
+        tp = nn.transform_params(p, {"d": "dw"}, "fp32")
+        out = np.asarray(Ctx(tp, "fp32").depthwise(jnp.asarray(x), "d"))
+        assert out.shape == (1, 8, 8, c)
+        # depthwise: output channel j depends only on input channel j
+        for j in range(c):
+            if j != 2:
+                np.testing.assert_allclose(out[..., j], 0.0, atol=1e-6)
+
+
+class TestEmbed:
+    def test_embed_fp32_is_table_lookup(self):
+        rng = np.random.default_rng(5)
+        p = {"e": rng.standard_normal((10, 4)).astype(np.float32)}
+        ids = jnp.asarray(np.array([3, 1, 3], np.int32))
+        tp = nn.transform_params(p, {"e": "embed"}, "fp32")
+        out = np.asarray(Ctx(tp, "fp32").embed(ids, "e"))
+        np.testing.assert_allclose(out, p["e"][[3, 1, 3]])
+
+    def test_embed_int8_close(self):
+        rng = np.random.default_rng(6)
+        p = {"e": rng.standard_normal((100, 32)).astype(np.float32)}
+        ids = jnp.asarray(np.arange(50, dtype=np.int32))
+        ref = np.asarray(Ctx(nn.transform_params(p, {"e": "embed"}, "fp32"), "fp32").embed(ids, "e"))
+        got = np.asarray(Ctx(nn.transform_params(p, {"e": "embed"}, "dr8"), "dr8").embed(ids, "e"))
+        assert np.mean(np.abs(got - ref)) < 0.02
+
+
+class TestAttention:
+    def test_shapes_and_softmax_rows(self):
+        h, s, heads = 32, 12, 4
+        spec = {}
+        for nm in ("q", "k", "v", "o"):
+            spec[f"a/{nm}"] = (h, h)
+            spec[f"a/{nm}/b"] = (h,)
+        p = _params(spec, 7)
+        x = jnp.asarray(np.random.default_rng(8).standard_normal((s, h)), jnp.float32)
+        out = nn.attention(Ctx(p, "fp32"), x, "a", heads)
+        assert out.shape == (s, h)
+        assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_affine():
+    p = {"n/g": np.full((4,), 2.0, np.float32), "n/bb": np.ones((4,), np.float32)}
+    x = jnp.ones((3, 4))
+    out = np.asarray(Ctx(p, "fp32").affine(x, "n"))
+    np.testing.assert_allclose(out, 3.0)
+
+
+def test_init_params_deterministic():
+    spec = {"w": (8, 8), "w/b": (8,)}
+    a, b = nn.init_params(spec, 42), nn.init_params(spec, 42)
+    np.testing.assert_array_equal(a["w"], b["w"])
+    c = nn.init_params(spec, 43)
+    assert not np.array_equal(a["w"], c["w"])
+    np.testing.assert_array_equal(a["w/b"], 0.0)

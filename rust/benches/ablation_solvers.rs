@@ -1,0 +1,96 @@
+//! Ablation study (DESIGN.md §8 design choices): RASS vs the alternatives
+//! it replaces —
+//!
+//! * **NSGA-II** (the conventional evolutionary MOO solver §4.3 argues
+//!   against re-running at runtime): front quality vs solve cost;
+//! * **OODIn weighted sum**: single-solution quality + per-event re-solve;
+//! * **predictor-backed profiling** (§8): solve quality when only 30% of
+//!   the space is profiled and the rest is predicted.
+
+use std::time::Instant;
+
+use carin::config;
+use carin::device::profiles;
+use carin::moo::{baselines, nsga2, rass, Problem};
+use carin::profiler::predictor;
+use carin::zoo::Registry;
+
+fn main() {
+    let reg = Registry::paper();
+    println!("=== solver ablation (UC1/UC3 x devices) ===");
+    println!(
+        "{:24} {:>12} {:>12} {:>14} {:>10}",
+        "problem", "RASS ms", "NSGA-II ms", "OODIn ms", "d0 on GA front?"
+    );
+    for (uc, devname) in [("uc1", "s20"), ("uc1", "a71"), ("uc3", "a71"), ("uc2", "p7")] {
+        let dev = profiles::by_name(devname).unwrap();
+        let p = config::use_case(uc, &reg, &dev).unwrap();
+
+        let t0 = Instant::now();
+        let sol = rass::solve(&p);
+        let rass_ms = t0.elapsed().as_secs_f64() * 1000.0;
+
+        let t0 = Instant::now();
+        let front = nsga2::solve(
+            &p,
+            &nsga2::Nsga2Params { population: 48, generations: 25, ..Default::default() },
+        );
+        let ga_ms = t0.elapsed().as_secs_f64() * 1000.0;
+
+        let t0 = Instant::now();
+        let _ = baselines::oodin(&p);
+        let oodin_ms = t0.elapsed().as_secs_f64() * 1000.0;
+
+        // is d0 undominated w.r.t. the GA front?
+        let higher: Vec<bool> =
+            p.objectives.iter().map(|o| o.metric.higher_is_better()).collect();
+        let v0 = p.objective_vector(&sol.designs[0].config);
+        let dominated = front
+            .iter()
+            .map(|c| p.objective_vector(c))
+            .filter(|v| carin::moo::pareto::dominates(v, &v0, &higher))
+            .count();
+        println!(
+            "{:24} {:>12.2} {:>12.2} {:>14.3} {:>10}",
+            format!("{uc}/{}", dev.name),
+            rass_ms,
+            ga_ms,
+            oodin_ms,
+            if dominated == 0 { "yes" } else { "near" }
+        );
+    }
+
+    println!("\n=== profiling-cost ablation: full vs 30%-profiled + predictor ===");
+    println!(
+        "{:24} {:>10} {:>10} {:>14} {:>14}",
+        "problem", "full |pts|", "profiled", "full d0 opt", "pred d0 true-opt"
+    );
+    for (uc, devname) in [("uc1", "s20"), ("uc2", "a71")] {
+        let dev = profiles::by_name(devname).unwrap();
+        let full = config::use_case(uc, &reg, &dev).unwrap();
+        let full_sol = rass::solve(&full);
+        let (cache, n_train) = predictor::predicted_cache(&reg, &dev, &full.space, 0.3, 11);
+        let total = cache.len();
+        let approx = Problem {
+            name: format!("{uc}-pred"),
+            tasks: full.tasks.clone(),
+            device: full.device.clone(),
+            registry: full.registry.clone(),
+            objectives: full.objectives.clone(),
+            constraints: full.constraints.clone(),
+            space: full.space.clone(),
+            cache,
+        };
+        let approx_sol = rass::solve(&approx);
+        let true_opt =
+            baselines::optimality_of(&full, &approx_sol.designs[0].config);
+        println!(
+            "{:24} {:>10} {:>10} {:>14.3} {:>14.3}",
+            format!("{uc}/{}", dev.name),
+            total,
+            n_train,
+            full_sol.designs[0].optimality,
+            true_opt
+        );
+    }
+}

@@ -1,0 +1,89 @@
+//! End-to-end PJRT serving benchmark (headline metric): real inference
+//! latency and throughput of the design-set artifacts on the CPU PJRT
+//! client — load/compile cost, per-variant steady-state latency across
+//! quantisation schemes, and batched serving throughput.
+//!
+//! Skips gracefully when `make artifacts` has not been run.
+
+use std::sync::mpsc;
+
+use carin::config;
+use carin::coordinator::ServingCoordinator;
+use carin::device::profiles;
+use carin::moo::rass;
+use carin::runtime::engine::{zero_input, InferenceEngine};
+use carin::runtime::load_manifest;
+use carin::util::Summary;
+use carin::workload;
+use carin::zoo::Registry;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts not built; run `make artifacts` first");
+        return Ok(());
+    }
+    let manifest = load_manifest(dir)?;
+    let mut engine = InferenceEngine::cpu()?;
+
+    println!("=== per-variant steady-state latency (PJRT CPU, 5 warmup + 50 runs) ===");
+    println!(
+        "{:28} {:>10} {:>10} {:>10} {:>12}",
+        "artifact", "mean ms", "p95 ms", "min ms", "load ms"
+    );
+    // cover the scheme spectrum on two model families
+    for stem in [
+        "cnn_s_fp32", "cnn_s_fp16", "cnn_s_dr8", "cnn_s_fx8", "cnn_s_ffx8",
+        "cnn_l_fp32", "cnn_l_ffx8",
+        "bert_s_fp32", "bert_s_ffx8",
+        "face_gender_ffx8", "yamnet_lite_fp32", "scene_m_fx8",
+    ] {
+        let Some(meta) = manifest.iter().find(|m| m.stem == stem) else { continue };
+        engine.load(meta)?;
+        let load_ms = engine.loaded().iter().find(|m| m.meta.stem == stem).unwrap().load_time_ms;
+        let lat = engine.measure(stem, &zero_input(meta), 5, 50)?;
+        let s = Summary::of(&lat);
+        println!(
+            "{:28} {:>10.3} {:>10.3} {:>10.3} {:>12.1}",
+            stem,
+            s.mean,
+            s.percentile(95.0),
+            s.min,
+            load_ms
+        );
+    }
+
+    println!("\n=== batched serving throughput (design set per use case) ===");
+    let reg = Registry::paper();
+    for uc in ["uc1", "uc3", "uc4"] {
+        let dev = profiles::by_name("s20").unwrap();
+        let p = config::use_case(uc, &reg, &dev).unwrap();
+        let sol = rass::solve(&p);
+        let mut coord = ServingCoordinator::new(&reg, &sol, manifest.clone())?;
+        let (tx, rx) = mpsc::channel();
+        let producers =
+            workload::spawn_producers(workload::for_use_case(uc, 160), tx, 9, 0.0);
+        let report = coord.serve(rx)?;
+        for h in producers {
+            let _ = h.join();
+        }
+        println!(
+            "{:4}: {:4} reqs in {:6.2} s = {:7.1} req/s  (models resident: {})",
+            uc,
+            report.total_requests,
+            report.wall_s,
+            report.throughput_rps,
+            coord.loaded_models()
+        );
+        for t in &report.tasks {
+            println!(
+                "      task {} [{:18}] exec mean {:7.3} ms  p95 {:7.3} ms",
+                t.task,
+                t.artifact,
+                t.latency_ms.mean,
+                t.latency_ms.percentile(95.0)
+            );
+        }
+    }
+    Ok(())
+}

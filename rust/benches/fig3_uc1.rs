@@ -1,0 +1,39 @@
+//! Figure 3 reproduction: UC1 (real-time image classification) optimality
+//! of CARIn vs B-A / B-S / transferred / OODIn per device and processor
+//! state, plus the §7.1.2 takeaway ratios and solve-cost timings.
+
+use carin::bench::Bencher;
+use carin::harness::figures;
+use carin::moo::rass;
+use carin::zoo::Registry;
+
+fn main() {
+    let reg = Registry::paper();
+    println!("=== Figure 3: UC1 optimality per device/state ===");
+    let rows = figures::figure_single("uc1", &reg);
+    println!("{}", figures::render(&rows));
+    for m in ["B-A", "B-S", "OODIn"] {
+        if let Some((avg, max)) = figures::gain_over(&rows, m) {
+            println!("CARIn gain over {m}: avg {avg:.2}x, max {max:.2}x");
+        }
+    }
+    // transferred baselines aggregated
+    let mut t_ratios = Vec::new();
+    for m in ["T_Pixel 7", "T_Galaxy S20 FE", "T_Galaxy A71"] {
+        if let Some((avg, max)) = figures::gain_over(&rows, m) {
+            t_ratios.push((avg, max));
+        }
+    }
+    if !t_ratios.is_empty() {
+        let avg = t_ratios.iter().map(|r| r.0).sum::<f64>() / t_ratios.len() as f64;
+        let max = t_ratios.iter().map(|r| r.1).fold(f64::MIN, f64::max);
+        println!("CARIn gain over transferred: avg {avg:.2}x, max {max:.2}x");
+    }
+
+    println!("\n=== solve cost (per device) ===");
+    let b = Bencher::quick();
+    for dev in carin::device::profiles::all() {
+        let p = carin::config::use_case("uc1", &reg, &dev).unwrap();
+        b.run(&format!("rass_solve/uc1/{}", dev.name), || rass::solve(&p));
+    }
+}

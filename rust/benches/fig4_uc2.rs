@@ -1,0 +1,25 @@
+//! Figure 4 reproduction: UC2 (text classification under a 90 MB memory
+//! cap) optimality of CARIn vs the baselines per device and state.
+
+use carin::bench::Bencher;
+use carin::harness::figures;
+use carin::moo::rass;
+use carin::zoo::Registry;
+
+fn main() {
+    let reg = Registry::paper();
+    println!("=== Figure 4: UC2 optimality per device/state ===");
+    let rows = figures::figure_single("uc2", &reg);
+    println!("{}", figures::render(&rows));
+    for m in ["B-A", "B-S", "OODIn"] {
+        if let Some((avg, max)) = figures::gain_over(&rows, m) {
+            println!("CARIn gain over {m}: avg {avg:.2}x, max {max:.2}x");
+        }
+    }
+
+    let b = Bencher::quick();
+    for dev in carin::device::profiles::all() {
+        let p = carin::config::use_case("uc2", &reg, &dev).unwrap();
+        b.run(&format!("rass_solve/uc2/{}", dev.name), || rass::solve(&p));
+    }
+}

@@ -1,0 +1,37 @@
+//! Figure 5 reproduction: UC3 (parallel scene + audio classification)
+//! optimality of CARIn vs multi-DNN-unaware / transferred / OODIn per
+//! device and processor combination.
+
+use carin::bench::Bencher;
+use carin::harness::figures;
+use carin::moo::rass;
+use carin::zoo::Registry;
+
+fn main() {
+    let reg = Registry::paper();
+    println!("=== Figure 5: UC3 optimality per device/processor combination ===");
+    let rows = figures::figure_multi("uc3", &reg, None);
+    println!("{}", figures::render(&rows));
+    for m in ["unaware", "OODIn"] {
+        if let Some((avg, max)) = figures::gain_over(&rows, m) {
+            println!("CARIn gain over {m}: avg {avg:.2}x, max {max:.2}x");
+        }
+    }
+    let mut t_ratios = Vec::new();
+    for m in ["T_Pixel 7", "T_Galaxy S20 FE", "T_Galaxy A71"] {
+        if let Some((avg, max)) = figures::gain_over(&rows, m) {
+            t_ratios.push((avg, max));
+        }
+    }
+    if !t_ratios.is_empty() {
+        let avg = t_ratios.iter().map(|r| r.0).sum::<f64>() / t_ratios.len() as f64;
+        let max = t_ratios.iter().map(|r| r.1).fold(f64::MIN, f64::max);
+        println!("CARIn gain over transferred: avg {avg:.2}x, max {max:.2}x");
+    }
+
+    let b = Bencher::quick();
+    for dev in carin::device::profiles::all() {
+        let p = carin::config::use_case("uc3", &reg, &dev).unwrap();
+        b.run(&format!("rass_solve/uc3/{}", dev.name), || rass::solve(&p));
+    }
+}

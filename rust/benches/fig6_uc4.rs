@@ -1,0 +1,33 @@
+//! Figure 6 reproduction: UC4 (three facial-attribute models, batch 4,
+//! 10 ms latency cap) — top-5 processor combinations per device,
+//! CARIn vs the baselines. Most baselines fail UC4's tight constraint,
+//! as in the paper.
+
+use carin::bench::Bencher;
+use carin::harness::figures;
+use carin::moo::rass;
+use carin::zoo::Registry;
+
+fn main() {
+    let reg = Registry::paper();
+    println!("=== Figure 6: UC4 optimality, top-5 combinations per device ===");
+    let rows = figures::figure_multi("uc4", &reg, Some(5));
+    println!("{}", figures::render(&rows));
+    let failures = rows.iter().filter(|r| r.optimality.is_none()).count();
+    println!(
+        "baseline failures (patterned bars in the paper): {} of {} rows",
+        failures,
+        rows.len()
+    );
+    for m in ["unaware", "OODIn"] {
+        if let Some((avg, max)) = figures::gain_over(&rows, m) {
+            println!("CARIn gain over {m}: avg {avg:.2}x, max {max:.2}x");
+        }
+    }
+
+    let b = Bencher::quick();
+    for dev in carin::device::profiles::all() {
+        let p = carin::config::use_case("uc4", &reg, &dev).unwrap();
+        b.run(&format!("rass_solve/uc4/{}", dev.name), || rass::solve(&p));
+    }
+}

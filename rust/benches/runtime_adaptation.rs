@@ -1,0 +1,96 @@
+//! Figures 7/8 reproduction: runtime-adaptation traces for UC1/S20 and
+//! UC3/A71 under the paper's event scripts, plus micro-benchmarks of the
+//! adaptation hot path (monitor sample, policy lookup, RM observe).
+
+use carin::bench::Bencher;
+use carin::config;
+use carin::coordinator::run_trace;
+use carin::device::{profiles, Simulator};
+use carin::manager::{EventSchedule, Monitor, RuntimeManager};
+use carin::moo::rass::{self, EnvState};
+use carin::zoo::Registry;
+
+fn trace_summary(uc: &str, dev_name: &str, sched_of: impl Fn(f64) -> EventSchedule) {
+    let reg = Registry::paper();
+    let dev = profiles::by_name(dev_name).unwrap();
+    let p = config::use_case(uc, &reg, &dev).unwrap();
+    let sol = rass::solve(&p);
+    println!("--- {} on {} ---", uc, dev.name);
+    for (i, d) in sol.designs.iter().enumerate() {
+        println!("  d[{i}] {}", d.describe(&p));
+    }
+    let log = run_trace(&p, sol, sched_of(p.device.ram_bytes()), 32.0, 1.0 / 24.0, 11);
+    println!(
+        "  {} rounds, {} switches, mean decision {:.0} ns",
+        log.points.len(),
+        log.switches,
+        log.mean_decision_ns
+    );
+    // per-design residency + latency/accuracy bands (the figure's y-axes)
+    let mut designs: Vec<usize> = log.points.iter().map(|pt| pt.design).collect();
+    designs.sort_unstable();
+    designs.dedup();
+    for d in designs {
+        let pts: Vec<_> = log.points.iter().filter(|pt| pt.design == d).collect();
+        let lat: f64 =
+            pts.iter().map(|pt| pt.latency_ms[0]).sum::<f64>() / pts.len() as f64;
+        let mem = pts.iter().map(|pt| pt.mem_mb).fold(f64::MIN, f64::max);
+        println!(
+            "  d[{d}]: {:4} rounds, avg lat {:7.2} ms, acc {:.2}, peak mem {:6.1} MB",
+            pts.len(),
+            lat,
+            pts[0].accuracy[0],
+            mem
+        );
+    }
+}
+
+fn main() {
+    println!("=== Figure 7: UC1 on Galaxy S20 FE ===");
+    trace_summary("uc1", "s20", EventSchedule::figure7);
+    println!("\n=== Figure 8: UC3 on Galaxy A71 ===");
+    trace_summary("uc3", "a71", EventSchedule::figure8);
+
+    println!("\n=== adaptation hot-path microbenchmarks ===");
+    let reg = Registry::paper();
+    let dev = profiles::galaxy_s20();
+    let p = config::use_case("uc1", &reg, &dev).unwrap();
+    let sol = rass::solve(&p);
+    let b = Bencher::default();
+
+    let policy = sol.policy.clone();
+    let states: Vec<EnvState> = policy.iter_states().map(|(s, _)| s).collect();
+    let mut i = 0;
+    b.run("policy_lookup", || {
+        i = (i + 1) % states.len();
+        policy.design_for(states[i])
+    });
+
+    let mut sim = Simulator::new(dev.clone(), 3);
+    let mut monitor = Monitor::new(dev.engines.clone(), 2);
+    b.run("monitor_sample", || monitor.sample(&sim));
+
+    let mut rm = RuntimeManager::new(sol);
+    let mut flip = false;
+    b.run("rm_observe_with_state_change", || {
+        flip = !flip;
+        let s = if flip {
+            EnvState::calm().with_engine(carin::device::Engine::Cpu)
+        } else {
+            EnvState::calm()
+        };
+        rm.observe(s, 0.0)
+    });
+
+    b.run("simulator_inference_step", || {
+        sim.run_inference(
+            &reg,
+            carin::zoo::Variant {
+                model: reg.find("EfficientNet Lite0").unwrap(),
+                scheme: carin::zoo::Scheme::Ffx8,
+            },
+            carin::device::Proc::Npu,
+            0,
+        )
+    });
+}

@@ -1,0 +1,25 @@
+//! Table 10 reproduction: model storage requirements of CARIn (only the
+//! RASS design set) vs OODIn (the full candidate zoo), per use case and
+//! device.
+
+use carin::harness::tables;
+use carin::zoo::Registry;
+
+fn main() {
+    println!("=== Table 10: storage requirements (MB) ===");
+    let reg = Registry::paper();
+    println!(
+        "{:>4} | {:>14} | {:>9} | {:>9} | {:>9}",
+        "uc", "device", "CARIn", "OODIn", "reduction"
+    );
+    let rows = tables::table10_storage(&reg);
+    for r in &rows {
+        println!(
+            "{:>4} | {:>14} | {:>9.2} | {:>9.2} | {:>8.2}x",
+            r.use_case, r.device, r.carin_mb, r.oodin_mb, r.reduction
+        );
+    }
+    let avg = rows.iter().map(|r| r.reduction).sum::<f64>() / rows.len() as f64;
+    let max = rows.iter().map(|r| r.reduction).fold(f64::MIN, f64::max);
+    println!("\naverage reduction {avg:.2}x, max {max:.2}x (paper: up to 19.98x)");
+}

@@ -1,0 +1,104 @@
+//! Minimal criterion-style benchmarking harness (criterion is not in the
+//! offline registry): warm-up, timed iterations, and a robust summary
+//! printed in a stable, greppable format.
+
+use std::time::{Duration, Instant};
+
+use crate::util::Summary;
+
+/// One benchmark's result.
+#[derive(Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iterations: usize,
+    /// Per-iteration wall-clock in ms.
+    pub per_iter_ms: Summary,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:40} iters={:<5} mean={:>10.4} ms  p50={:>10.4} ms  p95={:>10.4} ms  min={:>10.4} ms",
+            self.name,
+            self.iterations,
+            self.per_iter_ms.mean,
+            self.per_iter_ms.percentile(50.0),
+            self.per_iter_ms.percentile(95.0),
+            self.per_iter_ms.min,
+        );
+    }
+}
+
+/// Benchmark runner with a time budget.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            max_iters: 2000,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            budget: Duration::from_millis(500),
+            max_iters: 200,
+        }
+    }
+
+    /// Time `f` repeatedly; prevents the result from being optimised out
+    /// via `std::hint::black_box`.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        // warm-up
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::new();
+        let b0 = Instant::now();
+        while b0.elapsed() < self.budget && samples.len() < self.max_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64() * 1000.0);
+        }
+        if samples.is_empty() {
+            samples.push(f64::NAN);
+        }
+        let r = BenchResult {
+            name: name.to_string(),
+            iterations: samples.len(),
+            per_iter_ms: Summary::of(&samples),
+        };
+        r.report();
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher { warmup: Duration::from_millis(1), budget: Duration::from_millis(20), max_iters: 50 };
+        let r = b.run("noop", || 1 + 1);
+        assert!(r.iterations > 0);
+        assert!(r.per_iter_ms.mean >= 0.0);
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let b = Bencher { warmup: Duration::from_millis(1), budget: Duration::from_secs(5), max_iters: 10 };
+        let r = b.run("capped", || ());
+        assert!(r.iterations <= 10);
+    }
+}

@@ -1,0 +1,172 @@
+//! Use-case definitions (paper §6.2): SLO specifications for UC1–UC4,
+//! plus a small text-based spec parser so custom applications can be
+//! launched from the CLI without recompiling.
+
+use crate::device::Device;
+use crate::moo::space::build_problem;
+use crate::moo::{Constraint, Metric, Objective, Problem, Statistic};
+use crate::zoo::registry::Task;
+use crate::zoo::Registry;
+
+/// Deterministic profiling seed derived from the device (so reproductions
+/// are stable but devices differ).
+fn profile_seed(device: &Device) -> u64 {
+    let mut h: u64 = 0xCA71_1234_5678_9ABC;
+    for b in device.name.bytes() {
+        h = h.wrapping_mul(0x100000001B3).wrapping_add(b as u64);
+    }
+    h
+}
+
+/// Build one of the paper's four use cases for a device.
+///
+/// * `uc1` — real-time image classification: max A, max TP
+///   s.t. max L <= 41.67 ms (>= 24 FPS).
+/// * `uc2` — text classification: min avg L, min S, max A
+///   s.t. MF <= 90 MB.
+/// * `uc3` — scene recognition (2 DNNs in parallel): min avg L_i,
+///   min std L_i, max A_i s.t. avg L_i <= 100 ms, std L_i <= 10 ms.
+/// * `uc4` — facial-attribute prediction (3 DNNs, batch 4): min avg L_i,
+///   std L_i, S_i, MF_i, max A_i s.t. max L_i <= 10 ms.
+pub fn use_case(name: &str, reg: &Registry, device: &Device) -> Option<Problem> {
+    let seed = profile_seed(device);
+    let p = match name.to_ascii_lowercase().as_str() {
+        "uc1" => build_problem(
+            "uc1",
+            vec![Task::ImageCls],
+            device.clone(),
+            reg.clone(),
+            vec![
+                Objective::new(Metric::Accuracy),
+                Objective::new(Metric::Throughput),
+            ],
+            vec![Constraint {
+                metric: Metric::Latency,
+                stat: Statistic::Max,
+                task: None,
+                bound: 41.67,
+            }],
+            seed,
+        ),
+        "uc2" => build_problem(
+            "uc2",
+            vec![Task::TextCls],
+            device.clone(),
+            reg.clone(),
+            vec![
+                Objective::new(Metric::Latency).stat(Statistic::Avg),
+                Objective::new(Metric::Size),
+                Objective::new(Metric::Accuracy),
+            ],
+            vec![Constraint {
+                metric: Metric::MemFootprint,
+                stat: Statistic::Avg,
+                task: None,
+                bound: 90e6,
+            }],
+            seed,
+        ),
+        "uc3" => {
+            let mut objectives = Vec::new();
+            let mut constraints = Vec::new();
+            for i in 0..2 {
+                objectives.push(Objective::new(Metric::Latency).stat(Statistic::Avg).task(i));
+                objectives.push(Objective::new(Metric::Latency).stat(Statistic::Std).task(i));
+                objectives.push(Objective::new(Metric::Accuracy).task(i));
+                constraints.push(Constraint {
+                    metric: Metric::Latency,
+                    stat: Statistic::Avg,
+                    task: Some(i),
+                    bound: 100.0,
+                });
+                constraints.push(Constraint {
+                    metric: Metric::Latency,
+                    stat: Statistic::Std,
+                    task: Some(i),
+                    bound: 10.0,
+                });
+            }
+            build_problem(
+                "uc3",
+                vec![Task::SceneCls, Task::AudioCls],
+                device.clone(),
+                reg.clone(),
+                objectives,
+                constraints,
+                seed,
+            )
+        }
+        "uc4" => {
+            let tasks = vec![Task::FaceGender, Task::FaceAge, Task::FaceEth];
+            let mut objectives = Vec::new();
+            for i in 0..tasks.len() {
+                objectives.push(Objective::new(Metric::Latency).stat(Statistic::Avg).task(i));
+                objectives.push(Objective::new(Metric::Latency).stat(Statistic::Std).task(i));
+                objectives.push(Objective::new(Metric::Size).task(i));
+                objectives.push(Objective::new(Metric::MemFootprint).task(i));
+                objectives.push(Objective::new(Metric::Accuracy).task(i));
+            }
+            let constraints = vec![Constraint {
+                metric: Metric::Latency,
+                stat: Statistic::Max,
+                task: None, // every task
+                bound: 10.0,
+            }];
+            build_problem(
+                "uc4",
+                tasks,
+                device.clone(),
+                reg.clone(),
+                objectives,
+                constraints,
+                seed,
+            )
+        }
+        _ => return None,
+    };
+    Some(p)
+}
+
+pub const USE_CASES: [&str; 4] = ["uc1", "uc2", "uc3", "uc4"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+
+    #[test]
+    fn all_use_cases_build_on_all_devices() {
+        let reg = Registry::paper();
+        for d in profiles::all() {
+            for uc in USE_CASES {
+                let p = use_case(uc, &reg, &d)
+                    .unwrap_or_else(|| panic!("{uc} on {}", d.name));
+                assert!(!p.space.is_empty(), "{uc} on {} has empty space", d.name);
+                assert!(!p.objectives.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_use_case_is_none() {
+        let reg = Registry::paper();
+        let d = profiles::pixel7();
+        assert!(use_case("uc9", &reg, &d).is_none());
+    }
+
+    #[test]
+    fn uc1_objective_directions() {
+        let reg = Registry::paper();
+        let p = use_case("uc1", &reg, &profiles::pixel7()).unwrap();
+        assert!(p.objectives.iter().all(|o| o.metric.higher_is_better()));
+        assert_eq!(p.constraints.len(), 1);
+    }
+
+    #[test]
+    fn uc4_has_15_objectives() {
+        let reg = Registry::paper();
+        let p = use_case("uc4", &reg, &profiles::galaxy_s20()).unwrap();
+        assert_eq!(p.objectives.len(), 15);
+        assert_eq!(p.tasks.len(), 3);
+    }
+}

@@ -1,0 +1,233 @@
+//! SLO specification parser: a small text DSL so custom applications can
+//! be formulated without recompiling (the paper's broad/narrow SLO forms,
+//! §4.1):
+//!
+//! ```text
+//! # one directive per line; '#' starts a comment
+//! max A            # broad SLO  <max, accuracy>
+//! min avg L @1     # broad SLO on task 1 of a multi-DNN app
+//! max TP w=2.5     # weighted objective
+//! st max L <= 41.67    # narrow SLO <max, latency, 41.67>
+//! st p95 E <= 80       # percentile-bounded energy
+//! st avg MF <= 90e6
+//! ```
+//!
+//! Metrics: S W A L TP E MF STP NTT F. Statistics: min max avg std pNN.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::moo::{Constraint, Metric, Objective, Statistic};
+
+/// Parsed SLO specification.
+#[derive(Debug, Default)]
+pub struct SloSpec {
+    pub objectives: Vec<Objective>,
+    pub constraints: Vec<Constraint>,
+}
+
+fn metric_of(s: &str) -> Result<Metric> {
+    Ok(match s.to_ascii_uppercase().as_str() {
+        "S" => Metric::Size,
+        "W" => Metric::Workload,
+        "A" => Metric::Accuracy,
+        "L" => Metric::Latency,
+        "TP" => Metric::Throughput,
+        "E" => Metric::Energy,
+        "MF" => Metric::MemFootprint,
+        "STP" => Metric::Stp,
+        "NTT" => Metric::Ntt,
+        "F" => Metric::Fairness,
+        other => bail!("unknown metric {other}"),
+    })
+}
+
+fn stat_of(s: &str) -> Result<Statistic> {
+    Ok(match s.to_ascii_lowercase().as_str() {
+        "min" => Statistic::Min,
+        "max" => Statistic::Max,
+        "avg" | "mean" => Statistic::Avg,
+        "std" => Statistic::Std,
+        p if p.starts_with('p') => {
+            let v: f64 = p[1..].parse().map_err(|_| anyhow!("bad percentile {p}"))?;
+            Statistic::Percentile(v)
+        }
+        other => bail!("unknown statistic {other}"),
+    })
+}
+
+/// Parse a full spec document.
+pub fn parse(text: &str) -> Result<SloSpec> {
+    let mut spec = SloSpec::default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap().trim();
+        if line.is_empty() {
+            continue;
+        }
+        parse_line(line, &mut spec)
+            .map_err(|e| anyhow!("line {}: {e} ({raw:?})", lineno + 1))?;
+    }
+    if spec.objectives.is_empty() && !spec.constraints.is_empty() {
+        // §4.1: when only constraints are given, every inner function h_j
+        // also serves as an objective.
+        for c in &spec.constraints {
+            spec.objectives.push(Objective {
+                metric: c.metric,
+                stat: c.stat,
+                task: c.task,
+                weight: 1.0,
+            });
+        }
+    }
+    if spec.objectives.is_empty() {
+        bail!("spec declares no objectives");
+    }
+    Ok(spec)
+}
+
+fn parse_line(line: &str, spec: &mut SloSpec) -> Result<()> {
+    let mut toks: Vec<&str> = line.split_whitespace().collect();
+    if toks[0].eq_ignore_ascii_case("st") || toks[0].eq_ignore_ascii_case("s.t.") {
+        // constraint: st <stat> <metric> <= <bound> [@task]
+        toks.remove(0);
+        let (task, rest) = split_task(&toks)?;
+        let [stat, metric, op, bound] = rest.as_slice() else {
+            bail!("constraint form: st <stat> <metric> <= <bound> [@N]");
+        };
+        if *op != "<=" && *op != ">=" {
+            bail!("constraint operator must be <= or >=");
+        }
+        let metric = metric_of(metric)?;
+        // direction sanity: <= for lower-better, >= for higher-better
+        let expected = if metric.higher_is_better() { ">=" } else { "<=" };
+        if *op != expected {
+            bail!("{} is {}-better; use {expected}", metric.name(),
+                  if metric.higher_is_better() { "higher" } else { "lower" });
+        }
+        spec.constraints.push(Constraint {
+            metric,
+            stat: stat_of(stat)?,
+            task,
+            bound: bound.parse().map_err(|_| anyhow!("bad bound {bound}"))?,
+        });
+        return Ok(());
+    }
+
+    // objective: <min|max> [stat] <metric> [@task] [w=K]
+    let dir = toks.remove(0);
+    if !dir.eq_ignore_ascii_case("min") && !dir.eq_ignore_ascii_case("max") {
+        bail!("expected min/max/st, got {dir}");
+    }
+    let mut weight = 1.0;
+    if let Some(pos) = toks.iter().position(|t| t.starts_with("w=")) {
+        weight = toks[pos][2..]
+            .parse()
+            .map_err(|_| anyhow!("bad weight {}", toks[pos]))?;
+        toks.remove(pos);
+    }
+    let (task, rest) = split_task(&toks)?;
+    let (stat, metric) = match rest.as_slice() {
+        [m] => (Statistic::Avg, metric_of(m)?),
+        [s, m] => (stat_of(s)?, metric_of(m)?),
+        _ => bail!("objective form: min|max [stat] <metric> [@N] [w=K]"),
+    };
+    // direction sanity against the metric's canonical direction
+    let canonical = if metric.higher_is_better() { "max" } else { "min" };
+    if !dir.eq_ignore_ascii_case(canonical) {
+        bail!("{} is canonically {canonical}imised", metric.name());
+    }
+    spec.objectives.push(Objective { metric, stat, task, weight });
+    Ok(())
+}
+
+fn split_task<'a>(toks: &[&'a str]) -> Result<(Option<usize>, Vec<&'a str>)> {
+    let mut task = None;
+    let mut rest = Vec::new();
+    for t in toks {
+        if let Some(n) = t.strip_prefix('@') {
+            task = Some(n.parse().map_err(|_| anyhow!("bad task index {t}"))?);
+        } else {
+            rest.push(*t);
+        }
+    }
+    Ok((task, rest))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_uc1_spec() {
+        let spec = parse(
+            "# UC1: real-time image classification\n\
+             max A\n\
+             max TP\n\
+             st max L <= 41.67\n",
+        )
+        .unwrap();
+        assert_eq!(spec.objectives.len(), 2);
+        assert_eq!(spec.constraints.len(), 1);
+        assert_eq!(spec.constraints[0].bound, 41.67);
+        assert!(matches!(spec.constraints[0].stat, Statistic::Max));
+    }
+
+    #[test]
+    fn parses_multi_task_and_weights() {
+        let spec = parse(
+            "min avg L @0\nmin std L @0 w=0.5\nmax A @1\nst avg L <= 100 @1\n",
+        )
+        .unwrap();
+        assert_eq!(spec.objectives[0].task, Some(0));
+        assert_eq!(spec.objectives[1].weight, 0.5);
+        assert_eq!(spec.constraints[0].task, Some(1));
+    }
+
+    #[test]
+    fn percentile_statistic() {
+        let spec = parse("max A\nst p95 L <= 20\n").unwrap();
+        assert!(matches!(
+            spec.constraints[0].stat,
+            Statistic::Percentile(p) if (p - 95.0).abs() < 1e-9
+        ));
+    }
+
+    #[test]
+    fn constraints_only_promotes_inner_functions() {
+        // §4.1: inner functions become objectives when none are declared
+        let spec = parse("st max L <= 10\nst avg MF <= 90e6\n").unwrap();
+        assert_eq!(spec.objectives.len(), 2);
+    }
+
+    #[test]
+    fn rejects_wrong_direction() {
+        assert!(parse("min A\n").is_err()); // accuracy is higher-better
+        assert!(parse("max L\n").is_err()); // latency is lower-better
+        assert!(parse("max A\nst max L >= 10\n").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("maximize the vibes\n").is_err());
+        assert!(parse("max Q\n").is_err());
+        assert!(parse("st max L <= ten\n").is_err());
+        assert!(parse("").is_err());
+    }
+
+    #[test]
+    fn full_problem_from_spec_solves() {
+        let reg = crate::zoo::Registry::paper();
+        let dev = crate::device::profiles::pixel7();
+        let spec = parse("max A\nmin avg E\nst max L <= 41.67\n").unwrap();
+        let p = crate::moo::space::build_problem(
+            "custom",
+            vec![crate::zoo::Task::ImageCls],
+            dev,
+            reg,
+            spec.objectives,
+            spec.constraints,
+            7,
+        );
+        let sol = crate::moo::rass::solve(&p);
+        assert!(!sol.designs.is_empty());
+    }
+}

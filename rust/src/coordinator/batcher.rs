@@ -1,0 +1,148 @@
+//! Dynamic batcher: groups single-sample requests into fixed-size batch
+//! tensors (UC4 runs its face models at batch 4) with a deadline so tail
+//! requests are not starved.
+
+use std::time::{Duration, Instant};
+
+/// One enqueued request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Flat input payload for one sample.
+    pub payload: Vec<f32>,
+    pub enqueued: Instant,
+}
+
+/// A formed batch.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub ids: Vec<u64>,
+    /// Concatenated payloads, padded with zero samples to `capacity`.
+    pub payload: Vec<f32>,
+    /// Number of real (non-padding) samples.
+    pub occupancy: usize,
+}
+
+/// Deadline-bounded fixed-capacity batcher.
+#[derive(Debug)]
+pub struct Batcher {
+    capacity: usize,
+    sample_len: usize,
+    deadline: Duration,
+    pending: Vec<Request>,
+}
+
+impl Batcher {
+    pub fn new(capacity: usize, sample_len: usize, deadline: Duration) -> Self {
+        assert!(capacity > 0 && sample_len > 0);
+        Batcher { capacity, sample_len, deadline, pending: Vec::new() }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Enqueue; returns a full batch when capacity is reached.
+    pub fn push(&mut self, r: Request) -> Option<Batch> {
+        assert_eq!(r.payload.len(), self.sample_len, "sample length mismatch");
+        self.pending.push(r);
+        if self.pending.len() >= self.capacity {
+            Some(self.form())
+        } else {
+            None
+        }
+    }
+
+    /// Flush a partial batch whose oldest request exceeded the deadline.
+    pub fn flush_due(&mut self, now: Instant) -> Option<Batch> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        if now.duration_since(self.pending[0].enqueued) >= self.deadline {
+            Some(self.form())
+        } else {
+            None
+        }
+    }
+
+    /// Unconditional flush (shutdown path).
+    pub fn flush(&mut self) -> Option<Batch> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            Some(self.form())
+        }
+    }
+
+    fn form(&mut self) -> Batch {
+        let take = self.pending.len().min(self.capacity);
+        let reqs: Vec<Request> = self.pending.drain(..take).collect();
+        let mut payload = Vec::with_capacity(self.capacity * self.sample_len);
+        for r in &reqs {
+            payload.extend_from_slice(&r.payload);
+        }
+        payload.resize(self.capacity * self.sample_len, 0.0);
+        Batch {
+            ids: reqs.iter().map(|r| r.id).collect(),
+            payload,
+            occupancy: reqs.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, len: usize) -> Request {
+        Request { id, payload: vec![id as f32; len], enqueued: Instant::now() }
+    }
+
+    #[test]
+    fn batches_at_capacity() {
+        let mut b = Batcher::new(4, 3, Duration::from_millis(5));
+        assert!(b.push(req(0, 3)).is_none());
+        assert!(b.push(req(1, 3)).is_none());
+        assert!(b.push(req(2, 3)).is_none());
+        let batch = b.push(req(3, 3)).expect("full batch");
+        assert_eq!(batch.ids, vec![0, 1, 2, 3]);
+        assert_eq!(batch.occupancy, 4);
+        assert_eq!(batch.payload.len(), 12);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn never_exceeds_capacity_and_fifo() {
+        let mut b = Batcher::new(2, 1, Duration::from_secs(1));
+        b.push(req(5, 1));
+        let batch = b.push(req(6, 1)).unwrap();
+        assert_eq!(batch.ids, vec![5, 6]); // FIFO within the model
+        assert!(batch.ids.len() <= 2);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch_padded() {
+        let mut b = Batcher::new(4, 2, Duration::from_millis(0));
+        b.push(req(9, 2));
+        let batch = b.flush_due(Instant::now()).expect("deadline flush");
+        assert_eq!(batch.occupancy, 1);
+        assert_eq!(batch.payload.len(), 8); // padded to capacity
+        assert_eq!(&batch.payload[2..], &[0.0; 6]);
+    }
+
+    #[test]
+    fn no_flush_before_deadline() {
+        let mut b = Batcher::new(4, 1, Duration::from_secs(60));
+        b.push(req(1, 1));
+        assert!(b.flush_due(Instant::now()).is_none());
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn unconditional_flush() {
+        let mut b = Batcher::new(3, 1, Duration::from_secs(60));
+        assert!(b.flush().is_none());
+        b.push(req(1, 1));
+        assert_eq!(b.flush().unwrap().occupancy, 1);
+    }
+}

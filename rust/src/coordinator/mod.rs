@@ -1,0 +1,14 @@
+//! The application coordinator: the adaptation trace driver used by the
+//! runtime-adaptation experiments (Figures 7/8) and the serving front-end
+//! (router + dynamic batcher + engine loop) used by the end-to-end
+//! example on real PJRT execution.
+
+pub mod batcher;
+pub mod router;
+pub mod serve;
+pub mod trace;
+
+pub use batcher::{Batch, Batcher};
+pub use router::Router;
+pub use serve::{ServeReport, ServingCoordinator};
+pub use trace::{run_trace, TraceLog, TracePoint};

@@ -1,0 +1,118 @@
+//! Request router: maps a task's requests to the artifact of the design
+//! currently selected by the Runtime Manager. Lookups are O(1) and
+//! allocation-free on the hot path.
+
+use crate::moo::Solution;
+use crate::runtime::artifact::{self, ArtifactMeta};
+use crate::zoo::Registry;
+
+/// Routes (task, current design) -> artifact stem.
+pub struct Router {
+    /// `routes[design][task]` = index into the manifest.
+    routes: Vec<Vec<usize>>,
+    stems: Vec<String>,
+    current: usize,
+}
+
+impl Router {
+    /// Precompute the routing table for every design in the solution.
+    /// Every design's (model, scheme) must resolve to an artifact via the
+    /// registry's executable stand-in mapping.
+    pub fn new(
+        reg: &Registry,
+        solution: &Solution,
+        manifest: &[ArtifactMeta],
+    ) -> anyhow::Result<Router> {
+        let stems: Vec<String> = manifest.iter().map(|m| m.stem.clone()).collect();
+        let mut routes = Vec::with_capacity(solution.designs.len());
+        for d in &solution.designs {
+            let mut per_task = Vec::with_capacity(d.config.assignments.len());
+            for a in &d.config.assignments {
+                let entry = &reg.models[a.variant.model];
+                let scheme = a.variant.scheme.name();
+                let meta = artifact::find(manifest, entry.artifact, scheme)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "no artifact {}_{} (stand-in for {})",
+                            entry.artifact, scheme, entry.name
+                        )
+                    })?;
+                per_task.push(
+                    manifest.iter().position(|m| m.stem == meta.stem).unwrap(),
+                );
+            }
+            routes.push(per_task);
+        }
+        Ok(Router { routes, stems, current: 0 })
+    }
+
+    /// Point the router at a new design (called by the RM on switch).
+    pub fn set_design(&mut self, design: usize) {
+        assert!(design < self.routes.len());
+        self.current = design;
+    }
+
+    pub fn design(&self) -> usize {
+        self.current
+    }
+
+    /// Artifact stem serving `task` right now.
+    pub fn route(&self, task: usize) -> &str {
+        &self.stems[self.routes[self.current][task]]
+    }
+
+    /// Manifest index serving `task` right now.
+    pub fn route_index(&self, task: usize) -> usize {
+        self.routes[self.current][task]
+    }
+
+    /// Every manifest index any design can route to (preload set) —
+    /// CARIn's storage advantage (Table 10) is that *only* these are kept.
+    pub fn preload_set(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.routes.iter().flatten().copied().collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::device::profiles;
+    use crate::moo::rass;
+    use crate::runtime::load_manifest;
+    use std::path::PathBuf;
+
+    fn manifest_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn routes_every_design_of_every_use_case() {
+        let dir = manifest_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let manifest = load_manifest(&dir).unwrap();
+        let reg = Registry::paper();
+        for dev in profiles::all() {
+            for uc in config::USE_CASES {
+                let p = config::use_case(uc, &reg, &dev).unwrap();
+                let sol = rass::solve(&p);
+                let router = Router::new(&reg, &sol, &manifest)
+                    .unwrap_or_else(|e| panic!("{uc}/{}: {e}", dev.name));
+                for (di, d) in sol.designs.iter().enumerate() {
+                    let mut r = Router::new(&reg, &sol, &manifest).unwrap();
+                    r.set_design(di);
+                    for t in 0..d.config.assignments.len() {
+                        assert!(!r.route(t).is_empty());
+                    }
+                }
+                assert!(!router.preload_set().is_empty());
+            }
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! Serving front-end over the real PJRT engine: workload threads feed a
+//! request channel; the engine loop (PJRT types are not `Send`, so the
+//! engine lives on its owning thread) routes each request through the
+//! Runtime-Manager-selected design, batches where the model expects a
+//! batch, executes, and reports per-request latency.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::batcher::{Batcher, Request as BatchRequest};
+use crate::coordinator::router::Router;
+use crate::moo::Solution;
+use crate::runtime::engine::{random_input, InferenceEngine, Tensor};
+use crate::runtime::ArtifactMeta;
+use crate::util::Summary;
+use crate::zoo::Registry;
+
+/// One serving request (payload generated if `None` — synthetic workload).
+#[derive(Debug)]
+pub struct ServeRequest {
+    pub task: usize,
+    pub id: u64,
+    pub submitted: Instant,
+}
+
+/// Per-task serving statistics.
+#[derive(Debug)]
+pub struct TaskReport {
+    pub task: usize,
+    pub artifact: String,
+    pub completed: usize,
+    pub latency_ms: Summary,
+    /// Queue + batching + execution (request-to-response), ms.
+    pub e2e_ms: Summary,
+    /// Executions that missed the task's latency SLO (if one is set).
+    pub slo_misses: usize,
+}
+
+/// End-to-end serving report.
+#[derive(Debug)]
+pub struct ServeReport {
+    pub tasks: Vec<TaskReport>,
+    pub wall_s: f64,
+    pub total_requests: usize,
+    /// Requests per second across tasks.
+    pub throughput_rps: f64,
+}
+
+/// The serving coordinator: owns the engine, router and batchers.
+pub struct ServingCoordinator {
+    engine: InferenceEngine,
+    router: Router,
+    manifest: Vec<ArtifactMeta>,
+    /// Per-task batcher for batch>1 artifacts.
+    batchers: HashMap<usize, Batcher>,
+    n_tasks: usize,
+    /// Optional per-execution latency SLO (ms) tracked in the report.
+    slo_ms: Option<f64>,
+}
+
+impl ServingCoordinator {
+    /// Compile and preload every artifact any design can route to — the
+    /// RASS design set is small by construction, so this is the paper's
+    /// storage/latency advantage over keeping the full zoo resident.
+    pub fn new(
+        reg: &Registry,
+        solution: &Solution,
+        manifest: Vec<ArtifactMeta>,
+    ) -> Result<ServingCoordinator> {
+        let mut engine = InferenceEngine::cpu()?;
+        let router = Router::new(reg, solution, &manifest)?;
+        for idx in router.preload_set() {
+            engine.load(&manifest[idx])?;
+        }
+        let n_tasks = solution.designs[0].config.assignments.len();
+        let mut batchers = HashMap::new();
+        for t in 0..n_tasks {
+            let meta = &manifest[router.route_index(t)];
+            // a leading batch dimension only exists on rank-4 NHWC image
+            // inputs (UC4's face crops); 1-D waveforms and token sequences
+            // are single-sample.
+            let batch = if meta.input.shape.len() == 4 { meta.input.shape[0] } else { 1 };
+            if meta.input.dtype == crate::runtime::DType::F32 && batch > 1 {
+                let sample_len = meta.input.numel() / batch;
+                batchers.insert(
+                    t,
+                    Batcher::new(batch, sample_len, Duration::from_millis(5)),
+                );
+            }
+        }
+        Ok(ServingCoordinator { engine, router, manifest, batchers, n_tasks, slo_ms: None })
+    }
+
+    /// Track executions against a latency SLO (ms); misses are reported
+    /// per task (the serving-side view of the paper's narrow SLOs).
+    pub fn set_latency_slo(&mut self, slo_ms: f64) {
+        self.slo_ms = Some(slo_ms);
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.n_tasks
+    }
+
+    pub fn set_design(&mut self, design: usize) {
+        self.router.set_design(design);
+    }
+
+    pub fn loaded_models(&self) -> usize {
+        self.engine.loaded().len()
+    }
+
+    /// Serve a finite synthetic workload: `requests` arrive over an mpsc
+    /// channel (producers run on their own threads); the engine loop
+    /// drains it until every producer hangs up.
+    pub fn serve(&mut self, rx: mpsc::Receiver<ServeRequest>) -> Result<ServeReport> {
+        let t0 = Instant::now();
+        let mut lat: Vec<Vec<f64>> = vec![Vec::new(); self.n_tasks];
+        let mut e2e: Vec<Vec<f64>> = vec![Vec::new(); self.n_tasks];
+        let mut completed = vec![0usize; self.n_tasks];
+        let mut seed = 0u64;
+
+        for req in rx.iter() {
+            seed += 1;
+            let t = req.task;
+            let meta_idx = self.router.route_index(t);
+            let meta = &self.manifest[meta_idx];
+            if let Some(b) = self.batchers.get_mut(&t) {
+                // batched path: one engine call per formed batch
+                let sample_len = meta.input.numel() / meta.input.shape[0];
+                let maybe = b.push(BatchRequest {
+                    id: req.id,
+                    payload: vec_sample(sample_len, seed),
+                    enqueued: req.submitted,
+                });
+                if let Some(batch) = maybe {
+                    let te = Instant::now();
+                    self.engine.infer(&meta.stem.clone(), &Tensor::F32(batch.payload))?;
+                    let exec_ms = te.elapsed().as_secs_f64() * 1000.0;
+                    for _ in 0..batch.occupancy {
+                        lat[t].push(exec_ms);
+                        completed[t] += 1;
+                    }
+                    e2e[t].push(req.submitted.elapsed().as_secs_f64() * 1000.0);
+                }
+            } else {
+                let input = random_input(meta, seed);
+                let te = Instant::now();
+                self.engine.infer(&meta.stem.clone(), &input)?;
+                lat[t].push(te.elapsed().as_secs_f64() * 1000.0);
+                e2e[t].push(req.submitted.elapsed().as_secs_f64() * 1000.0);
+                completed[t] += 1;
+            }
+        }
+        // drain partial batches
+        for (t, b) in self.batchers.iter_mut() {
+            if let Some(batch) = b.flush() {
+                let meta = &self.manifest[self.router.route_index(*t)];
+                let te = Instant::now();
+                self.engine.infer(&meta.stem.clone(), &Tensor::F32(batch.payload))?;
+                let exec_ms = te.elapsed().as_secs_f64() * 1000.0;
+                for _ in 0..batch.occupancy {
+                    lat[*t].push(exec_ms);
+                    completed[*t] += 1;
+                }
+            }
+        }
+
+        let wall_s = t0.elapsed().as_secs_f64();
+        let total: usize = completed.iter().sum();
+        let tasks = (0..self.n_tasks)
+            .map(|t| TaskReport {
+                task: t,
+                artifact: self.manifest[self.router.route_index(t)].stem.clone(),
+                completed: completed[t],
+                slo_misses: match self.slo_ms {
+                    Some(slo) => lat[t].iter().filter(|&&x| x > slo).count(),
+                    None => 0,
+                },
+                latency_ms: Summary::of(if lat[t].is_empty() { &[0.0] } else { &lat[t] }),
+                e2e_ms: Summary::of(if e2e[t].is_empty() { &[0.0] } else { &e2e[t] }),
+            })
+            .collect();
+        Ok(ServeReport {
+            tasks,
+            wall_s,
+            total_requests: total,
+            throughput_rps: total as f64 / wall_s,
+        })
+    }
+}
+
+fn vec_sample(len: usize, seed: u64) -> Vec<f32> {
+    let mut rng = crate::util::Rng::new(seed);
+    (0..len).map(|_| rng.normal() as f32).collect()
+}

@@ -1,0 +1,142 @@
+//! Adaptation trace driver: replays a workload + event schedule against
+//! the device simulator with the Runtime Manager in the loop, recording
+//! the per-inference timeline shown in Figures 7 and 8.
+
+use crate::device::Simulator;
+use crate::manager::{EventSchedule, Monitor, RuntimeManager};
+use crate::moo::{Problem, Solution};
+
+/// One recorded inference round (all tasks execute once, in parallel).
+#[derive(Debug, Clone)]
+pub struct TracePoint {
+    pub t_s: f64,
+    pub design: usize,
+    /// Per-task latency of this round, ms.
+    pub latency_ms: Vec<f64>,
+    /// Per-task accuracy of the active design.
+    pub accuracy: Vec<f64>,
+    /// Throughput of task 0, inferences/s (Figure 7's y-axis).
+    pub throughput: f64,
+    /// Total design memory footprint, MB.
+    pub mem_mb: f64,
+    /// Events that fired just before this round.
+    pub events: Vec<String>,
+    /// Set when the RM switched design in this round.
+    pub switched_to: Option<usize>,
+}
+
+/// A full adaptation run.
+#[derive(Debug)]
+pub struct TraceLog {
+    pub points: Vec<TracePoint>,
+    pub switches: usize,
+    pub mean_decision_ns: f64,
+}
+
+/// Drive `solution` under `schedule` for `duration_s` of simulated time.
+/// `period_s` is the inter-arrival period of the workload (e.g. 1/24 s
+/// for UC1's camera stream).
+pub fn run_trace(
+    problem: &Problem,
+    solution: Solution,
+    mut schedule: EventSchedule,
+    duration_s: f64,
+    period_s: f64,
+    seed: u64,
+) -> TraceLog {
+    let mut sim = Simulator::new(problem.device.clone(), seed);
+    let mut monitor = Monitor::new(problem.device.engines.clone(), 2);
+    let mut rm = RuntimeManager::new(solution);
+    let mut points = Vec::new();
+
+    let design_mf = |rm: &RuntimeManager, idx: usize| -> f64 {
+        problem.metrics(&rm.solution.designs[idx].config).total_mf_bytes()
+    };
+    sim.load_app_bytes(design_mf(&rm, rm.current_design()));
+
+    while sim.now_s < duration_s {
+        let now = sim.now_s;
+        let fired = schedule.apply_due(&mut sim, now);
+        let state = monitor.sample(&sim);
+        let switched_to = rm.observe(state, now);
+        if let Some(idx) = switched_to {
+            // load the new design's models, drop the old ones
+            sim.load_app_bytes(design_mf(&rm, idx));
+        }
+        let design = rm.current_design();
+        let cfg = rm.solution.designs[design].config.clone();
+
+        // run one round: every task fires once, in parallel.
+        let mut lat = Vec::with_capacity(cfg.assignments.len());
+        let mut acc = Vec::with_capacity(cfg.assignments.len());
+        for (t, a) in cfg.assignments.iter().enumerate() {
+            let out = sim.run_inference(&problem.registry, a.variant, a.proc, cfg.co_located(t));
+            lat.push(out.latency_ms);
+            acc.push(a.variant.accuracy(&problem.registry).unwrap_or(f64::NAN));
+            // parallel tasks: only the longest one advances the clock;
+            // rewind the serial accumulation for all but the max.
+        }
+        let round_ms = lat.iter().copied().fold(0.0f64, f64::max);
+        let serial_ms: f64 = lat.iter().sum();
+        sim.now_s -= (serial_ms - round_ms) / 1000.0; // parallel correction
+        let mem_mb = sim.ram.app_bytes / 1e6;
+        points.push(TracePoint {
+            t_s: now,
+            design,
+            throughput: 1000.0 / lat[0].max(1e-9),
+            latency_ms: lat,
+            accuracy: acc,
+            mem_mb,
+            events: fired.iter().map(|e| e.describe()).collect(),
+            switched_to,
+        });
+        // wait out the arrival period
+        if round_ms / 1000.0 < period_s {
+            sim.idle(period_s - round_ms / 1000.0);
+        }
+    }
+
+    TraceLog {
+        switches: rm.switches.len(),
+        mean_decision_ns: rm.mean_decision_ns(),
+        points,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::device::profiles;
+    use crate::manager::EventSchedule;
+    use crate::moo::rass;
+    use crate::zoo::Registry;
+
+    #[test]
+    fn figure7_trace_switches_and_recovers() {
+        let p = config::use_case("uc1", &Registry::paper(), &profiles::galaxy_s20())
+            .unwrap();
+        let sol = rass::solve(&p);
+        let sched = EventSchedule::figure7(p.device.ram_bytes());
+        let log = run_trace(&p, sol, sched, 30.0, 1.0 / 24.0, 9);
+        assert!(!log.points.is_empty());
+        assert!(log.switches >= 2, "expected >=2 switches, got {}", log.switches);
+        // all rounds ran on some design; design changes happened
+        let designs: std::collections::HashSet<usize> =
+            log.points.iter().map(|p| p.design).collect();
+        assert!(designs.len() >= 2, "never switched design");
+        // the run must return to the initial design once events clear
+        assert_eq!(log.points.last().unwrap().design, log.points[0].design);
+    }
+
+    #[test]
+    fn trace_time_advances_with_period() {
+        let p = config::use_case("uc1", &Registry::paper(), &profiles::pixel7()).unwrap();
+        let sol = rass::solve(&p);
+        let log = run_trace(&p, sol, EventSchedule::default(), 2.0, 0.1, 3);
+        // ~20 rounds in 2 s at 10 Hz
+        assert!(log.points.len() >= 15 && log.points.len() <= 25,
+                "{} rounds", log.points.len());
+        assert_eq!(log.switches, 0);
+    }
+}

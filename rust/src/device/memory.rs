@@ -1,0 +1,167 @@
+//! Memory-footprint model and RAM-pressure accounting (paper §4.3.2:
+//! "Variability in RAM Utilisation").
+//!
+//! `MF` (paper §4.1.1) is the RAM required to load and execute a DNN:
+//! runtime base (interpreter + delegate buffers) + weights + peak
+//! activations. Background apps claim and release RAM over time, which is
+//! what trips the `c_m` monitor at runtime.
+
+use crate::zoo::registry::{Family, ModelEntry};
+use crate::zoo::{Scheme, Variant};
+
+use super::{Engine, Proc};
+use crate::zoo::Registry;
+
+/// Runtime base footprint of a delegate, bytes (interpreter, command
+/// queues, staging buffers). GPU delegates are the heaviest (shader
+/// programs + dual copies of I/O buffers).
+pub fn runtime_base_bytes(proc: Proc) -> f64 {
+    match proc.engine() {
+        Engine::Cpu => {
+            if let Proc::Cpu { xnnpack: true, .. } = proc {
+                12e6
+            } else {
+                8e6
+            }
+        }
+        Engine::Gpu => 38e6,
+        Engine::Npu => 24e6,
+        Engine::Dsp => 18e6,
+    }
+}
+
+/// Peak activation bytes: a sub-linear function of workload — activation
+/// tensors grow with feature-map size, not with parameter count. fp16
+/// execution halves them; integer execution quarters them.
+pub fn activation_bytes(entry: &ModelEntry, scheme: Scheme) -> f64 {
+    let flops = entry.gflops * 1e9;
+    let base = match entry.family {
+        Family::Cnn => 9.0 * flops.powf(0.62),
+        Family::Transformer => 5.0 * flops.powf(0.62),
+        Family::Audio => 6.0 * flops.powf(0.62),
+    } * entry.batch as f64;
+    let f = match scheme {
+        Scheme::Fp32 | Scheme::Dr8 => 1.0,
+        Scheme::Fp16 => 0.55,
+        Scheme::Fx8 => 0.45,
+        Scheme::Ffx8 => 0.30,
+    };
+    base * f
+}
+
+/// Total memory footprint of running `variant` on `proc`, bytes.
+pub fn footprint_bytes(reg: &Registry, variant: Variant, proc: Proc) -> f64 {
+    let entry = &reg.models[variant.model];
+    let weights = variant.size_bytes(reg);
+    // fp16 weights are dequantised to fp32 on CPU fallback (Table 1),
+    // doubling their in-RAM copy.
+    let weights_in_ram = if variant.scheme == Scheme::Fp16
+        && proc.engine() == Engine::Cpu
+    {
+        weights * 2.0
+    } else {
+        weights
+    };
+    runtime_base_bytes(proc) + weights_in_ram + activation_bytes(entry, variant.scheme)
+}
+
+/// RAM-pressure tracker: total device RAM vs what the OS + background
+/// apps + our designs currently hold.
+#[derive(Debug, Clone)]
+pub struct RamState {
+    pub total_bytes: f64,
+    /// OS + resident services (fixed floor).
+    pub os_bytes: f64,
+    /// Fluctuating background-app usage.
+    pub background_bytes: f64,
+    /// Bytes held by the inference application.
+    pub app_bytes: f64,
+}
+
+impl RamState {
+    pub fn new(total_bytes: f64) -> Self {
+        RamState {
+            total_bytes,
+            os_bytes: total_bytes * 0.35,
+            background_bytes: total_bytes * 0.15,
+            app_bytes: 0.0,
+        }
+    }
+
+    pub fn used(&self) -> f64 {
+        self.os_bytes + self.background_bytes + self.app_bytes
+    }
+
+    pub fn available(&self) -> f64 {
+        (self.total_bytes - self.used()).max(0.0)
+    }
+
+    /// Utilisation in [0, 1].
+    pub fn utilisation(&self) -> f64 {
+        (self.used() / self.total_bytes).min(1.0)
+    }
+
+    /// The `c_m` monitor signal (paper §4.3.4): memory pressure when
+    /// utilisation crosses 90%.
+    pub fn pressured(&self) -> bool {
+        self.utilisation() > 0.90
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+
+    #[test]
+    fn quantisation_shrinks_footprint() {
+        let reg = Registry::paper();
+        let i = reg.find("MobileBERT-L24-H512").unwrap();
+        let proc = Proc::Cpu { threads: 4, xnnpack: true };
+        let f32 = footprint_bytes(&reg, Variant { model: i, scheme: Scheme::Fp32 }, proc);
+        let dr8 = footprint_bytes(&reg, Variant { model: i, scheme: Scheme::Dr8 }, proc);
+        assert!(dr8 < f32 / 2.0);
+    }
+
+    #[test]
+    fn uc2_constraint_bites_mobilebert_fp32() {
+        // The UC2 narrow SLO bounds MF at 90 MB; MobileBERT fp32 weights
+        // alone are ~101 MB, so the constraint must exclude it.
+        let reg = Registry::paper();
+        let i = reg.find("MobileBERT-L24-H512").unwrap();
+        let proc = Proc::Cpu { threads: 4, xnnpack: true };
+        let mf = footprint_bytes(&reg, Variant { model: i, scheme: Scheme::Fp32 }, proc);
+        assert!(mf > 90e6, "mf = {} MB", mf / 1e6);
+        let mf8 = footprint_bytes(&reg, Variant { model: i, scheme: Scheme::Fx8 }, proc);
+        assert!(mf8 < 90e6, "mf8 = {} MB", mf8 / 1e6);
+    }
+
+    #[test]
+    fn gpu_base_heavier_than_cpu() {
+        assert!(runtime_base_bytes(Proc::Gpu)
+            > runtime_base_bytes(Proc::Cpu { threads: 1, xnnpack: false }));
+    }
+
+    #[test]
+    fn ram_state_accounting() {
+        let d = profiles::galaxy_s20();
+        let mut ram = RamState::new(d.ram_bytes());
+        assert!(!ram.pressured());
+        let avail0 = ram.available();
+        ram.app_bytes = 100e6;
+        assert!((avail0 - ram.available() - 100e6).abs() < 1.0);
+        ram.background_bytes = d.ram_bytes() * 0.58;
+        assert!(ram.pressured());
+    }
+
+    #[test]
+    fn batch4_inflates_activations() {
+        let reg = Registry::paper();
+        let g = reg.find("GenderNet-MNV2").unwrap();
+        let img = reg.find("MobileNet V2 1.0").unwrap();
+        let a_face = activation_bytes(&reg.models[g], Scheme::Fp32);
+        // per-batch-item activations smaller than the 224px model's
+        let a_img = activation_bytes(&reg.models[img], Scheme::Fp32);
+        assert!(a_face / 4.0 < a_img);
+    }
+}

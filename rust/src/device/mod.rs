@@ -1,0 +1,150 @@
+//! Heterogeneous-device substrate.
+//!
+//! The paper evaluates on three Android phones (Table 6) through TFLite
+//! delegates; none of that hardware exists in this environment, so — per
+//! the substitution rule in DESIGN.md §6 — this module implements a
+//! behavioural simulator that preserves what the MOO/RASS layers consume:
+//! per-(engine, scheme, family) latency and energy distributions, memory
+//! footprints, scheme-compatibility masks, thread/XNNPACK scaling,
+//! thermal-throttling dynamics and RAM pressure.
+
+pub mod memory;
+pub mod perf;
+pub mod profiles;
+pub mod simulator;
+pub mod thermal;
+
+pub use perf::EnginePerf;
+pub use profiles::Device;
+pub use simulator::{Governor, Simulator};
+
+use crate::zoo::Scheme;
+
+/// Compute engines (paper §6.3: `ce ∈ CE`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Engine {
+    Cpu,
+    Gpu,
+    Npu,
+    Dsp,
+}
+
+impl Engine {
+    pub const ALL: [Engine; 4] = [Engine::Cpu, Engine::Gpu, Engine::Npu, Engine::Dsp];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Engine::Cpu => "CPU",
+            Engine::Gpu => "GPU",
+            Engine::Npu => "NPU",
+            Engine::Dsp => "DSP",
+        }
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            Engine::Cpu => 0,
+            Engine::Gpu => 1,
+            Engine::Npu => 2,
+            Engine::Dsp => 3,
+        }
+    }
+}
+
+/// A processor configuration `hw = (ce, op(ce))` (paper §3.2).
+///
+/// `op(CPU) = {threads ∈ {1,2,4,8}, xnnpack}`; GPU/NPU run fp16 where
+/// feasible; the DSP exposes no options (paper §6.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Proc {
+    Cpu { threads: u8, xnnpack: bool },
+    Gpu,
+    Npu,
+    Dsp,
+}
+
+impl Proc {
+    pub fn engine(self) -> Engine {
+        match self {
+            Proc::Cpu { .. } => Engine::Cpu,
+            Proc::Gpu => Engine::Gpu,
+            Proc::Npu => Engine::Npu,
+            Proc::Dsp => Engine::Dsp,
+        }
+    }
+
+    /// All CPU option combinations (8 of them: 4 thread counts x XNNPACK).
+    pub fn cpu_options() -> Vec<Proc> {
+        let mut v = Vec::with_capacity(8);
+        for &threads in &[1u8, 2, 4, 8] {
+            for &xnnpack in &[false, true] {
+                v.push(Proc::Cpu { threads, xnnpack });
+            }
+        }
+        v
+    }
+
+    pub fn describe(self) -> String {
+        match self {
+            Proc::Cpu { threads, xnnpack } => {
+                format!("CPU[{}t{}]", threads, if xnnpack { ",xnn" } else { "" })
+            }
+            Proc::Gpu => "GPU".into(),
+            Proc::Npu => "NPU".into(),
+            Proc::Dsp => "DSP".into(),
+        }
+    }
+}
+
+/// Scheme compatibility of an engine on a given device family
+/// (paper §6.1/§6.3: DSPs and the A71 HTA are integer-only; GPUs prefer
+/// fp16 and run FX8 through the float-fallback path; DR8's dynamic
+/// quantisation is CPU-only in TFLite).
+pub fn compatible(device: &Device, proc: Proc, scheme: Scheme) -> bool {
+    match proc.engine() {
+        Engine::Cpu => true,
+        Engine::Gpu => matches!(scheme, Scheme::Fp32 | Scheme::Fp16 | Scheme::Fx8),
+        Engine::Npu => {
+            if device.npu_integer_only {
+                matches!(scheme, Scheme::Fx8 | Scheme::Ffx8)
+            } else {
+                matches!(scheme, Scheme::Fp16 | Scheme::Fx8 | Scheme::Ffx8)
+            }
+        }
+        Engine::Dsp => matches!(scheme, Scheme::Ffx8),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_option_space_is_8() {
+        assert_eq!(Proc::cpu_options().len(), 8);
+    }
+
+    #[test]
+    fn dsp_is_integer_only() {
+        let a71 = profiles::by_name("a71").unwrap();
+        assert!(compatible(&a71, Proc::Dsp, Scheme::Ffx8));
+        assert!(!compatible(&a71, Proc::Dsp, Scheme::Fp32));
+        assert!(!compatible(&a71, Proc::Dsp, Scheme::Fp16));
+    }
+
+    #[test]
+    fn s20_npu_runs_fp16() {
+        let s20 = profiles::by_name("s20").unwrap();
+        assert!(compatible(&s20, Proc::Npu, Scheme::Fp16));
+        let a71 = profiles::by_name("a71").unwrap();
+        assert!(!compatible(&a71, Proc::Npu, Scheme::Fp16)); // HTA int-only
+    }
+
+    #[test]
+    fn gpu_rejects_dr8_and_ffx8() {
+        let p7 = profiles::by_name("p7").unwrap();
+        assert!(!compatible(&p7, Proc::Gpu, Scheme::Dr8));
+        assert!(!compatible(&p7, Proc::Gpu, Scheme::Ffx8));
+        assert!(compatible(&p7, Proc::Gpu, Scheme::Fx8)); // float fallback
+    }
+}

@@ -1,0 +1,130 @@
+//! Per-engine performance model: effective throughput, dispatch overhead,
+//! latency jitter and power draw. Calibrated so that orderings and ratios
+//! match the paper's qualitative findings (NPUs dominate integer CNNs,
+//! GPUs dominate fp16, CPUs scale sub-linearly with threads, transformers
+//! vectorise poorly on fixed-function engines).
+
+use crate::zoo::registry::Family;
+use crate::zoo::Scheme;
+
+use super::Proc;
+
+/// Static performance description of one engine on one device.
+#[derive(Debug, Clone)]
+pub struct EnginePerf {
+    /// Effective single-thread (CPU) / base (others) throughput in GFLOP/s
+    /// for float32 graphs.
+    pub f32_gflops: f64,
+    /// ... for fp16 graphs (falls back to f32 speed where unsupported).
+    pub f16_gflops: f64,
+    /// ... for integer-dominant graphs (DR8/FX8/FFX8).
+    pub int8_gflops: f64,
+    /// Fixed dispatch + interpreter overhead per inference, ms.
+    pub overhead_ms: f64,
+    /// Log-normal sigma of run-to-run latency jitter.
+    pub noise_sigma: f64,
+    /// Active power draw in watts at full utilisation.
+    pub power_w: f64,
+    /// Multiplier applied to transformer-family models (self-attention
+    /// maps poorly onto fixed-function conv engines).
+    pub transformer_factor: f64,
+}
+
+impl EnginePerf {
+    /// Effective throughput in GFLOP/s for a (proc, scheme, family) triple.
+    pub fn throughput(&self, proc: Proc, scheme: Scheme, family: Family) -> f64 {
+        let base = match scheme {
+            Scheme::Fp32 => self.f32_gflops,
+            Scheme::Fp16 => self.f16_gflops,
+            // DR8 pays the per-tensor dynamic-quantise pass.
+            Scheme::Dr8 => self.int8_gflops * 0.85,
+            Scheme::Fx8 => self.int8_gflops,
+            Scheme::Ffx8 => self.int8_gflops * 1.05, // no float I/O conversions
+        };
+        let family_f = match family {
+            Family::Transformer => self.transformer_factor,
+            Family::Audio | Family::Cnn => 1.0,
+        };
+        base * family_f * cpu_scaling(proc, scheme)
+    }
+
+    /// Mean latency in ms for `flops` of work.
+    pub fn latency_ms(&self, flops: f64, proc: Proc, scheme: Scheme, family: Family) -> f64 {
+        self.overhead_ms + flops / (self.throughput(proc, scheme, family) * 1e6)
+    }
+}
+
+/// CPU multi-threading + XNNPACK scaling. Threads scale sub-linearly
+/// (memory-bound tails, little cores joining at 4+); XNNPACK's optimised
+/// kernels help float graphs ~1.5x and symmetric-int8 graphs ~2x
+/// (paper §6.4).
+fn cpu_scaling(proc: Proc, scheme: Scheme) -> f64 {
+    match proc {
+        Proc::Cpu { threads, xnnpack } => {
+            let t = (threads as f64).powf(0.72);
+            let x = if xnnpack {
+                if scheme.is_integer() { 2.0 } else { 1.5 }
+            } else {
+                1.0
+            };
+            t * x
+        }
+        _ => 1.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn perf() -> EnginePerf {
+        EnginePerf {
+            f32_gflops: 10.0,
+            f16_gflops: 12.0,
+            int8_gflops: 20.0,
+            overhead_ms: 0.5,
+            noise_sigma: 0.05,
+            power_w: 2.0,
+            transformer_factor: 0.6,
+        }
+    }
+
+    #[test]
+    fn thread_scaling_monotone_sublinear() {
+        let p = perf();
+        let l1 = |t| {
+            p.latency_ms(1e9, Proc::Cpu { threads: t, xnnpack: false },
+                         Scheme::Fp32, Family::Cnn)
+        };
+        assert!(l1(1) > l1(2) && l1(2) > l1(4) && l1(4) > l1(8));
+        // sublinear: 8 threads less than 8x faster
+        assert!(l1(1) / l1(8) < 8.0);
+    }
+
+    #[test]
+    fn xnnpack_speeds_up_int8_more() {
+        let p = perf();
+        let lat = |scheme, xnn| {
+            p.latency_ms(1e9, Proc::Cpu { threads: 4, xnnpack: xnn }, scheme,
+                         Family::Cnn)
+        };
+        let f32_gain = lat(Scheme::Fp32, false) / lat(Scheme::Fp32, true);
+        let int8_gain = lat(Scheme::Ffx8, false) / lat(Scheme::Ffx8, true);
+        assert!(int8_gain > f32_gain);
+    }
+
+    #[test]
+    fn transformer_penalty_applies() {
+        let p = perf();
+        let cnn = p.latency_ms(1e9, Proc::Npu, Scheme::Fx8, Family::Cnn);
+        let tfm = p.latency_ms(1e9, Proc::Npu, Scheme::Fx8, Family::Transformer);
+        assert!(tfm > cnn);
+    }
+
+    #[test]
+    fn overhead_dominates_tiny_models() {
+        let p = perf();
+        let l = p.latency_ms(1e3, Proc::Gpu, Scheme::Fp16, Family::Cnn);
+        assert!((l - p.overhead_ms).abs() < 1e-3);
+    }
+}

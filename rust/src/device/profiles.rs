@@ -1,0 +1,244 @@
+//! The three target devices of the paper (Table 6), as calibrated
+//! simulator profiles: Google Pixel 7 (high-end, Tensor G2), Samsung
+//! Galaxy S20 FE (high-end, Exynos 990) and Samsung Galaxy A71 (mid-tier,
+//! Snapdragon 730).
+//!
+//! Throughput figures are *effective* GFLOP/s chosen to reproduce the
+//! structure of the paper's measurements (who wins per scheme, rough
+//! ratios between engines and devices), not vendor peak numbers.
+
+use super::{Engine, EnginePerf};
+
+/// A simulated target device (one row of Table 6).
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub name: &'static str,
+    pub launch: &'static str,
+    pub soc: &'static str,
+    pub ram_gb: f64,
+    pub ram_mhz: u32,
+    pub tdp_w: f64,
+    /// Available compute engines (paper: CE_P7 = CE_S20 = {CPU,GPU,NPU},
+    /// CE_A71 = {CPU,GPU,NPU,DSP}).
+    pub engines: Vec<Engine>,
+    /// A71's Hexagon Tensor Accelerator only runs fixed-point CNNs.
+    pub npu_integer_only: bool,
+    perf: [Option<EnginePerf>; 4],
+    /// Ambient + throttling parameters (°C).
+    pub ambient_c: f64,
+    pub throttle_c: f64,
+}
+
+impl Device {
+    pub fn perf(&self, engine: Engine) -> &EnginePerf {
+        self.perf[engine.index()]
+            .as_ref()
+            .unwrap_or_else(|| panic!("{} has no {}", self.name, engine.name()))
+    }
+
+    pub fn has_engine(&self, engine: Engine) -> bool {
+        self.engines.contains(&engine)
+    }
+
+    /// Total RAM in bytes.
+    pub fn ram_bytes(&self) -> f64 {
+        self.ram_gb * 1e9
+    }
+}
+
+fn perf_slot(
+    cpu: EnginePerf,
+    gpu: EnginePerf,
+    npu: Option<EnginePerf>,
+    dsp: Option<EnginePerf>,
+) -> [Option<EnginePerf>; 4] {
+    [Some(cpu), Some(gpu), npu, dsp]
+}
+
+/// Google Pixel 7 — Tensor G2: 2x2.85 X1 + 2x2.35 A76 + 4x1.80 A55,
+/// Mali-G710 MP7, mobile TPU, 8 GB LPDDR5-3200, 7 W TDP.
+pub fn pixel7() -> Device {
+    Device {
+        name: "Pixel 7",
+        launch: "2022-10",
+        soc: "Tensor G2",
+        ram_gb: 8.0,
+        ram_mhz: 3200,
+        tdp_w: 7.0,
+        engines: vec![Engine::Cpu, Engine::Gpu, Engine::Npu],
+        npu_integer_only: false,
+        perf: perf_slot(
+            EnginePerf {
+                f32_gflops: 22.0, f16_gflops: 24.0, int8_gflops: 40.0,
+                overhead_ms: 0.25, noise_sigma: 0.08, power_w: 1.1,
+                transformer_factor: 0.85,
+            },
+            EnginePerf {
+                f32_gflops: 85.0, f16_gflops: 160.0, int8_gflops: 70.0,
+                overhead_ms: 1.1, noise_sigma: 0.05, power_w: 3.6,
+                transformer_factor: 0.7,
+            },
+            Some(EnginePerf {
+                f32_gflops: 60.0, f16_gflops: 140.0, int8_gflops: 290.0,
+                overhead_ms: 1.6, noise_sigma: 0.04, power_w: 2.2,
+                transformer_factor: 0.45,
+            }),
+            None,
+        ),
+        ambient_c: 28.0,
+        throttle_c: 46.0,
+    }
+}
+
+/// Samsung Galaxy S20 FE — Exynos 990: 2x2.73 M5 + 2x2.50 A76 + 4x2.0 A55,
+/// Mali-G77 MP11, Exynos NPU (EDEN), 6 GB LPDDR5-2750, 9 W TDP.
+pub fn galaxy_s20() -> Device {
+    Device {
+        name: "Galaxy S20 FE",
+        launch: "2020-10",
+        soc: "Exynos 990",
+        ram_gb: 6.0,
+        ram_mhz: 2750,
+        tdp_w: 9.0,
+        engines: vec![Engine::Cpu, Engine::Gpu, Engine::Npu],
+        npu_integer_only: false,
+        perf: perf_slot(
+            EnginePerf {
+                f32_gflops: 17.0, f16_gflops: 18.5, int8_gflops: 30.0,
+                overhead_ms: 0.3, noise_sigma: 0.09, power_w: 1.3,
+                transformer_factor: 0.85,
+            },
+            EnginePerf {
+                f32_gflops: 72.0, f16_gflops: 135.0, int8_gflops: 55.0,
+                overhead_ms: 1.3, noise_sigma: 0.06, power_w: 4.1,
+                transformer_factor: 0.7,
+            },
+            Some(EnginePerf {
+                f32_gflops: 45.0, f16_gflops: 105.0, int8_gflops: 220.0,
+                overhead_ms: 1.8, noise_sigma: 0.05, power_w: 2.4,
+                transformer_factor: 0.4,
+            }),
+            None,
+        ),
+        ambient_c: 28.0,
+        throttle_c: 44.0,
+    }
+}
+
+/// Samsung Galaxy A71 — Snapdragon 730: 2x2.20 + 6x1.80 Kryo 470,
+/// Adreno 618, Hexagon HTA (integer-only) + DSP, 6 GB LPDDR4-1866, 5 W.
+pub fn galaxy_a71() -> Device {
+    Device {
+        name: "Galaxy A71",
+        launch: "2020-01",
+        soc: "Snapdragon 730",
+        ram_gb: 6.0,
+        ram_mhz: 1866,
+        tdp_w: 5.0,
+        engines: vec![Engine::Cpu, Engine::Gpu, Engine::Npu, Engine::Dsp],
+        npu_integer_only: true,
+        perf: perf_slot(
+            EnginePerf {
+                f32_gflops: 8.5, f16_gflops: 9.0, int8_gflops: 15.0,
+                overhead_ms: 0.45, noise_sigma: 0.11, power_w: 0.9,
+                transformer_factor: 0.85,
+            },
+            EnginePerf {
+                f32_gflops: 36.0, f16_gflops: 62.0, int8_gflops: 28.0,
+                overhead_ms: 1.8, noise_sigma: 0.08, power_w: 2.6,
+                transformer_factor: 0.7,
+            },
+            Some(EnginePerf {
+                f32_gflops: 0.0, f16_gflops: 0.0, int8_gflops: 190.0,
+                overhead_ms: 2.2, noise_sigma: 0.05, power_w: 1.6,
+                transformer_factor: 0.35,
+            }),
+            Some(EnginePerf {
+                f32_gflops: 0.0, f16_gflops: 0.0, int8_gflops: 150.0,
+                overhead_ms: 2.0, noise_sigma: 0.04, power_w: 1.2,
+                transformer_factor: 0.35,
+            }),
+        ),
+        ambient_c: 28.0,
+        throttle_c: 42.0,
+    }
+}
+
+/// All three paper devices.
+pub fn all() -> Vec<Device> {
+    vec![galaxy_a71(), galaxy_s20(), pixel7()]
+}
+
+/// Lookup by short name: "p7" | "s20" | "a71".
+pub fn by_name(name: &str) -> Option<Device> {
+    match name.to_ascii_lowercase().as_str() {
+        "p7" | "pixel7" => Some(pixel7()),
+        "s20" | "galaxys20" => Some(galaxy_s20()),
+        "a71" | "galaxya71" => Some(galaxy_a71()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo::registry::Family;
+    use crate::zoo::Scheme;
+    use crate::device::Proc;
+
+    #[test]
+    fn table6_engine_sets() {
+        assert_eq!(pixel7().engines.len(), 3);
+        assert_eq!(galaxy_s20().engines.len(), 3);
+        assert_eq!(galaxy_a71().engines.len(), 4);
+        assert!(galaxy_a71().has_engine(Engine::Dsp));
+        assert!(!pixel7().has_engine(Engine::Dsp));
+    }
+
+    #[test]
+    fn high_end_faster_than_mid_tier() {
+        // same workload, same config: P7 and S20 beat A71 everywhere.
+        let flops = 0.6e9;
+        for engine in [Engine::Cpu, Engine::Gpu] {
+            let l = |d: &Device| {
+                d.perf(engine).latency_ms(
+                    flops,
+                    Proc::Cpu { threads: 4, xnnpack: true },
+                    Scheme::Fp32,
+                    Family::Cnn,
+                )
+            };
+            assert!(l(&pixel7()) < l(&galaxy_a71()), "{}", engine.name());
+            assert!(l(&galaxy_s20()) < l(&galaxy_a71()), "{}", engine.name());
+        }
+    }
+
+    #[test]
+    fn npu_dominates_integer_cnns() {
+        // EfficientNet Lite0 FFX8: NPU >> CPU on every device (the premise
+        // behind Table 7/8's designs).
+        for d in all() {
+            let npu = d.perf(Engine::Npu).latency_ms(
+                0.77e9, Proc::Npu, Scheme::Ffx8, Family::Cnn);
+            let cpu1 = d.perf(Engine::Cpu).latency_ms(
+                0.77e9, Proc::Cpu { threads: 1, xnnpack: false },
+                Scheme::Ffx8, Family::Cnn);
+            assert!(npu < cpu1, "{}", d.name);
+        }
+    }
+
+    #[test]
+    fn gpu_prefers_fp16() {
+        for d in all() {
+            let p = d.perf(Engine::Gpu);
+            assert!(p.f16_gflops > p.f32_gflops, "{}", d.name);
+        }
+    }
+
+    #[test]
+    fn ram_capacity_matches_table6() {
+        assert_eq!(pixel7().ram_gb, 8.0);
+        assert_eq!(galaxy_s20().ram_gb, 6.0);
+        assert_eq!(galaxy_a71().ram_gb, 6.0);
+    }
+}

@@ -1,0 +1,364 @@
+//! Dynamic device simulator: ties the static performance model
+//! ([`super::perf`]) to run-time state — thermal throttling, external
+//! (background) load, co-located multi-DNN contention and RAM pressure.
+//! This is what the profiler samples offline and what the Runtime
+//! Manager monitors online.
+
+use crate::util::Rng;
+use crate::zoo::{Registry, Variant};
+
+use super::memory::{footprint_bytes, RamState};
+use super::thermal::ThermalState;
+use super::{Device, Engine, Proc};
+
+/// One simulated inference outcome.
+#[derive(Debug, Clone, Copy)]
+pub struct InferenceOutcome {
+    pub latency_ms: f64,
+    pub energy_mj: f64,
+}
+
+/// DVFS governor (paper §3.2: the tunable-system-parameter tuple can be
+/// extended with the DVFS governor selection, as in OODIn).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Governor {
+    /// Pins the highest OPP: fastest, hottest.
+    Performance,
+    /// Load-tracking default.
+    #[default]
+    Schedutil,
+    /// Caps the frequency: slow but cool and frugal.
+    Powersave,
+}
+
+impl Governor {
+    /// Clock multiplier applied on top of thermal throttling.
+    pub fn clock_factor(self) -> f64 {
+        match self {
+            Governor::Performance => 1.0,
+            Governor::Schedutil => 0.96,
+            Governor::Powersave => 0.62,
+        }
+    }
+
+    /// Power multiplier (V-f scaling: power falls faster than clock).
+    pub fn power_factor(self) -> f64 {
+        match self {
+            Governor::Performance => 1.15,
+            Governor::Schedutil => 1.0,
+            Governor::Powersave => 0.55,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Governor::Performance => "performance",
+            Governor::Schedutil => "schedutil",
+            Governor::Powersave => "powersave",
+        }
+    }
+}
+
+/// Dynamic device state.
+#[derive(Debug, Clone)]
+pub struct Simulator {
+    pub device: Device,
+    thermal: Vec<ThermalState>,
+    pub ram: RamState,
+    /// External (background) utilisation per engine, 0..1 — injected by
+    /// runtime events (paper §4.3.2 "processor overload").
+    external_load: [f64; 4],
+    /// Simulated wall-clock, seconds.
+    pub now_s: f64,
+    /// Active DVFS governor (device-wide, as Android exposes it).
+    pub governor: Governor,
+    rng: Rng,
+}
+
+impl Simulator {
+    pub fn new(device: Device, seed: u64) -> Self {
+        let thermal = (0..4)
+            .map(|_| ThermalState::new(device.ambient_c, device.throttle_c))
+            .collect();
+        let ram = RamState::new(device.ram_bytes());
+        Simulator {
+            device,
+            thermal,
+            ram,
+            external_load: [0.0; 4],
+            now_s: 0.0,
+            governor: Governor::default(),
+            rng: Rng::new(seed),
+        }
+    }
+
+    pub fn set_governor(&mut self, g: Governor) {
+        self.governor = g;
+    }
+
+    // ---- event-injection surface (used by manager::events) --------------
+
+    pub fn set_external_load(&mut self, engine: Engine, load: f64) {
+        self.external_load[engine.index()] = load.clamp(0.0, 1.0);
+    }
+
+    pub fn external_load(&self, engine: Engine) -> f64 {
+        self.external_load[engine.index()]
+    }
+
+    pub fn set_background_ram(&mut self, bytes: f64) {
+        self.ram.background_bytes = bytes.max(0.0);
+    }
+
+    pub fn thermal(&self, engine: Engine) -> &ThermalState {
+        &self.thermal[engine.index()]
+    }
+
+    /// Force a die temperature (tests / event injection).
+    pub fn set_temperature(&mut self, engine: Engine, temp_c: f64) {
+        self.thermal[engine.index()].temp_c = temp_c;
+    }
+
+    // ---- monitor signals (consumed by the Runtime Manager) ---------------
+
+    /// The paper's `c_ce` boolean: engine overloaded or overheated.
+    pub fn engine_troubled(&self, engine: Engine) -> bool {
+        self.thermal[engine.index()].throttled()
+            || self.external_load[engine.index()] > 0.70
+    }
+
+    /// The paper's `c_m` boolean.
+    pub fn memory_pressured(&self) -> bool {
+        self.ram.pressured()
+    }
+
+    // ---- execution --------------------------------------------------------
+
+    /// Sample the latency of one inference of `variant` on `proc`, given
+    /// `co_located` other DNNs currently mapped to the same engine.
+    /// Does not mutate thermal state (pure sampling; used by the profiler).
+    pub fn sample_latency_ms(
+        &mut self,
+        reg: &Registry,
+        variant: Variant,
+        proc: Proc,
+        co_located: usize,
+    ) -> f64 {
+        let entry = &reg.models[variant.model];
+        let engine = proc.engine();
+        let perf = self.device.perf(engine);
+        let mean = perf.latency_ms(
+            variant.flops(reg) * entry.batch as f64,
+            proc,
+            variant.scheme,
+            entry.family,
+        );
+        let clock = self.thermal[engine.index()].clock_factor()
+            * self.governor.clock_factor();
+        // External load steals cycles; co-located DNNs time-slice the
+        // engine almost linearly (paper §2.1.3).
+        let ext = 1.0 + 1.6 * self.external_load[engine.index()];
+        let co = ((co_located + 1) as f64).powf(0.95);
+        // RAM pressure causes paging stalls once past the monitor threshold.
+        let mem = if self.ram.pressured() { 1.25 } else { 1.0 };
+        let jitter = self.rng.jitter(perf.noise_sigma);
+        mean / clock * ext * co * mem * jitter
+    }
+
+    /// Execute one inference: samples latency, accounts energy, heats the
+    /// engine and advances simulated time.
+    pub fn run_inference(
+        &mut self,
+        reg: &Registry,
+        variant: Variant,
+        proc: Proc,
+        co_located: usize,
+    ) -> InferenceOutcome {
+        let latency_ms = self.sample_latency_ms(reg, variant, proc, co_located);
+        let engine = proc.engine();
+        let power = self.engine_power_w(proc);
+        let energy_mj = power * latency_ms; // W * ms = mJ
+        self.thermal[engine.index()].step(energy_mj / 1000.0, latency_ms / 1000.0);
+        self.now_s += latency_ms / 1000.0;
+        InferenceOutcome { latency_ms, energy_mj }
+    }
+
+    /// Let `dt_s` of idle time pass (engines cool; no work done).
+    pub fn idle(&mut self, dt_s: f64) {
+        for t in &mut self.thermal {
+            t.step(0.0, dt_s);
+        }
+        self.now_s += dt_s;
+    }
+
+    /// Account the memory of a design being loaded/unloaded.
+    pub fn load_app_bytes(&mut self, bytes: f64) {
+        self.ram.app_bytes = bytes.max(0.0);
+    }
+
+    /// Memory footprint of running `variant` on `proc` (deterministic).
+    pub fn footprint_bytes(&self, reg: &Registry, variant: Variant, proc: Proc) -> f64 {
+        footprint_bytes(reg, variant, proc)
+    }
+
+    fn engine_power_w(&self, proc: Proc) -> f64 {
+        let perf = self.device.perf(proc.engine());
+        let base = match proc {
+            Proc::Cpu { threads, .. } => {
+                // per-cluster power: big cores first, diminishing additions.
+                perf.power_w * (threads as f64).powf(0.8)
+            }
+            _ => perf.power_w,
+        };
+        base * self.governor.power_factor()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::zoo::Scheme;
+
+    fn sim() -> (Registry, Simulator) {
+        (Registry::paper(), Simulator::new(profiles::galaxy_s20(), 42))
+    }
+
+    fn mnv2(reg: &Registry) -> Variant {
+        Variant { model: reg.find("MobileNet V2 1.0").unwrap(), scheme: Scheme::Fp32 }
+    }
+
+    #[test]
+    fn latency_positive_and_noisy() {
+        let (reg, mut sim) = sim();
+        let v = mnv2(&reg);
+        let p = Proc::Cpu { threads: 4, xnnpack: true };
+        let samples: Vec<f64> =
+            (0..50).map(|_| sim.sample_latency_ms(&reg, v, p, 0)).collect();
+        assert!(samples.iter().all(|&x| x > 0.0));
+        let s = crate::util::Summary::of(&samples);
+        assert!(s.cv() > 0.01 && s.cv() < 0.5, "cv = {}", s.cv());
+    }
+
+    #[test]
+    fn external_load_slows_inference() {
+        let (reg, mut sim) = sim();
+        let v = mnv2(&reg);
+        let p = Proc::Cpu { threads: 4, xnnpack: true };
+        let base: f64 =
+            (0..40).map(|_| sim.sample_latency_ms(&reg, v, p, 0)).sum::<f64>() / 40.0;
+        sim.set_external_load(Engine::Cpu, 0.9);
+        let loaded: f64 =
+            (0..40).map(|_| sim.sample_latency_ms(&reg, v, p, 0)).sum::<f64>() / 40.0;
+        assert!(loaded > base * 1.5, "{loaded} vs {base}");
+    }
+
+    #[test]
+    fn co_location_slows_inference_monotonically() {
+        let (reg, mut sim) = sim();
+        let v = mnv2(&reg);
+        let p = Proc::Gpu;
+        let avg = |sim: &mut Simulator, k| {
+            (0..40).map(|_| sim.sample_latency_ms(&reg, v, p, k)).sum::<f64>() / 40.0
+        };
+        let l0 = avg(&mut sim, 0);
+        let l1 = avg(&mut sim, 1);
+        let l2 = avg(&mut sim, 2);
+        assert!(l0 < l1 && l1 < l2);
+    }
+
+    #[test]
+    fn sustained_load_triggers_thermal_trouble() {
+        let (reg, mut sim) = sim();
+        let v = Variant {
+            model: reg.find("EfficientNet Lite4").unwrap(),
+            scheme: Scheme::Fp16,
+        };
+        assert!(!sim.engine_troubled(Engine::Gpu));
+        for _ in 0..3000 {
+            sim.run_inference(&reg, v, Proc::Gpu, 0);
+        }
+        assert!(sim.engine_troubled(Engine::Gpu), "temp {}", sim.thermal(Engine::Gpu).temp_c);
+        // and inferences got slower than cold-start ones
+    }
+
+    #[test]
+    fn idle_cools_down() {
+        let (reg, mut sim) = sim();
+        let v = mnv2(&reg);
+        for _ in 0..2000 {
+            sim.run_inference(&reg, v, Proc::Gpu, 0);
+        }
+        let hot = sim.thermal(Engine::Gpu).temp_c;
+        sim.idle(120.0);
+        assert!(sim.thermal(Engine::Gpu).temp_c < hot);
+    }
+
+    #[test]
+    fn energy_scales_with_latency() {
+        let (reg, mut sim) = sim();
+        let small = Variant { model: reg.find("MobileNet V2 1.0").unwrap(), scheme: Scheme::Fp32 };
+        let big = Variant { model: reg.find("EfficientNet Lite4").unwrap(), scheme: Scheme::Fp32 };
+        let p = Proc::Cpu { threads: 4, xnnpack: true };
+        let e_small = sim.run_inference(&reg, small, p, 0).energy_mj;
+        let e_big = sim.run_inference(&reg, big, p, 0).energy_mj;
+        assert!(e_big > e_small);
+    }
+
+    #[test]
+    fn memory_pressure_signal() {
+        let (_, mut sim) = sim();
+        assert!(!sim.memory_pressured());
+        sim.set_background_ram(sim.device.ram_bytes() * 0.62);
+        assert!(sim.memory_pressured());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (reg, mut a) = sim();
+        let mut b = Simulator::new(profiles::galaxy_s20(), 42);
+        let v = mnv2(&reg);
+        let p = Proc::Gpu;
+        for _ in 0..10 {
+            assert_eq!(
+                a.sample_latency_ms(&reg, v, p, 0),
+                b.sample_latency_ms(&reg, v, p, 0)
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod governor_tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::zoo::Scheme;
+
+    #[test]
+    fn powersave_slower_but_frugal() {
+        let reg = Registry::paper();
+        let v = Variant { model: reg.find("MobileNet V2 1.0").unwrap(), scheme: Scheme::Fp32 };
+        let p = Proc::Cpu { threads: 4, xnnpack: true };
+        let run = |g: Governor| {
+            let mut sim = Simulator::new(profiles::galaxy_s20(), 77);
+            sim.set_governor(g);
+            let outs: Vec<_> = (0..40).map(|_| sim.run_inference(&reg, v, p, 0)).collect();
+            let lat = outs.iter().map(|o| o.latency_ms).sum::<f64>() / 40.0;
+            let en = outs.iter().map(|o| o.energy_mj).sum::<f64>() / 40.0;
+            (lat, en)
+        };
+        let (l_perf, e_perf) = run(Governor::Performance);
+        let (l_save, e_save) = run(Governor::Powersave);
+        assert!(l_save > l_perf * 1.3, "powersave {l_save} vs perf {l_perf}");
+        // energy per inference: powersave wins because power drops faster
+        // than the clock (V^2 scaling)
+        assert!(e_save < e_perf, "powersave energy {e_save} vs {e_perf}");
+    }
+
+    #[test]
+    fn governor_default_is_schedutil() {
+        let sim = Simulator::new(profiles::pixel7(), 1);
+        assert_eq!(sim.governor, Governor::Schedutil);
+        assert_eq!(sim.governor.name(), "schedutil");
+    }
+}

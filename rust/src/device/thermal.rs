@@ -1,0 +1,94 @@
+//! First-order thermal model of an SoC engine (paper §4.3.2: sustained
+//! overload raises the die temperature until thermal throttling cuts the
+//! clock). A simple RC model reproduces the trigger/recovery dynamics the
+//! Runtime Manager must react to.
+
+/// Thermal state of one engine.
+#[derive(Debug, Clone)]
+pub struct ThermalState {
+    /// Current die temperature, °C.
+    pub temp_c: f64,
+    pub ambient_c: f64,
+    pub throttle_c: f64,
+    /// °C gained per joule dissipated.
+    pub heat_per_joule: f64,
+    /// Fraction of the excess-over-ambient shed per second.
+    pub cooling_rate: f64,
+}
+
+impl ThermalState {
+    pub fn new(ambient_c: f64, throttle_c: f64) -> Self {
+        ThermalState {
+            temp_c: ambient_c,
+            ambient_c,
+            throttle_c,
+            heat_per_joule: 0.9,
+            cooling_rate: 0.12,
+        }
+    }
+
+    /// Advance the model: `energy_j` dissipated over `dt_s` seconds.
+    pub fn step(&mut self, energy_j: f64, dt_s: f64) {
+        self.temp_c += energy_j * self.heat_per_joule;
+        let excess = self.temp_c - self.ambient_c;
+        self.temp_c -= excess * (1.0 - (-self.cooling_rate * dt_s).exp());
+        self.temp_c = self.temp_c.max(self.ambient_c);
+    }
+
+    /// Clock multiplier in (0, 1]: 1.0 below the throttle threshold,
+    /// degrading linearly to a 0.45 floor 12 °C above it.
+    pub fn clock_factor(&self) -> f64 {
+        if self.temp_c <= self.throttle_c {
+            1.0
+        } else {
+            let over = ((self.temp_c - self.throttle_c) / 12.0).min(1.0);
+            (1.0 - 0.55 * over).max(0.45)
+        }
+    }
+
+    pub fn throttled(&self) -> bool {
+        self.temp_c > self.throttle_c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heats_under_load_and_cools_idle() {
+        let mut t = ThermalState::new(28.0, 44.0);
+        for _ in 0..100 {
+            t.step(0.5, 0.05); // 10 W sustained
+        }
+        assert!(t.temp_c > 35.0, "temp {}", t.temp_c);
+        let hot = t.temp_c;
+        for _ in 0..200 {
+            t.step(0.0, 0.5); // idle
+        }
+        assert!(t.temp_c < hot);
+        assert!(t.temp_c >= t.ambient_c);
+    }
+
+    #[test]
+    fn clock_floor_never_below_045() {
+        let mut t = ThermalState::new(28.0, 44.0);
+        t.temp_c = 200.0;
+        assert!(t.clock_factor() >= 0.45);
+    }
+
+    #[test]
+    fn no_throttle_below_threshold() {
+        let t = ThermalState::new(28.0, 44.0);
+        assert_eq!(t.clock_factor(), 1.0);
+        assert!(!t.throttled());
+    }
+
+    #[test]
+    fn throttle_engages_above_threshold() {
+        let mut t = ThermalState::new(28.0, 44.0);
+        t.temp_c = 50.0;
+        assert!(t.throttled());
+        assert!(t.clock_factor() < 1.0);
+    }
+}

@@ -1,0 +1,243 @@
+//! Figures 3–6: optimality of CARIn designs vs the baselines, per device
+//! and per available state (single processor for single-DNN problems,
+//! processor combination for multi-DNN problems).
+
+use crate::config;
+use crate::device::{profiles, Engine};
+use crate::moo::baselines::{self, BaselineResult};
+use crate::moo::{rass, Problem};
+use crate::zoo::Registry;
+
+/// One bar of a figure: (device, state, method) -> optimality.
+#[derive(Debug, Clone)]
+pub struct FigureRow {
+    pub device: String,
+    /// Engine-set label, e.g. "CPU" or "CPU+DSP".
+    pub state: String,
+    pub method: String,
+    /// `None` = the method failed to produce a feasible/applicable
+    /// solution (the patterned "!"/"N/A" bars of the paper).
+    pub optimality: Option<f64>,
+    /// True when this state holds the device's initial design d_0.
+    pub is_d0: bool,
+}
+
+fn engine_label(es: &[Engine]) -> String {
+    es.iter().map(|e| e.name()).collect::<Vec<_>>().join("+")
+}
+
+fn baseline_row(
+    p: &Problem,
+    device: &str,
+    state: &str,
+    r: &BaselineResult,
+    is_d0: bool,
+) -> FigureRow {
+    FigureRow {
+        device: device.into(),
+        state: state.into(),
+        method: r.label.clone(),
+        optimality: r.config.as_ref().map(|c| baselines::optimality_of(p, c)),
+        is_d0,
+    }
+}
+
+/// Single-DNN figures (Fig. 3 = UC1, Fig. 4 = UC2): per device, per
+/// single-processor state, CARIn vs B-A / B-S / transferred / OODIn.
+pub fn figure_single(uc: &str, reg: &Registry) -> Vec<FigureRow> {
+    let mut rows = Vec::new();
+    let devices = profiles::all();
+    for dev in &devices {
+        let p = config::use_case(uc, reg, dev).expect("use case");
+        let full = rass::solve(&p);
+        let d0_engines = full.designs[0].config.engine_set();
+        for engine in &dev.engines {
+            let state = engine_label(&[*engine]);
+            let sub = baselines::restrict_to_engines(&p, &[*engine]);
+            let feasible_exists = sub.space.iter().any(|x| sub.feasible(x));
+            let is_d0 = d0_engines == vec![*engine];
+            // CARIn: best design within this state.
+            if feasible_exists {
+                let sol = rass::solve(&sub);
+                rows.push(FigureRow {
+                    device: dev.name.into(),
+                    state: state.clone(),
+                    method: "CARIn".into(),
+                    // measure in the FULL problem's objective stats so
+                    // numbers are comparable across states
+                    optimality: Some(baselines::optimality_of(&p, &sol.designs[0].config)),
+                    is_d0,
+                });
+            } else {
+                rows.push(FigureRow {
+                    device: dev.name.into(),
+                    state: state.clone(),
+                    method: "CARIn".into(),
+                    optimality: None,
+                    is_d0,
+                });
+                continue;
+            }
+            // Baselines, restricted to the same state.
+            rows.push(baseline_row(&p, dev.name, &state,
+                &baselines::single_architecture(&sub, true), is_d0));
+            rows.push(baseline_row(&p, dev.name, &state,
+                &baselines::single_architecture(&sub, false), is_d0));
+            rows.push(baseline_row(&p, dev.name, &state, &baselines::oodin(&sub), is_d0));
+            // Transferred from the other two devices.
+            for src_dev in &devices {
+                if src_dev.name == dev.name {
+                    continue;
+                }
+                let src = config::use_case(uc, reg, src_dev).expect("use case");
+                let src_sub = baselines::restrict_to_engines(&src, &[*engine]);
+                let r = if src_sub.space.iter().any(|x| src_sub.feasible(x)) {
+                    baselines::transferred(&sub, &src_sub)
+                } else {
+                    BaselineResult {
+                        config: None,
+                        solve_time: std::time::Duration::ZERO,
+                        label: format!("T_{}", src_dev.name),
+                    }
+                };
+                rows.push(baseline_row(&p, dev.name, &state, &r, is_d0));
+            }
+        }
+    }
+    rows
+}
+
+/// Multi-DNN figures (Fig. 5 = UC3, Fig. 6 = UC4): per device, per
+/// processor *combination*, CARIn vs multi-DNN-unaware / transferred /
+/// OODIn. For UC4 only the top-5 combinations per device are reported
+/// (as in the paper).
+pub fn figure_multi(uc: &str, reg: &Registry, top: Option<usize>) -> Vec<FigureRow> {
+    let mut rows = Vec::new();
+    let devices = profiles::all();
+    for dev in &devices {
+        let p = config::use_case(uc, reg, dev).expect("use case");
+        let full = rass::solve(&p);
+        let d0_engines = full.designs[0].config.engine_set();
+        // enumerate engine combinations present in the space
+        let mut combos: Vec<Vec<Engine>> = Vec::new();
+        for x in &p.space {
+            let es = x.engine_set();
+            if !combos.contains(&es) {
+                combos.push(es);
+            }
+        }
+        // rank combos by CARIn optimality
+        let mut scored: Vec<(Vec<Engine>, Option<f64>)> = combos
+            .into_iter()
+            .map(|es| {
+                let sub = baselines::restrict_to_engines(&p, &es);
+                let opt = if sub.space.iter().any(|x| sub.feasible(x)) {
+                    let sol = rass::solve(&sub);
+                    Some(baselines::optimality_of(&p, &sol.designs[0].config))
+                } else {
+                    None
+                };
+                (es, opt)
+            })
+            .collect();
+        scored.sort_by(|a, b| {
+            b.1.unwrap_or(f64::NEG_INFINITY)
+                .partial_cmp(&a.1.unwrap_or(f64::NEG_INFINITY))
+                .unwrap()
+        });
+        if let Some(k) = top {
+            scored.truncate(k);
+        }
+        for (es, carin_opt) in &scored {
+            let state = engine_label(es);
+            let is_d0 = d0_engines == *es;
+            rows.push(FigureRow {
+                device: dev.name.into(),
+                state: state.clone(),
+                method: "CARIn".into(),
+                optimality: *carin_opt,
+                is_d0,
+            });
+            let sub = baselines::restrict_to_engines(&p, es);
+            rows.push(baseline_row(&p, dev.name, &state,
+                &baselines::multi_dnn_unaware(&sub), is_d0));
+            rows.push(baseline_row(&p, dev.name, &state, &baselines::oodin(&sub), is_d0));
+            for src_dev in &devices {
+                if src_dev.name == dev.name {
+                    continue;
+                }
+                let src = config::use_case(uc, reg, src_dev).expect("use case");
+                let src_sub = baselines::restrict_to_engines(&src, es);
+                let r = if src_sub.space.iter().any(|x| src_sub.feasible(x)) {
+                    baselines::transferred(&sub, &src_sub)
+                } else {
+                    BaselineResult {
+                        config: None,
+                        solve_time: std::time::Duration::ZERO,
+                        label: format!("T_{}", src_dev.name),
+                    }
+                };
+                rows.push(baseline_row(&p, dev.name, &state, &r, is_d0));
+            }
+        }
+    }
+    rows
+}
+
+/// Aggregate improvement ratios of CARIn over a baseline method across a
+/// row set (the §7.1.2 "takeaway" numbers: average and maximum gain).
+pub fn gain_over(rows: &[FigureRow], method: &str) -> Option<(f64, f64)> {
+    let mut ratios = Vec::new();
+    for r in rows.iter().filter(|r| r.method == method) {
+        if let Some(base) = r.optimality {
+            if let Some(carin) = rows
+                .iter()
+                .find(|c| {
+                    c.method == "CARIn" && c.device == r.device && c.state == r.state
+                })
+                .and_then(|c| c.optimality)
+            {
+                if base.is_finite() && carin.is_finite() && base > 0.0 {
+                    ratios.push(carin / base);
+                }
+            }
+        }
+    }
+    if ratios.is_empty() {
+        return None;
+    }
+    let avg = ratios.iter().sum::<f64>() / ratios.len() as f64;
+    let max = ratios.iter().copied().fold(f64::MIN, f64::max);
+    Some((avg, max))
+}
+
+/// Pretty-print figure rows grouped by device/state.
+pub fn render(rows: &[FigureRow]) -> String {
+    let mut out = String::new();
+    let mut keys: Vec<(String, String)> = Vec::new();
+    for r in rows {
+        let k = (r.device.clone(), r.state.clone());
+        if !keys.contains(&k) {
+            keys.push(k);
+        }
+    }
+    for (dev, state) in keys {
+        let d0 = rows
+            .iter()
+            .any(|r| r.device == dev && r.state == state && r.is_d0);
+        out.push_str(&format!(
+            "{dev} / {state}{}\n",
+            if d0 { "  [d0]" } else { "" }
+        ));
+        for r in rows.iter().filter(|r| r.device == dev && r.state == state) {
+            match r.optimality {
+                Some(o) if o.is_finite() => {
+                    out.push_str(&format!("  {:12} {:>8.3}\n", r.method, o))
+                }
+                Some(_) => out.push_str(&format!("  {:12} {:>8}\n", r.method, "inf")),
+                None => out.push_str(&format!("  {:12} {:>8}\n", r.method, "FAIL")),
+            }
+        }
+    }
+    out
+}

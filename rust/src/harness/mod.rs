@@ -1,0 +1,54 @@
+//! Evaluation harness: regenerates every table and figure of the paper's
+//! §7 as text rows (the same quantities the paper plots), so each bench
+//! target maps 1:1 to a paper artefact. See DESIGN.md §5 for the index.
+
+pub mod figures;
+pub mod tables;
+
+pub use figures::{figure_multi, figure_single, FigureRow};
+pub use tables::{table10_storage, table7_8_designs, table9_solve_time};
+
+/// Render a markdown-ish table.
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for r in rows {
+        for (i, c) in r.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let line = |cells: &[String], widths: &[usize]| -> String {
+        let mut s = String::from("|");
+        for (c, w) in cells.iter().zip(widths) {
+            s.push_str(&format!(" {:<w$} |", c, w = w));
+        }
+        s.push('\n');
+        s
+    };
+    out.push_str(&line(
+        &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+        &widths,
+    ));
+    out.push_str(&line(
+        &widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>(),
+        &widths,
+    ));
+    for r in rows {
+        out.push_str(&line(r, &widths));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn render_aligns() {
+        let t = super::render_table(
+            &["a", "bbbb"],
+            &[vec!["xx".into(), "y".into()]],
+        );
+        assert!(t.contains("| xx | y    |"));
+    }
+}

@@ -1,0 +1,175 @@
+//! Tables 7–10: design/switching-policy dumps, solver timing and storage
+//! comparisons.
+
+use std::time::Instant;
+
+use crate::config;
+use crate::device::profiles;
+use crate::moo::baselines;
+use crate::moo::rass::{self, EnvState};
+use crate::moo::{Problem, Solution};
+use crate::util::Rng;
+use crate::zoo::Registry;
+
+/// Tables 7/8: the selected designs and the switching policy for a
+/// (use case, device) pair, rendered like the paper's rows.
+pub fn table7_8_designs(p: &Problem, sol: &Solution) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Designs for {} on {} (|X'| = {}, solved in {:?}):\n",
+        p.name, p.device.name, sol.feasible_count, sol.solve_time
+    ));
+    for (i, d) in sol.designs.iter().enumerate() {
+        out.push_str(&format!("  D[{i}] {}\n", d.describe(p)));
+    }
+    out.push_str("Switching policy (state -> design):\n");
+    let engines = &sol.policy.engines;
+    let hdr: Vec<String> = engines
+        .iter()
+        .map(|e| format!("c_{}", e.name()))
+        .chain(std::iter::once("c_m".to_string()))
+        .collect();
+    out.push_str(&format!("  {}  -> design\n", hdr.join(" ")));
+    for (state, didx) in sol.policy.iter_states() {
+        let cells: Vec<String> = engines
+            .iter()
+            .map(|e| if state.is_troubled(*e) { "T".to_string() } else { "F".to_string() })
+            .chain(std::iter::once(if state.memory { "T".into() } else { "F".into() }))
+            .collect();
+        let roles = sol.designs[didx].roles.join(",");
+        out.push_str(&format!("  {}   -> d[{didx}] ({roles})\n", cells.join("   ")));
+    }
+    out
+}
+
+/// Table 9: OODIn's (weighted-sum, re-solved per event) solving time in
+/// ms over synthetic decision spaces of increasing dimension, versus the
+/// RASS policy lookup the RM performs instead. Reports (avg, max) per
+/// dimension over `reps` repetitions.
+pub struct Table9Row {
+    pub dimension: usize,
+    pub oodin_avg_ms: f64,
+    pub oodin_max_ms: f64,
+    pub rass_lookup_avg_ns: f64,
+}
+
+pub fn table9_solve_time(dims: &[usize], reps: usize, n_obj: usize) -> Vec<Table9Row> {
+    let mut rng = Rng::new(99);
+    let mut out = Vec::new();
+    // a real policy to time lookups against
+    let reg = Registry::paper();
+    let p = config::use_case("uc1", &reg, &profiles::galaxy_s20()).unwrap();
+    let sol = rass::solve(&p);
+    for &dim in dims {
+        // synthetic objective matrix, dim x n_obj
+        let vectors: Vec<Vec<f64>> = (0..dim)
+            .map(|_| (0..n_obj).map(|_| rng.range(0.0, 100.0)).collect())
+            .collect();
+        let mut times = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            std::hint::black_box(baselines::weighted_sum_argmax(&p, &vectors));
+            times.push(t0.elapsed().as_secs_f64() * 1000.0);
+        }
+        // time policy lookups
+        let states: Vec<EnvState> = sol.policy.iter_states().map(|(s, _)| s).collect();
+        let t0 = Instant::now();
+        let n_lookups = 10_000;
+        for i in 0..n_lookups {
+            std::hint::black_box(sol.policy.design_for(states[i % states.len()]));
+        }
+        let lookup_ns = t0.elapsed().as_nanos() as f64 / n_lookups as f64;
+        out.push(Table9Row {
+            dimension: dim,
+            oodin_avg_ms: times.iter().sum::<f64>() / times.len() as f64,
+            oodin_max_ms: times.iter().copied().fold(f64::MIN, f64::max),
+            rass_lookup_avg_ns: lookup_ns,
+        });
+    }
+    out
+}
+
+/// Table 10: storage requirements (MB) — CARIn stores only the models of
+/// the RASS design set; OODIn must keep every candidate variant resident.
+pub struct Table10Row {
+    pub use_case: String,
+    pub device: String,
+    pub carin_mb: f64,
+    pub oodin_mb: f64,
+    pub reduction: f64,
+}
+
+pub fn table10_storage(reg: &Registry) -> Vec<Table10Row> {
+    let mut rows = Vec::new();
+    for uc in config::USE_CASES {
+        for dev in profiles::all() {
+            let p = config::use_case(uc, reg, &dev).unwrap();
+            let sol = rass::solve(&p);
+            // CARIn: unique variants across the design set
+            let mut seen = Vec::new();
+            let mut carin = 0.0;
+            for d in &sol.designs {
+                for a in &d.config.assignments {
+                    if !seen.contains(&a.variant) {
+                        seen.push(a.variant);
+                        carin += a.variant.size_bytes(reg);
+                    }
+                }
+            }
+            // OODIn: every variant of every task's candidate set
+            let mut oodin = 0.0;
+            for &task in &p.tasks {
+                for v in reg.variants_for_task(task) {
+                    oodin += v.size_bytes(reg);
+                }
+            }
+            rows.push(Table10Row {
+                use_case: uc.to_string(),
+                device: dev.name.to_string(),
+                carin_mb: carin / 1e6,
+                oodin_mb: oodin / 1e6,
+                reduction: oodin / carin.max(1.0),
+            });
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table9_oodin_grows_with_dimension() {
+        let rows = table9_solve_time(&[500, 5000], 5, 4);
+        assert_eq!(rows.len(), 2);
+        assert!(rows[1].oodin_avg_ms > rows[0].oodin_avg_ms);
+        // RASS lookup is orders of magnitude below OODIn's best case
+        for r in &rows {
+            assert!(r.rass_lookup_avg_ns / 1e6 < r.oodin_avg_ms / 10.0);
+        }
+    }
+
+    #[test]
+    fn table10_carin_always_smaller() {
+        let reg = Registry::paper();
+        for r in table10_storage(&reg) {
+            assert!(
+                r.carin_mb < r.oodin_mb,
+                "{}/{}: {} !< {}",
+                r.use_case, r.device, r.carin_mb, r.oodin_mb
+            );
+            assert!(r.reduction > 1.0);
+        }
+    }
+
+    #[test]
+    fn designs_table_renders() {
+        let reg = Registry::paper();
+        let p = config::use_case("uc1", &reg, &profiles::galaxy_s20()).unwrap();
+        let sol = rass::solve(&p);
+        let s = table7_8_designs(&p, &sol);
+        assert!(s.contains("Switching policy"));
+        assert!(s.contains("d0"));
+    }
+}

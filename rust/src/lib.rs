@@ -1,0 +1,59 @@
+//! # carin — Constraint-Aware and Responsive Inference
+//!
+//! Rust reproduction of **CARIn** (Panopoulos, Venieris & Venieris, *ACM
+//! TECS* 23(4), 2024, DOI 10.1145/3665868): a framework for deploying
+//! single- and multi-DNN workloads on heterogeneous devices under
+//! user-defined service-level objectives (SLOs).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): the tiled int8 /
+//!   f32 matmul hot-spot every zoo model lowers onto.
+//! * **L2** — JAX models (`python/compile/model.py`): the executable model
+//!   zoo, AOT-lowered once to HLO text + `.npz` weights.
+//! * **L3** — this crate: MOO problem construction ([`moo`]), the RASS
+//!   solver ([`moo::rass`]), baseline solvers ([`moo::baselines`]), the
+//!   heterogeneous-device simulator ([`device`]), profiling ([`profiler`]),
+//!   the PJRT runtime ([`runtime`]), the Runtime Manager ([`manager`]) and
+//!   the serving coordinator ([`coordinator`]).
+//!
+//! Python never runs on the request path: `make artifacts` lowers the zoo
+//! once, and the rust binary is self-contained afterwards.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use carin::prelude::*;
+//!
+//! // Formulate UC1 (real-time image classification) for the Galaxy S20.
+//! let zoo = carin::zoo::Registry::paper();
+//! let device = carin::device::profiles::by_name("s20").unwrap();
+//! let problem = carin::config::use_case("uc1", &zoo, &device).unwrap();
+//! let solution = carin::moo::rass::solve(&problem);
+//! println!("initial design: {}", solution.designs[0].describe(&problem));
+//! ```
+
+pub mod bench;
+pub mod config;
+pub mod config_spec;
+pub mod coordinator;
+pub mod device;
+pub mod harness;
+pub mod manager;
+pub mod moo;
+pub mod profiler;
+pub mod runtime;
+pub mod util;
+pub mod workload;
+pub mod zoo;
+
+pub mod prelude {
+    //! Convenience re-exports for examples and tests.
+    pub use crate::config;
+    pub use crate::device::{profiles, Device, Engine};
+    pub use crate::manager::{Event, RuntimeManager};
+    pub use crate::moo::{
+        baselines, rass, Metric, Objective, Problem, Solution, Statistic,
+    };
+    pub use crate::zoo::{Registry, Scheme};
+}

@@ -1,0 +1,336 @@
+//! carin — CLI launcher.
+//!
+//! Subcommands (hand-rolled parser; clap is not in the offline registry):
+//!
+//! ```text
+//! carin solve   --uc uc1 --device s20       # designs + switching policy (Tables 7/8)
+//! carin eval    --uc uc1 [--summary]        # figure rows (Figs 3-6) + takeaway ratios
+//! carin trace   --uc uc1 --device s20       # runtime-adaptation trace (Figs 7/8)
+//! carin serve   --uc uc1 --device s20 -n 96 # real PJRT serving over artifacts/
+//! carin zoo     [--uc uc1]                  # model registry dump (Tables 2-5)
+//! carin devices                             # device profiles (Table 6)
+//! carin storage                             # Table 10
+//! carin solvetime                           # Table 9
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use carin::config;
+use carin::coordinator::{run_trace, ServingCoordinator};
+use carin::device::profiles;
+use carin::harness::{self, figures, tables};
+use carin::manager::EventSchedule;
+use carin::moo::rass;
+use carin::runtime::load_manifest;
+use carin::workload;
+use carin::zoo::{Registry, Scheme};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        usage();
+        return;
+    }
+    let cmd = args[0].clone();
+    let opts = parse_opts(&args[1..]);
+    let result = match cmd.as_str() {
+        "solve" => cmd_solve(&opts),
+        "eval" => cmd_eval(&opts),
+        "trace" => cmd_trace(&opts),
+        "serve" => cmd_serve(&opts),
+        "zoo" => cmd_zoo(&opts),
+        "devices" => cmd_devices(),
+        "storage" => cmd_storage(),
+        "solvetime" => cmd_solvetime(),
+        "-h" | "--help" | "help" => {
+            usage();
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command {other}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    println!(
+        "carin — Constraint-Aware and Responsive Inference (ACM TECS 2024 reproduction)\n\
+         usage: carin <solve|eval|trace|serve|zoo|devices|storage|solvetime> [--uc ucN] [--device p7|s20|a71] [-n N]"
+    );
+}
+
+fn parse_opts(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                m.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                m.insert(key.to_string(), "true".into());
+                i += 1;
+            }
+        } else if a == "-n" && i + 1 < args.len() {
+            m.insert("n".into(), args[i + 1].clone());
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    m
+}
+
+fn device_of(opts: &HashMap<String, String>) -> Result<carin::device::Device> {
+    let name = opts.get("device").map(|s| s.as_str()).unwrap_or("s20");
+    profiles::by_name(name).ok_or_else(|| anyhow!("unknown device {name} (p7|s20|a71)"))
+}
+
+fn cmd_solve(opts: &HashMap<String, String>) -> Result<()> {
+    let uc = opts.get("uc").map(|s| s.as_str()).unwrap_or("uc1");
+    let dev = device_of(opts)?;
+    let reg = Registry::paper();
+    let p = config::use_case(uc, &reg, &dev).ok_or_else(|| anyhow!("unknown uc {uc}"))?;
+    let sol = rass::solve(&p);
+    println!("{}", tables::table7_8_designs(&p, &sol));
+    Ok(())
+}
+
+fn cmd_eval(opts: &HashMap<String, String>) -> Result<()> {
+    let reg = Registry::paper();
+    let ucs: Vec<&str> = match opts.get("uc").map(|s| s.as_str()) {
+        Some("all") | None => vec!["uc1", "uc2", "uc3", "uc4"],
+        Some(u) => vec![u],
+    };
+    for uc in ucs {
+        println!("==== {} ====", uc);
+        let rows = match uc {
+            "uc1" | "uc2" => figures::figure_single(uc, &reg),
+            "uc3" => figures::figure_multi(uc, &reg, None),
+            "uc4" => figures::figure_multi(uc, &reg, Some(5)),
+            other => return Err(anyhow!("unknown uc {other}")),
+        };
+        println!("{}", figures::render(&rows));
+        if opts.contains_key("summary") {
+            for method in [
+                "B-A",
+                "B-S",
+                "OODIn",
+                "unaware",
+                "T_Pixel 7",
+                "T_Galaxy S20 FE",
+                "T_Galaxy A71",
+            ] {
+                if let Some((avg, max)) = figures::gain_over(&rows, method) {
+                    println!("gain over {method:16}: avg {avg:.2}x  max {max:.2}x");
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_trace(opts: &HashMap<String, String>) -> Result<()> {
+    let uc = opts.get("uc").map(|s| s.as_str()).unwrap_or("uc1");
+    let dev = device_of(opts)?;
+    let reg = Registry::paper();
+    let p = config::use_case(uc, &reg, &dev).ok_or_else(|| anyhow!("unknown uc {uc}"))?;
+    let sol = rass::solve(&p);
+    println!("{}", tables::table7_8_designs(&p, &sol));
+    let sched = if p.is_multi() {
+        EventSchedule::figure8(p.device.ram_bytes())
+    } else {
+        EventSchedule::figure7(p.device.ram_bytes())
+    };
+    let log = run_trace(&p, sol, sched, 32.0, 1.0 / 24.0, 11);
+    println!(
+        "trace: {} rounds, {} switches, mean decision {:.0} ns",
+        log.points.len(),
+        log.switches,
+        log.mean_decision_ns
+    );
+    // condensed timeline: one line per second + every switch/event
+    let mut next_mark = 0.0;
+    for pt in &log.points {
+        let show = pt.switched_to.is_some() || !pt.events.is_empty() || pt.t_s >= next_mark;
+        if !show {
+            continue;
+        }
+        next_mark = pt.t_s + 1.0;
+        let ev = if pt.events.is_empty() {
+            String::new()
+        } else {
+            format!("  !! {}", pt.events.join("; "))
+        };
+        let sw = match pt.switched_to {
+            Some(d) => format!("  -> switch to d[{d}]"),
+            None => String::new(),
+        };
+        println!(
+            "t={:6.2}s design=d[{}] lat={:6.2}ms tp={:6.1}/s acc={:.2} mem={:6.1}MB{}{}",
+            pt.t_s,
+            pt.design,
+            pt.latency_ms[0],
+            pt.throughput,
+            pt.accuracy[0],
+            pt.mem_mb,
+            ev,
+            sw
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
+    let uc = opts.get("uc").map(|s| s.as_str()).unwrap_or("uc1");
+    let dev = device_of(opts)?;
+    let n: usize = opts.get("n").map(|s| s.parse()).transpose()?.unwrap_or(96);
+    let reg = Registry::paper();
+    let p = config::use_case(uc, &reg, &dev).ok_or_else(|| anyhow!("unknown uc {uc}"))?;
+    let sol = rass::solve(&p);
+    println!("design d0: {}", sol.designs[0].describe(&p));
+    let manifest = load_manifest(std::path::Path::new("artifacts"))?;
+    let mut coord = ServingCoordinator::new(&reg, &sol, manifest)?;
+    println!("preloaded {} model variants on PJRT CPU", coord.loaded_models());
+    let (tx, rx) = std::sync::mpsc::channel();
+    let producers = workload::spawn_producers(workload::for_use_case(uc, n), tx, 5, 0.02);
+    let report = coord.serve(rx)?;
+    for h in producers {
+        let _ = h.join();
+    }
+    for t in &report.tasks {
+        println!(
+            "task {} [{}]: {} done, exec mean {:.2} ms p95 {:.2} ms, e2e mean {:.2} ms",
+            t.task,
+            t.artifact,
+            t.completed,
+            t.latency_ms.mean,
+            t.latency_ms.percentile(95.0),
+            t.e2e_ms.mean
+        );
+    }
+    println!(
+        "served {} requests in {:.2}s -> {:.1} req/s",
+        report.total_requests, report.wall_s, report.throughput_rps
+    );
+    Ok(())
+}
+
+fn cmd_zoo(opts: &HashMap<String, String>) -> Result<()> {
+    let reg = Registry::paper();
+    let filter = opts.get("uc").map(|s| s.as_str());
+    let mut rows = Vec::new();
+    for (i, m) in reg.models.iter().enumerate() {
+        let uc = match m.task {
+            carin::zoo::Task::ImageCls => "uc1",
+            carin::zoo::Task::TextCls => "uc2",
+            carin::zoo::Task::SceneCls | carin::zoo::Task::AudioCls => "uc3",
+            _ => "uc4",
+        };
+        if let Some(f) = filter {
+            if f != "all" && f != uc {
+                continue;
+            }
+        }
+        let accs: Vec<String> = Scheme::ALL
+            .iter()
+            .map(|s| match m.accuracy[s.index()] {
+                Some(a) => format!("{a:.2}"),
+                None => "-".into(),
+            })
+            .collect();
+        rows.push(vec![
+            i.to_string(),
+            m.name.to_string(),
+            uc.into(),
+            format!("{:.2}G", m.gflops),
+            format!("{:.2}M", m.mparams),
+            accs.join("/"),
+            m.artifact.to_string(),
+        ]);
+    }
+    println!(
+        "{}",
+        harness::render_table(
+            &["#", "model", "uc", "FLOPs", "params", "acc fp32/fp16/dr8/fx8/ffx8", "artifact"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+fn cmd_devices() -> Result<()> {
+    let rows: Vec<Vec<String>> = profiles::all()
+        .iter()
+        .map(|d| {
+            vec![
+                d.name.to_string(),
+                d.soc.to_string(),
+                d.launch.to_string(),
+                format!("{:.0} GB", d.ram_gb),
+                format!("{} MHz", d.ram_mhz),
+                format!("{:.0} W", d.tdp_w),
+                d.engines.iter().map(|e| e.name()).collect::<Vec<_>>().join("+"),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        harness::render_table(
+            &["device", "SoC", "launch", "RAM", "RAM clk", "TDP", "engines"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+fn cmd_storage() -> Result<()> {
+    let reg = Registry::paper();
+    let rows: Vec<Vec<String>> = tables::table10_storage(&reg)
+        .iter()
+        .map(|r| {
+            vec![
+                r.use_case.clone(),
+                r.device.clone(),
+                format!("{:.2}", r.carin_mb),
+                format!("{:.2}", r.oodin_mb),
+                format!("{:.2}x", r.reduction),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        harness::render_table(
+            &["uc", "device", "CARIn MB", "OODIn MB", "reduction"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+fn cmd_solvetime() -> Result<()> {
+    let rows: Vec<Vec<String>> = tables::table9_solve_time(&[500, 2000, 5000, 10000], 20, 4)
+        .iter()
+        .map(|r| {
+            vec![
+                r.dimension.to_string(),
+                format!("{:.3}", r.oodin_avg_ms),
+                format!("{:.3}", r.oodin_max_ms),
+                format!("{:.0}", r.rass_lookup_avg_ns),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        harness::render_table(
+            &["|X|", "OODIn avg ms", "OODIn max ms", "RASS lookup ns"],
+            &rows
+        )
+    );
+    Ok(())
+}

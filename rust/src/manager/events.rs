@@ -1,0 +1,135 @@
+//! Runtime-challenge injection (paper §4.3.2): scripted schedules of
+//! processor overload/overheat and RAM-pressure events, replayed against
+//! the device simulator to exercise the Runtime Manager.
+
+use crate::device::simulator::Governor;
+use crate::device::{Engine, Simulator};
+
+/// One environmental change.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Event {
+    /// Background process pins `load` (0..1) of an engine.
+    EngineLoad { engine: Engine, load: f64 },
+    /// Force a die temperature (overheat / cool-down).
+    Temperature { engine: Engine, temp_c: f64 },
+    /// Background apps now hold `bytes` of RAM.
+    BackgroundRam { bytes: f64 },
+    /// The OS switched the DVFS governor (thermal policy, battery saver).
+    Governor { governor: Governor },
+}
+
+impl Event {
+    pub fn apply(&self, sim: &mut Simulator) {
+        match *self {
+            Event::EngineLoad { engine, load } => sim.set_external_load(engine, load),
+            Event::Temperature { engine, temp_c } => sim.set_temperature(engine, temp_c),
+            Event::BackgroundRam { bytes } => sim.set_background_ram(bytes),
+            Event::Governor { governor } => sim.set_governor(governor),
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        match *self {
+            Event::EngineLoad { engine, load } => {
+                format!("{} load -> {:.0}%", engine.name(), load * 100.0)
+            }
+            Event::Temperature { engine, temp_c } => {
+                format!("{} temp -> {temp_c:.0}°C", engine.name())
+            }
+            Event::BackgroundRam { bytes } => {
+                format!("background RAM -> {:.0} MB", bytes / 1e6)
+            }
+            Event::Governor { governor } => {
+                format!("governor -> {}", governor.name())
+            }
+        }
+    }
+}
+
+/// A time-ordered schedule of events (seconds on the simulated clock).
+#[derive(Debug, Clone, Default)]
+pub struct EventSchedule {
+    items: Vec<(f64, Event)>,
+}
+
+impl EventSchedule {
+    pub fn new(mut items: Vec<(f64, Event)>) -> Self {
+        items.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        EventSchedule { items }
+    }
+
+    /// Pop and apply every event due at or before `now_s`. Returns the
+    /// applied events.
+    pub fn apply_due(&mut self, sim: &mut Simulator, now_s: f64) -> Vec<Event> {
+        let mut applied = Vec::new();
+        while let Some(&(t, e)) = self.items.first() {
+            if t > now_s {
+                break;
+            }
+            e.apply(sim);
+            applied.push(e);
+            self.items.remove(0);
+        }
+        applied
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.items.len()
+    }
+
+    /// The Figure-7 scenario (UC1 on S20): gradual CPU overload, then a
+    /// memory squeeze, then recovery.
+    pub fn figure7(ram_total: f64) -> EventSchedule {
+        EventSchedule::new(vec![
+            (5.0, Event::EngineLoad { engine: Engine::Cpu, load: 0.45 }),
+            (8.0, Event::EngineLoad { engine: Engine::Cpu, load: 0.85 }),
+            (14.0, Event::EngineLoad { engine: Engine::Cpu, load: 0.0 }),
+            (16.0, Event::BackgroundRam { bytes: ram_total * 0.62 }),
+            (24.0, Event::BackgroundRam { bytes: ram_total * 0.15 }),
+        ])
+    }
+
+    /// The Figure-8 scenario (UC3 on A71): the fixed-function accelerator
+    /// carrying the vision model overloads (audio capture pipelines also
+    /// contend for it, §7.2.2), forcing a migration; a RAM squeeze then
+    /// selects the memory-efficient design; both recover; the accelerator
+    /// overloads again.
+    pub fn figure8(ram_total: f64) -> EventSchedule {
+        EventSchedule::new(vec![
+            (4.0, Event::EngineLoad { engine: Engine::Npu, load: 0.9 }),
+            (10.0, Event::BackgroundRam { bytes: ram_total * 0.60 }),
+            (18.0, Event::BackgroundRam { bytes: ram_total * 0.15 }),
+            (20.0, Event::EngineLoad { engine: Engine::Npu, load: 0.0 }),
+            (28.0, Event::EngineLoad { engine: Engine::Npu, load: 0.9 }),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+
+    #[test]
+    fn schedule_applies_in_order() {
+        let mut sim = Simulator::new(profiles::galaxy_a71(), 1);
+        let mut sched = EventSchedule::new(vec![
+            (2.0, Event::EngineLoad { engine: Engine::Cpu, load: 0.5 }),
+            (1.0, Event::EngineLoad { engine: Engine::Gpu, load: 0.3 }),
+        ]);
+        assert!(sched.apply_due(&mut sim, 0.5).is_empty());
+        let a = sched.apply_due(&mut sim, 1.5);
+        assert_eq!(a.len(), 1);
+        assert!(matches!(a[0], Event::EngineLoad { engine: Engine::Gpu, .. }));
+        let b = sched.apply_due(&mut sim, 10.0);
+        assert_eq!(b.len(), 1);
+        assert_eq!(sched.remaining(), 0);
+        assert!(sim.external_load(Engine::Cpu) > 0.4);
+    }
+
+    #[test]
+    fn figure_scenarios_nonempty() {
+        assert!(EventSchedule::figure7(6e9).remaining() >= 4);
+        assert!(EventSchedule::figure8(6e9).remaining() >= 5);
+    }
+}

@@ -1,0 +1,12 @@
+//! The Runtime Manager (RM) and its monitoring loop (paper §3.2, §7.2):
+//! watches the environment booleans `(c_ce.., c_m)` coming from the
+//! device monitor and swaps execution plans through the RASS switching
+//! policy — a constant-time table lookup, no re-solving.
+
+pub mod events;
+pub mod monitor;
+pub mod rm;
+
+pub use events::{Event, EventSchedule};
+pub use monitor::Monitor;
+pub use rm::{RuntimeManager, SwitchRecord};

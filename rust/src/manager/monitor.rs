@@ -1,0 +1,111 @@
+//! Environment monitor: samples the device state into the boolean vector
+//! `(c_ce.., c_m)` the switching policy is indexed with (paper §4.3.4:
+//! "several system parameters ... need to be continuously monitored").
+//!
+//! A hysteresis window debounces the signals so transient spikes do not
+//! cause design thrash.
+
+use crate::device::{Engine, Simulator};
+use crate::moo::rass::EnvState;
+
+/// Debouncing monitor over the simulator's raw signals.
+#[derive(Debug, Clone)]
+pub struct Monitor {
+    engines: Vec<Engine>,
+    /// Consecutive samples a signal must hold before it flips.
+    hold: usize,
+    counts_on: Vec<usize>,
+    counts_off: Vec<usize>,
+    mem_on: usize,
+    mem_off: usize,
+    state: EnvState,
+}
+
+impl Monitor {
+    pub fn new(engines: Vec<Engine>, hold: usize) -> Self {
+        let n = engines.len();
+        Monitor {
+            engines,
+            hold,
+            counts_on: vec![0; n],
+            counts_off: vec![0; n],
+            mem_on: 0,
+            mem_off: 0,
+            state: EnvState::calm(),
+        }
+    }
+
+    pub fn state(&self) -> EnvState {
+        self.state
+    }
+
+    /// Sample the simulator; returns the (debounced) state.
+    pub fn sample(&mut self, sim: &Simulator) -> EnvState {
+        let mut next = self.state;
+        for (i, &e) in self.engines.iter().enumerate() {
+            let raw = sim.engine_troubled(e);
+            if raw {
+                self.counts_on[i] += 1;
+                self.counts_off[i] = 0;
+                if self.counts_on[i] >= self.hold && !next.is_troubled(e) {
+                    next = next.with_engine(e);
+                }
+            } else {
+                self.counts_off[i] += 1;
+                self.counts_on[i] = 0;
+                if self.counts_off[i] >= self.hold && next.is_troubled(e) {
+                    next.troubled &= !(1 << e.index());
+                }
+            }
+        }
+        let raw_mem = sim.memory_pressured();
+        if raw_mem {
+            self.mem_on += 1;
+            self.mem_off = 0;
+            if self.mem_on >= self.hold {
+                next.memory = true;
+            }
+        } else {
+            self.mem_off += 1;
+            self.mem_on = 0;
+            if self.mem_off >= self.hold {
+                next.memory = false;
+            }
+        }
+        self.state = next;
+        next
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+
+    #[test]
+    fn debounce_holds_transients() {
+        let dev = profiles::galaxy_s20();
+        let mut sim = Simulator::new(dev.clone(), 1);
+        let mut mon = Monitor::new(dev.engines.clone(), 3);
+        sim.set_external_load(Engine::Cpu, 0.9);
+        // needs 3 consecutive samples to flip
+        assert!(!mon.sample(&sim).is_troubled(Engine::Cpu));
+        assert!(!mon.sample(&sim).is_troubled(Engine::Cpu));
+        assert!(mon.sample(&sim).is_troubled(Engine::Cpu));
+        // single calm sample does not clear it
+        sim.set_external_load(Engine::Cpu, 0.0);
+        assert!(mon.sample(&sim).is_troubled(Engine::Cpu));
+        mon.sample(&sim);
+        assert!(!mon.sample(&sim).is_troubled(Engine::Cpu));
+    }
+
+    #[test]
+    fn memory_signal_tracks_pressure() {
+        let dev = profiles::galaxy_s20();
+        let mut sim = Simulator::new(dev.clone(), 1);
+        let mut mon = Monitor::new(dev.engines.clone(), 1);
+        assert!(!mon.sample(&sim).memory);
+        sim.set_background_ram(sim.device.ram_bytes() * 0.62);
+        assert!(mon.sample(&sim).memory);
+    }
+}

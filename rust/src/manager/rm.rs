@@ -1,0 +1,131 @@
+//! The Runtime Manager proper: consumes monitor states, looks the new
+//! design up in the RASS switching policy (O(1)) and records switch
+//! latencies — the paper's headline adaptation-overhead claim (§7.2.3:
+//! OODIn re-solves in 0.5–34 ms; CARIn switches "instantaneously").
+
+use std::time::Instant;
+
+use crate::moo::rass::EnvState;
+use crate::moo::Solution;
+
+/// One recorded design switch.
+#[derive(Debug, Clone)]
+pub struct SwitchRecord {
+    pub sim_time_s: f64,
+    pub from: usize,
+    pub to: usize,
+    pub state: EnvState,
+    /// Wall-clock the decision took (policy lookup only).
+    pub decision_ns: u128,
+}
+
+/// Runtime Manager: the online half of CARIn (Algorithm 1 lines 13–18).
+pub struct RuntimeManager {
+    pub solution: Solution,
+    current: usize,
+    last_state: EnvState,
+    pub switches: Vec<SwitchRecord>,
+}
+
+impl RuntimeManager {
+    pub fn new(solution: Solution) -> Self {
+        let current = solution.policy.design_for(EnvState::calm());
+        RuntimeManager {
+            solution,
+            current,
+            last_state: EnvState::calm(),
+            switches: Vec::new(),
+        }
+    }
+
+    pub fn current_design(&self) -> usize {
+        self.current
+    }
+
+    /// Feed a monitor state; returns `Some(new design)` when the RM
+    /// switched. The decision is a pure policy lookup — its latency is
+    /// recorded per switch for the Table-9 comparison.
+    pub fn observe(&mut self, state: EnvState, sim_time_s: f64) -> Option<usize> {
+        if state == self.last_state {
+            return None;
+        }
+        let t0 = Instant::now();
+        let next = self.solution.policy.design_for(state);
+        let decision_ns = t0.elapsed().as_nanos();
+        self.last_state = state;
+        if next != self.current {
+            self.switches.push(SwitchRecord {
+                sim_time_s,
+                from: self.current,
+                to: next,
+                state,
+                decision_ns,
+            });
+            self.current = next;
+            return Some(next);
+        }
+        None
+    }
+
+    /// Mean decision latency across recorded switches (ns).
+    pub fn mean_decision_ns(&self) -> f64 {
+        if self.switches.is_empty() {
+            return 0.0;
+        }
+        self.switches.iter().map(|s| s.decision_ns as f64).sum::<f64>()
+            / self.switches.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::device::profiles;
+    use crate::device::Engine;
+    use crate::moo::rass;
+    use crate::zoo::Registry;
+
+    fn rm() -> RuntimeManager {
+        let p = config::use_case("uc1", &Registry::paper(), &profiles::galaxy_s20())
+            .unwrap();
+        RuntimeManager::new(rass::solve(&p))
+    }
+
+    #[test]
+    fn starts_on_d0() {
+        let m = rm();
+        assert!(m.solution.designs[m.current_design()].roles.contains(&"d0"));
+    }
+
+    #[test]
+    fn switches_on_state_change_only() {
+        let mut m = rm();
+        assert!(m.observe(EnvState::calm(), 0.0).is_none());
+        let troubled = EnvState::calm().with_engine(Engine::Cpu);
+        let d = m.observe(troubled, 1.0);
+        assert!(d.is_some());
+        // same state again: no new switch
+        assert!(m.observe(troubled, 2.0).is_none());
+        // recovery goes back to d0
+        let back = m.observe(EnvState::calm(), 3.0).unwrap();
+        assert!(m.solution.designs[back].roles.contains(&"d0"));
+        assert_eq!(m.switches.len(), 2);
+    }
+
+    #[test]
+    fn decision_is_sub_microsecond() {
+        let mut m = rm();
+        m.observe(EnvState::calm().with_engine(Engine::Cpu), 0.0);
+        m.observe(EnvState::calm().with_memory(), 1.0);
+        // policy lookups must be far below OODIn's 0.55 ms best case
+        assert!(m.mean_decision_ns() < 100_000.0, "{} ns", m.mean_decision_ns());
+    }
+
+    #[test]
+    fn memory_state_selects_dm() {
+        let mut m = rm();
+        let d = m.observe(EnvState::calm().with_memory(), 0.0).unwrap();
+        assert!(m.solution.designs[d].roles.contains(&"dm"));
+    }
+}

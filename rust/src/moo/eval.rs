@@ -1,0 +1,230 @@
+//! Objective-function evaluation (Algorithm 1 line 8): turn a
+//! configuration into the full metric set `F_single` / `F_multi` using
+//! the profile cache, applying the contention model for multi-DNN
+//! configurations.
+
+use crate::profiler::stats::{contention_factor, scale};
+use crate::util::Summary;
+
+use super::space::Config;
+use super::{Metric, Problem, Statistic};
+
+/// All metrics of one task under a given configuration.
+#[derive(Debug, Clone)]
+pub struct TaskMetrics {
+    pub size_bytes: f64,
+    pub flops: f64,
+    pub accuracy: f64,
+    /// Contention-adjusted latency distribution (ms).
+    pub latency_ms: Summary,
+    /// Solo (single-DNN mode) mean latency — the `L_i^S` of §4.1.2.
+    pub solo_latency_ms: f64,
+    pub energy_mj: Summary,
+    pub mf_bytes: f64,
+    /// Normalised turnaround time `NTT_i = L_i^M / L_i^S >= 1`.
+    pub ntt: f64,
+    /// Samples per second (batch / avg latency).
+    pub throughput: f64,
+}
+
+/// Metrics of a full configuration.
+#[derive(Debug, Clone)]
+pub struct ConfigMetrics {
+    pub tasks: Vec<TaskMetrics>,
+    /// System throughput `STP = Σ 1/NTT_i` (max = M).
+    pub stp: f64,
+    /// Fairness `F = min_{i,j} NP_i/NP_j ∈ [0, 1]`.
+    pub fairness: f64,
+}
+
+impl ConfigMetrics {
+    /// Extract a scalar for (metric, stat, task scope).
+    ///
+    /// Per-task metrics with `task == None` on multi-DNN problems
+    /// aggregate across tasks: additive metrics (S, W, MF, TP) sum;
+    /// the rest average. NTT with `task == None` follows the paper's
+    /// "average or maximum NTT" convention via `stat`.
+    pub fn value(&self, metric: Metric, stat: Statistic, task: Option<usize>) -> f64 {
+        match metric {
+            Metric::Stp => return self.stp,
+            Metric::Fairness => return self.fairness,
+            Metric::Ntt => {
+                let vals: Vec<f64> = self.tasks.iter().map(|t| t.ntt).collect();
+                return match stat {
+                    Statistic::Max => vals.iter().copied().fold(f64::MIN, f64::max),
+                    Statistic::Min => vals.iter().copied().fold(f64::MAX, f64::min),
+                    _ => vals.iter().sum::<f64>() / vals.len() as f64,
+                };
+            }
+            _ => {}
+        }
+        match task {
+            Some(t) => self.task_value(t, metric, stat),
+            None => {
+                if self.tasks.len() == 1 {
+                    self.task_value(0, metric, stat)
+                } else {
+                    let vals: Vec<f64> = (0..self.tasks.len())
+                        .map(|t| self.task_value(t, metric, stat))
+                        .collect();
+                    match metric {
+                        Metric::Size | Metric::Workload | Metric::MemFootprint
+                        | Metric::Throughput => vals.iter().sum(),
+                        _ => vals.iter().sum::<f64>() / vals.len() as f64,
+                    }
+                }
+            }
+        }
+    }
+
+    fn task_value(&self, t: usize, metric: Metric, stat: Statistic) -> f64 {
+        let tm = &self.tasks[t];
+        match metric {
+            Metric::Size => tm.size_bytes,
+            Metric::Workload => tm.flops,
+            Metric::Accuracy => tm.accuracy,
+            Metric::Latency => stat_of(&tm.latency_ms, stat),
+            Metric::Throughput => tm.throughput,
+            Metric::Energy => stat_of(&tm.energy_mj, stat),
+            Metric::MemFootprint => tm.mf_bytes,
+            Metric::Stp | Metric::Ntt | Metric::Fairness => unreachable!(),
+        }
+    }
+
+    /// Total memory footprint across tasks (bytes).
+    pub fn total_mf_bytes(&self) -> f64 {
+        self.tasks.iter().map(|t| t.mf_bytes).sum()
+    }
+
+    /// Total workload across tasks (FLOPs).
+    pub fn total_flops(&self) -> f64 {
+        self.tasks.iter().map(|t| t.flops).sum()
+    }
+}
+
+fn stat_of(s: &Summary, stat: Statistic) -> f64 {
+    match stat {
+        Statistic::Min => s.min,
+        Statistic::Max => s.max,
+        Statistic::Avg => s.mean,
+        Statistic::Std => s.std,
+        Statistic::Percentile(p) => s.percentile(p),
+    }
+}
+
+/// Evaluate a configuration against a problem's profile cache.
+pub fn evaluate(p: &Problem, x: &Config) -> ConfigMetrics {
+    // Solver-hot-path micro-optimisation: the energy *distribution* is
+    // only materialised when some objective or constraint reads E.
+    let uses_energy = p
+        .objectives
+        .iter()
+        .map(|o| o.metric)
+        .chain(p.constraints.iter().map(|c| c.metric))
+        .any(|m| m == Metric::Energy);
+    let mut tasks = Vec::with_capacity(x.assignments.len());
+    for (t, a) in x.assignments.iter().enumerate() {
+        let point = p.cache.get(a.variant, a.proc);
+        let entry = &p.registry.models[a.variant.model];
+        let c = contention_factor(x.co_located(t));
+        let latency = if c == 1.0 {
+            point.latency_ms.clone()
+        } else {
+            scale(&point.latency_ms, c)
+        };
+        let throughput = entry.batch as f64 / latency.mean * 1000.0;
+        let energy = if !uses_energy {
+            Summary::of(&[point.energy_mj.mean * c])
+        } else if c == 1.0 {
+            point.energy_mj.clone()
+        } else {
+            scale(&point.energy_mj, c)
+        };
+        tasks.push(TaskMetrics {
+            size_bytes: a.variant.size_bytes(&p.registry),
+            flops: a.variant.flops(&p.registry),
+            accuracy: a.variant.accuracy(&p.registry).unwrap_or(f64::NAN),
+            solo_latency_ms: point.latency_ms.mean,
+            latency_ms: latency,
+            energy_mj: energy,
+            mf_bytes: point.mf_bytes,
+            ntt: c,
+            throughput,
+        });
+    }
+    let nps: Vec<f64> = tasks.iter().map(|t| 1.0 / t.ntt).collect();
+    let stp: f64 = nps.iter().sum();
+    let fairness = if nps.len() < 2 {
+        1.0
+    } else {
+        let min = nps.iter().copied().fold(f64::MAX, f64::min);
+        let max = nps.iter().copied().fold(f64::MIN, f64::max);
+        min / max
+    };
+    ConfigMetrics { tasks, stp, fairness }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::device::profiles;
+    use crate::zoo::Registry;
+
+    fn uc3_problem() -> Problem {
+        config::use_case("uc3", &Registry::paper(), &profiles::galaxy_a71()).unwrap()
+    }
+
+    #[test]
+    fn multi_metrics_invariants() {
+        let p = uc3_problem();
+        for x in p.space.iter().take(200) {
+            let m = p.metrics(x);
+            assert_eq!(m.tasks.len(), 2);
+            for t in &m.tasks {
+                assert!(t.ntt >= 1.0);
+                assert!(t.latency_ms.mean >= t.solo_latency_ms * 0.999);
+            }
+            assert!(m.stp <= 2.0 + 1e-9);
+            assert!((0.0..=1.0 + 1e-9).contains(&m.fairness));
+            // STP = sum of 1/NTT
+            let stp: f64 = m.tasks.iter().map(|t| 1.0 / t.ntt).sum();
+            assert!((m.stp - stp).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn same_engine_colocation_reduces_stp() {
+        let p = uc3_problem();
+        let shared = p
+            .space
+            .iter()
+            .find(|x| x.engine_set().len() == 1)
+            .expect("some config shares an engine");
+        let split = p
+            .space
+            .iter()
+            .find(|x| x.engine_set().len() == 2)
+            .expect("some config splits engines");
+        let ms = p.metrics(shared);
+        let mp = p.metrics(split);
+        assert!(ms.stp < mp.stp);
+        assert!(ms.tasks[0].ntt > 1.0);
+        assert!((mp.tasks[0].ntt - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn aggregation_rules() {
+        let p = uc3_problem();
+        let x = &p.space[0];
+        let m = p.metrics(x);
+        let total_size = m.value(Metric::Size, Statistic::Avg, None);
+        assert!(
+            (total_size - (m.tasks[0].size_bytes + m.tasks[1].size_bytes)).abs() < 1e-6
+        );
+        let avg_acc = m.value(Metric::Accuracy, Statistic::Avg, None);
+        assert!(
+            (avg_acc - (m.tasks[0].accuracy + m.tasks[1].accuracy) / 2.0).abs() < 1e-9
+        );
+    }
+}

@@ -1,0 +1,275 @@
+//! The multi-objective-optimisation framework of the paper (§4): SLO
+//! modelling, decision-space construction, objective evaluation, the
+//! RASS solver and the comparison baselines.
+
+pub mod baselines;
+pub mod eval;
+pub mod nsga2;
+pub mod optimality;
+pub mod pareto;
+pub mod rass;
+pub mod space;
+
+pub use eval::{ConfigMetrics, TaskMetrics};
+pub use space::Config;
+
+use crate::device::Device;
+use crate::profiler::ProfileCache;
+use crate::zoo::registry::Task;
+use crate::zoo::Registry;
+
+/// DNN-specific performance metrics (paper §4.1.1–4.1.2).
+///
+/// `F_single = {S, W, A, L, TP, E, MF}`;
+/// `F_multi  = F_single(i) ∪ {STP, NTT, F}`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Metric {
+    /// Model size (bytes stored).
+    Size,
+    /// Workload (FLOPs).
+    Workload,
+    /// Task accuracy (higher-better, task-specific units).
+    Accuracy,
+    /// Inference latency (ms).
+    Latency,
+    /// Throughput (samples/s).
+    Throughput,
+    /// Energy per inference (mJ).
+    Energy,
+    /// Memory footprint (bytes).
+    MemFootprint,
+    /// System throughput (multi-DNN; max = M).
+    Stp,
+    /// Normalised turnaround time (multi-DNN; >= 1, lower-better).
+    Ntt,
+    /// Fairness (multi-DNN; [0,1], higher-better).
+    Fairness,
+}
+
+impl Metric {
+    /// Whether larger values are better (drives the utopia point, §4.3.1).
+    pub fn higher_is_better(self) -> bool {
+        matches!(
+            self,
+            Metric::Accuracy | Metric::Throughput | Metric::Stp | Metric::Fairness
+        )
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Metric::Size => "S",
+            Metric::Workload => "W",
+            Metric::Accuracy => "A",
+            Metric::Latency => "L",
+            Metric::Throughput => "TP",
+            Metric::Energy => "E",
+            Metric::MemFootprint => "MF",
+            Metric::Stp => "STP",
+            Metric::Ntt => "NTT",
+            Metric::Fairness => "F",
+        }
+    }
+}
+
+/// The statistic a narrow SLO bounds (paper §4.1: min/max/avg/std/p-th).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Statistic {
+    Min,
+    Max,
+    Avg,
+    Std,
+    Percentile(f64),
+}
+
+impl Statistic {
+    pub fn name(self) -> String {
+        match self {
+            Statistic::Min => "min".into(),
+            Statistic::Max => "max".into(),
+            Statistic::Avg => "avg".into(),
+            Statistic::Std => "std".into(),
+            Statistic::Percentile(p) => format!("p{p}"),
+        }
+    }
+}
+
+/// A broad SLO: `<min/max, p>` becomes an objective function (§4.1).
+#[derive(Debug, Clone, Copy)]
+pub struct Objective {
+    pub metric: Metric,
+    /// Statistic used for sampled metrics (Avg unless stated).
+    pub stat: Statistic,
+    /// Task index for per-task metrics in multi-DNN problems; `None`
+    /// for system-level metrics (STP, NTT, F) or single-DNN problems.
+    pub task: Option<usize>,
+    /// User-supplied weight `w_i` in the optimality distance (§4.3.1).
+    pub weight: f64,
+}
+
+impl Objective {
+    pub fn new(metric: Metric) -> Objective {
+        Objective { metric, stat: Statistic::Avg, task: None, weight: 1.0 }
+    }
+
+    pub fn stat(mut self, stat: Statistic) -> Objective {
+        self.stat = stat;
+        self
+    }
+
+    pub fn task(mut self, t: usize) -> Objective {
+        self.task = Some(t);
+        self
+    }
+
+    pub fn weight(mut self, w: f64) -> Objective {
+        self.weight = w;
+        self
+    }
+
+    pub fn describe(&self) -> String {
+        let dir = if self.metric.higher_is_better() { "max" } else { "min" };
+        match self.task {
+            Some(t) => format!("{} {}({})[task{}]", dir, self.stat.name(), self.metric.name(), t),
+            None => format!("{} {}({})", dir, self.stat.name(), self.metric.name()),
+        }
+    }
+}
+
+/// A narrow SLO: `<stat, p, v>` becomes an inequality constraint
+/// `g(x) = stat(p)(x) - v <= 0` (or `v - stat(p)(x)` for higher-better
+/// metrics) (§4.1).
+#[derive(Debug, Clone, Copy)]
+pub struct Constraint {
+    pub metric: Metric,
+    pub stat: Statistic,
+    /// Task index; `None` applies the constraint to *every* task.
+    pub task: Option<usize>,
+    pub bound: f64,
+}
+
+impl Constraint {
+    /// g(x) <= 0 iff satisfied.
+    pub fn violation(&self, m: &ConfigMetrics) -> f64 {
+        let worst: f64 = match self.task {
+            Some(t) => m.value(self.metric, self.stat, Some(t)),
+            None => {
+                if m.tasks.len() == 1 || matches!(self.metric, Metric::Stp | Metric::Ntt | Metric::Fairness) {
+                    m.value(self.metric, self.stat, None)
+                } else {
+                    // applies to every task: take the worst task
+                    let vals = (0..m.tasks.len())
+                        .map(|t| m.value(self.metric, self.stat, Some(t)));
+                    if self.metric.higher_is_better() {
+                        vals.fold(f64::INFINITY, f64::min)
+                    } else {
+                        vals.fold(f64::NEG_INFINITY, f64::max)
+                    }
+                }
+            }
+        };
+        if self.metric.higher_is_better() {
+            self.bound - worst
+        } else {
+            worst - self.bound
+        }
+    }
+
+    pub fn satisfied(&self, m: &ConfigMetrics) -> bool {
+        self.violation(m) <= 0.0
+    }
+
+    pub fn describe(&self) -> String {
+        let op = if self.metric.higher_is_better() { ">=" } else { "<=" };
+        let scope = match self.task {
+            Some(t) => format!("[task{t}]"),
+            None => String::new(),
+        };
+        format!("{}({}){} {} {}", self.stat.name(), self.metric.name(), scope, op, self.bound)
+    }
+}
+
+/// A fully-formulated device-specific MOO problem (paper §4.1):
+/// decision space, objectives, constraints and the profile cache that
+/// backs objective evaluation.
+pub struct Problem {
+    pub name: String,
+    pub tasks: Vec<Task>,
+    pub device: Device,
+    pub registry: Registry,
+    pub objectives: Vec<Objective>,
+    pub constraints: Vec<Constraint>,
+    /// Enumerated decision space X (before constraints).
+    pub space: Vec<Config>,
+    pub cache: ProfileCache,
+}
+
+impl Problem {
+    pub fn is_multi(&self) -> bool {
+        self.tasks.len() > 1
+    }
+
+    /// Evaluate every objective for configuration `x` (paper line 8 of
+    /// Algorithm 1). Returns the objective vector in declaration order.
+    pub fn objective_vector(&self, x: &Config) -> Vec<f64> {
+        self.objective_vector_of(&self.metrics(x))
+    }
+
+    /// Objective vector from pre-evaluated metrics (the solver hot path
+    /// evaluates each configuration exactly once and reuses the metrics
+    /// for feasibility, objectives and the d_m/d_w searches).
+    pub fn objective_vector_of(&self, m: &ConfigMetrics) -> Vec<f64> {
+        self.objectives
+            .iter()
+            .map(|o| m.value(o.metric, o.stat, o.task))
+            .collect()
+    }
+
+    /// Constraint check on pre-evaluated metrics.
+    pub fn feasible_metrics(&self, m: &ConfigMetrics) -> bool {
+        self.constraints.iter().all(|c| c.satisfied(m))
+    }
+
+    pub fn metrics(&self, x: &Config) -> ConfigMetrics {
+        eval::evaluate(self, x)
+    }
+
+    /// Does `x` satisfy every constraint?
+    pub fn feasible(&self, x: &Config) -> bool {
+        let m = self.metrics(x);
+        self.constraints.iter().all(|c| c.satisfied(&m))
+    }
+}
+
+/// Solver output (paper §4.3.4): the design set `D` and the switching
+/// policy `SP` handed to the Runtime Manager.
+#[derive(Debug, Clone)]
+pub struct Solution {
+    /// Selected designs; index 0 is the initial design `d_0`.
+    pub designs: Vec<Design>,
+    pub policy: rass::SwitchingPolicy,
+    /// Size of the constrained space |X'| the solver worked on.
+    pub feasible_count: usize,
+    /// Solve wall-clock, for Table 9 comparisons.
+    pub solve_time: std::time::Duration,
+}
+
+/// One design: a configuration plus its solver-time annotations.
+#[derive(Debug, Clone)]
+pub struct Design {
+    pub config: Config,
+    pub optimality: f64,
+    /// Role labels: "d0", "d1", "d2", "dm", "dw" (a design may hold
+    /// several roles when argmins coincide, e.g. `d_wm ≡ d_w`).
+    pub roles: Vec<&'static str>,
+}
+
+impl Design {
+    pub fn describe(&self, p: &Problem) -> String {
+        format!(
+            "{} (opt {:.3}) [{}]",
+            self.config.describe(&p.registry),
+            self.optimality,
+            self.roles.join(",")
+        )
+    }
+}

@@ -1,0 +1,196 @@
+//! Optimality metric (paper §4.3.1): the reciprocal of the scaled,
+//! weighted Mahalanobis distance between a solution's objective vector
+//! and the problem's utopia point.
+
+use super::{Problem, space::Config};
+
+/// Per-objective statistics over the (constrained) decision space,
+/// needed by the distance: utopia component, variance, and min/max for
+/// the d_max normaliser.
+#[derive(Debug, Clone)]
+pub struct ObjectiveStats {
+    pub utopia: Vec<f64>,
+    pub variance: Vec<f64>,
+    pub min: Vec<f64>,
+    pub max: Vec<f64>,
+    pub weights: Vec<f64>,
+    pub higher: Vec<bool>,
+}
+
+impl ObjectiveStats {
+    /// Compute the stats from the objective vectors of the constrained
+    /// space X'.
+    pub fn from_vectors(problem: &Problem, vectors: &[Vec<f64>]) -> ObjectiveStats {
+        let n_obj = problem.objectives.len();
+        assert!(!vectors.is_empty(), "empty constrained space");
+        let mut min = vec![f64::INFINITY; n_obj];
+        let mut max = vec![f64::NEG_INFINITY; n_obj];
+        let mut mean = vec![0.0; n_obj];
+        for v in vectors {
+            for i in 0..n_obj {
+                min[i] = min[i].min(v[i]);
+                max[i] = max[i].max(v[i]);
+                mean[i] += v[i];
+            }
+        }
+        for m in &mut mean {
+            *m /= vectors.len() as f64;
+        }
+        let mut variance = vec![0.0; n_obj];
+        for v in vectors {
+            for i in 0..n_obj {
+                let d = v[i] - mean[i];
+                variance[i] += d * d;
+            }
+        }
+        for v in &mut variance {
+            *v /= vectors.len() as f64;
+        }
+        let higher: Vec<bool> =
+            problem.objectives.iter().map(|o| o.metric.higher_is_better()).collect();
+        let utopia: Vec<f64> = (0..n_obj)
+            .map(|i| if higher[i] { max[i] } else { min[i] })
+            .collect();
+        let weights = problem.objectives.iter().map(|o| o.weight).collect();
+        ObjectiveStats { utopia, variance, min, max, weights, higher }
+    }
+
+    /// Weighted Mahalanobis distance to the utopia point.
+    pub fn distance(&self, v: &[f64]) -> f64 {
+        let mut d2 = 0.0;
+        for i in 0..v.len() {
+            if self.variance[i] <= 1e-24 {
+                continue; // constant objective contributes nothing
+            }
+            let diff = v[i] - self.utopia[i];
+            d2 += self.weights[i] * self.weights[i] * diff * diff / self.variance[i];
+        }
+        d2.sqrt()
+    }
+
+    /// Maximum possible distance (paper's d_max normaliser).
+    pub fn d_max(&self) -> f64 {
+        let mut d2 = 0.0;
+        for i in 0..self.utopia.len() {
+            if self.variance[i] <= 1e-24 {
+                continue;
+            }
+            let diff = self.max[i] - self.min[i];
+            d2 += self.weights[i] * self.weights[i] * diff * diff / self.variance[i];
+        }
+        d2.sqrt()
+    }
+
+    /// `opt(x) = 1 / d_s(x) = d_max / d(x) ∈ [1, +inf)`.
+    pub fn optimality(&self, v: &[f64]) -> f64 {
+        let dmax = self.d_max();
+        if dmax <= 1e-24 {
+            return 1.0; // degenerate: all solutions identical
+        }
+        let d = self.distance(v);
+        if d <= 1e-24 {
+            f64::INFINITY // solution sits on the utopia point
+        } else {
+            dmax / d
+        }
+    }
+}
+
+/// Optimality of every configuration in `configs` under `problem`.
+pub fn optimalities(problem: &Problem, configs: &[Config]) -> Vec<f64> {
+    let vectors: Vec<Vec<f64>> =
+        configs.iter().map(|c| problem.objective_vector(c)).collect();
+    let stats = ObjectiveStats::from_vectors(problem, &vectors);
+    vectors.iter().map(|v| stats.optimality(v)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::device::profiles;
+    use crate::zoo::Registry;
+
+    fn stats2(vectors: &[Vec<f64>], higher: Vec<bool>, weights: Vec<f64>) -> ObjectiveStats {
+        // build a synthetic stats object without a Problem
+        let n = vectors[0].len();
+        let mut min = vec![f64::INFINITY; n];
+        let mut max = vec![f64::NEG_INFINITY; n];
+        let mut mean = vec![0.0; n];
+        for v in vectors {
+            for i in 0..n {
+                min[i] = min[i].min(v[i]);
+                max[i] = max[i].max(v[i]);
+                mean[i] += v[i];
+            }
+        }
+        for m in &mut mean {
+            *m /= vectors.len() as f64;
+        }
+        let mut variance = vec![0.0; n];
+        for v in vectors {
+            for i in 0..n {
+                variance[i] += (v[i] - mean[i]).powi(2);
+            }
+        }
+        for v in &mut variance {
+            *v /= vectors.len() as f64;
+        }
+        let utopia = (0..n).map(|i| if higher[i] { max[i] } else { min[i] }).collect();
+        ObjectiveStats { utopia, variance, min, max, weights, higher }
+    }
+
+    #[test]
+    fn utopia_solution_gets_infinite_optimality() {
+        // one solution best in both objectives
+        let vs = vec![vec![10.0, 1.0], vec![5.0, 2.0], vec![1.0, 3.0]];
+        let s = stats2(&vs, vec![true, false], vec![1.0, 1.0]);
+        assert!(s.optimality(&vs[0]).is_infinite());
+        assert!(s.optimality(&vs[1]) > s.optimality(&vs[2]));
+    }
+
+    #[test]
+    fn scale_invariance_of_mahalanobis() {
+        // multiplying one objective by 1000 must not change the ordering
+        let vs = vec![vec![10.0, 1.0], vec![8.0, 0.5], vec![2.0, 2.0]];
+        let s1 = stats2(&vs, vec![true, false], vec![1.0, 1.0]);
+        let o1: Vec<f64> = vs.iter().map(|v| s1.optimality(v)).collect();
+        let vs2: Vec<Vec<f64>> =
+            vs.iter().map(|v| vec![v[0] * 1000.0, v[1]]).collect();
+        let s2 = stats2(&vs2, vec![true, false], vec![1.0, 1.0]);
+        let o2: Vec<f64> = vs2.iter().map(|v| s2.optimality(v)).collect();
+        for (a, b) in o1.iter().zip(&o2) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn weights_bias_the_ranking() {
+        let vs = vec![vec![10.0, 10.0], vec![12.0, 2.0], vec![2.0, 12.0]];
+        // both higher-better; weight objective 0 heavily
+        let s = stats2(&vs, vec![true, true], vec![10.0, 0.1]);
+        let o: Vec<f64> = vs.iter().map(|v| s.optimality(v)).collect();
+        assert!(o[1] > o[2], "heavily weighted objective should dominate: {o:?}");
+    }
+
+    #[test]
+    fn constant_objective_ignored() {
+        let vs = vec![vec![1.0, 5.0], vec![1.0, 7.0]];
+        let s = stats2(&vs, vec![false, true], vec![1.0, 1.0]);
+        assert!(s.optimality(&vs[1]) > s.optimality(&vs[0]));
+    }
+
+    #[test]
+    fn all_optimalities_at_least_one() {
+        let reg = Registry::paper();
+        let dev = profiles::galaxy_s20();
+        let p = config::use_case("uc1", &reg, &dev).unwrap();
+        let feasible: Vec<_> =
+            p.space.iter().filter(|x| p.feasible(x)).cloned().collect();
+        let opts = optimalities(&p, &feasible);
+        assert!(!opts.is_empty());
+        for o in opts {
+            assert!(o >= 1.0 - 1e-9, "optimality {o} < 1");
+        }
+    }
+}

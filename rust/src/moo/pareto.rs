@@ -1,0 +1,151 @@
+//! Pareto-dominance utilities: dominance tests, front extraction and the
+//! fast non-dominated sort used by the NSGA-II reference solver.
+
+/// Does `a` dominate `b`? (`higher[i]` gives each objective's direction.)
+/// a dominates b iff a is no worse in every objective and strictly better
+/// in at least one.
+pub fn dominates(a: &[f64], b: &[f64], higher: &[bool]) -> bool {
+    let mut strictly = false;
+    for i in 0..a.len() {
+        let (ai, bi) = if higher[i] { (a[i], b[i]) } else { (-a[i], -b[i]) };
+        if ai < bi {
+            return false;
+        }
+        if ai > bi {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// Indices of the non-dominated set (the Pareto front) of `vectors`.
+pub fn front(vectors: &[Vec<f64>], higher: &[bool]) -> Vec<usize> {
+    (0..vectors.len())
+        .filter(|&i| {
+            !vectors
+                .iter()
+                .enumerate()
+                .any(|(j, v)| j != i && dominates(v, &vectors[i], higher))
+        })
+        .collect()
+}
+
+/// Fast non-dominated sort (Deb et al. 2002): returns the front index of
+/// every solution (0 = Pareto-optimal).
+pub fn non_dominated_sort(vectors: &[Vec<f64>], higher: &[bool]) -> Vec<usize> {
+    let n = vectors.len();
+    let mut dominated_by: Vec<Vec<usize>> = vec![Vec::new(); n]; // i dominates these
+    let mut counts = vec![0usize; n]; // how many dominate i
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if dominates(&vectors[i], &vectors[j], higher) {
+                dominated_by[i].push(j);
+                counts[j] += 1;
+            } else if dominates(&vectors[j], &vectors[i], higher) {
+                dominated_by[j].push(i);
+                counts[i] += 1;
+            }
+        }
+    }
+    let mut rank = vec![usize::MAX; n];
+    let mut current: Vec<usize> =
+        (0..n).filter(|&i| counts[i] == 0).collect();
+    let mut level = 0;
+    while !current.is_empty() {
+        let mut next = Vec::new();
+        for &i in &current {
+            rank[i] = level;
+            for &j in &dominated_by[i] {
+                counts[j] -= 1;
+                if counts[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        current = next;
+        level += 1;
+    }
+    rank
+}
+
+/// Crowding distance within one front (NSGA-II diversity pressure).
+pub fn crowding(vectors: &[Vec<f64>], members: &[usize]) -> Vec<f64> {
+    let m = members.len();
+    let mut dist = vec![0.0f64; m];
+    if m <= 2 {
+        return vec![f64::INFINITY; m];
+    }
+    let n_obj = vectors[members[0]].len();
+    for k in 0..n_obj {
+        let mut order: Vec<usize> = (0..m).collect();
+        order.sort_by(|&a, &b| {
+            vectors[members[a]][k]
+                .partial_cmp(&vectors[members[b]][k])
+                .unwrap()
+        });
+        let lo = vectors[members[order[0]]][k];
+        let hi = vectors[members[order[m - 1]]][k];
+        dist[order[0]] = f64::INFINITY;
+        dist[order[m - 1]] = f64::INFINITY;
+        if (hi - lo).abs() < 1e-24 {
+            continue;
+        }
+        for w in 1..m - 1 {
+            dist[order[w]] += (vectors[members[order[w + 1]]][k]
+                - vectors[members[order[w - 1]]][k])
+                / (hi - lo);
+        }
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const HI: [bool; 2] = [true, false]; // maximize first, minimize second
+
+    #[test]
+    fn dominance_basics() {
+        assert!(dominates(&[2.0, 1.0], &[1.0, 2.0], &HI));
+        assert!(!dominates(&[2.0, 3.0], &[1.0, 2.0], &HI)); // trade-off
+        assert!(!dominates(&[1.0, 2.0], &[1.0, 2.0], &HI)); // equal
+    }
+
+    #[test]
+    fn front_extraction() {
+        let vs = vec![
+            vec![3.0, 3.0], // front (best acc)
+            vec![2.0, 1.0], // front (best lat among acc=2)
+            vec![1.0, 1.0], // dominated by [2,1]
+            vec![2.0, 2.0], // dominated by [2,1]
+        ];
+        let f = front(&vs, &HI);
+        assert_eq!(f, vec![0, 1]);
+    }
+
+    #[test]
+    fn nds_ranks_layers() {
+        let vs = vec![
+            vec![3.0, 1.0], // rank 0
+            vec![2.0, 2.0], // rank 1 (dominated by none? [3,1] dominates it)
+            vec![1.0, 3.0], // rank 2
+        ];
+        let r = non_dominated_sort(&vs, &HI);
+        assert_eq!(r, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn crowding_boundary_infinite() {
+        let vs = vec![
+            vec![1.0, 5.0],
+            vec![2.0, 4.0],
+            vec![3.0, 3.0],
+            vec![4.0, 2.0],
+        ];
+        let members = vec![0, 1, 2, 3];
+        let c = crowding(&vs, &members);
+        assert!(c[0].is_infinite() && c[3].is_infinite());
+        assert!(c[1].is_finite() && c[1] > 0.0);
+    }
+}

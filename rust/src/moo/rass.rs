@@ -1,0 +1,410 @@
+//! RASS — the Runtime-Aware Sorting and Search solver (paper §4.3).
+//!
+//! RASS solves a device-specific MOO problem **once**, producing:
+//!
+//! * up to three per-engine-mapping designs `d_0..d_{T-1}` (the best
+//!   solution of each of the top-T distinct model-to-processor mapping
+//!   sets, T ≤ 3), enabling processor switching when an engine overloads;
+//! * the memory-efficient design `d_m = argmin MF(x)`;
+//! * the lightest-workload design `d_w = argmin W(x)`;
+//! * `d_wm`, the better memory/workload balance of `d_m`/`d_w` by
+//!   normalised-sum cost, for the processors-and-memory-troubled state;
+//! * a total, state-indexed **switching policy** whose rules depend only
+//!   on the environment booleans `(c_ce.., c_m)` — never on the currently
+//!   deployed design — so the Runtime Manager switches in O(1).
+
+use std::time::Instant;
+
+use crate::device::Engine;
+
+use super::optimality::ObjectiveStats;
+use super::space::Config;
+use super::{Design, Problem, Solution};
+
+/// Maximum number of engine-mapping sets retained (paper: T <= 3).
+pub const MAX_MAPPING_SETS: usize = 3;
+
+/// Environment state the Runtime Manager indexes the policy with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct EnvState {
+    /// Troubled engines, as a bitmask over [`Engine::index`].
+    pub troubled: u8,
+    /// Memory pressure (`c_m`).
+    pub memory: bool,
+}
+
+impl EnvState {
+    pub fn calm() -> EnvState {
+        EnvState { troubled: 0, memory: false }
+    }
+
+    pub fn with_engine(mut self, e: Engine) -> EnvState {
+        self.troubled |= 1 << e.index();
+        self
+    }
+
+    pub fn with_memory(mut self) -> EnvState {
+        self.memory = true;
+        self
+    }
+
+    pub fn is_troubled(&self, e: Engine) -> bool {
+        self.troubled & (1 << e.index()) != 0
+    }
+}
+
+/// The rule-based switching policy: a total map from environment state to
+/// design index (paper §4.3.4). Materialised over every state of the
+/// device's engines so lookups are branchless at runtime.
+#[derive(Debug, Clone)]
+pub struct SwitchingPolicy {
+    /// Engines the device exposes (defines the state space).
+    pub engines: Vec<Engine>,
+    /// `rules[state_code] = design index`; state code packs the troubled
+    /// bitmask (device-engine order) and the memory bit.
+    rules: Vec<usize>,
+}
+
+impl SwitchingPolicy {
+    fn state_code(&self, s: EnvState) -> usize {
+        let mut code = 0usize;
+        for (i, e) in self.engines.iter().enumerate() {
+            if s.is_troubled(*e) {
+                code |= 1 << i;
+            }
+        }
+        if s.memory {
+            code |= 1 << self.engines.len();
+        }
+        code
+    }
+
+    /// O(1) design lookup for an environment state.
+    pub fn design_for(&self, s: EnvState) -> usize {
+        self.rules[self.state_code(s)]
+    }
+
+    pub fn n_states(&self) -> usize {
+        self.rules.len()
+    }
+
+    /// Iterate (state, design-index) pairs, for policy dumps (Tables 7/8).
+    pub fn iter_states(&self) -> impl Iterator<Item = (EnvState, usize)> + '_ {
+        (0..self.rules.len()).map(move |code| {
+            let mut s = EnvState::calm();
+            for (i, e) in self.engines.iter().enumerate() {
+                if code & (1 << i) != 0 {
+                    s = s.with_engine(*e);
+                }
+            }
+            if code & (1 << self.engines.len()) != 0 {
+                s = s.with_memory();
+            }
+            (s, self.rules[code])
+        })
+    }
+}
+
+/// Solve a problem with RASS. Implements Algorithm 1 lines 9–12:
+/// constrain, compute optimality, sort, search for the design set and
+/// derive the switching policy.
+pub fn solve(problem: &Problem) -> Solution {
+    let t0 = Instant::now();
+
+    // X' = {x | g_j(x) <= 0 ∀j} — apply constraints. Each configuration
+    // is evaluated exactly once; its metrics are reused for the objective
+    // vectors and the d_m/d_w searches below (see EXPERIMENTS.md §Perf).
+    let mut feasible: Vec<Config> = Vec::new();
+    let mut vectors: Vec<Vec<f64>> = Vec::new();
+    let mut mfs: Vec<f64> = Vec::new();
+    let mut ws: Vec<f64> = Vec::new();
+    for x in &problem.space {
+        let m = problem.metrics(x);
+        if !problem.feasible_metrics(&m) {
+            continue;
+        }
+        vectors.push(problem.objective_vector_of(&m));
+        mfs.push(m.total_mf_bytes());
+        ws.push(m.total_flops());
+        feasible.push(x.clone());
+    }
+    assert!(
+        !feasible.is_empty(),
+        "no feasible configuration for problem {}",
+        problem.name
+    );
+
+    // CalculateOptimality + Sort.
+    let stats = ObjectiveStats::from_vectors(problem, &vectors);
+    let mut order: Vec<usize> = (0..feasible.len()).collect();
+    let opts: Vec<f64> = vectors.iter().map(|v| stats.optimality(v)).collect();
+    order.sort_by(|&a, &b| opts[b].partial_cmp(&opts[a]).unwrap());
+
+    // Search: group the sorted space by model-to-processor mapping set
+    // (the engine set the configuration occupies), keep the top-T sets.
+    let mut sets: Vec<(Vec<Engine>, Vec<usize>)> = Vec::new();
+    for &i in &order {
+        let es = feasible[i].engine_set();
+        match sets.iter_mut().find(|(k, _)| *k == es) {
+            Some((_, v)) => v.push(i),
+            None => sets.push((es, vec![i])),
+        }
+    }
+    sets.truncate(MAX_MAPPING_SETS);
+    let _t = sets.len();
+
+    // d_i = best of each set (sets are already in descending set-best
+    // optimality order because `order` is sorted).
+    let mut designs: Vec<Design> = Vec::new();
+    let roles_of = |cfg_idx: usize, role: &'static str, designs: &mut Vec<Design>| -> usize {
+        if let Some(pos) = designs
+            .iter()
+            .position(|d| d.config == feasible[cfg_idx])
+        {
+            designs[pos].roles.push(role);
+            pos
+        } else {
+            designs.push(Design {
+                config: feasible[cfg_idx].clone(),
+                optimality: opts[cfg_idx],
+                roles: vec![role],
+            });
+            designs.len() - 1
+        }
+    };
+
+    static DI_NAMES: [&str; 3] = ["d0", "d1", "d2"];
+    let mut d_engine: Vec<usize> = Vec::new(); // design index per mapping set
+    for (i, (_, members)) in sets.iter().enumerate() {
+        d_engine.push(roles_of(members[0], DI_NAMES[i], &mut designs));
+    }
+
+    // The union of the retained subspaces X_0..X_{T-1}.
+    let union: Vec<usize> = sets.iter().flat_map(|(_, m)| m.iter().copied()).collect();
+
+    // d_m = argmin MF, d_w = argmin W over the union (memoized metrics).
+    let mf = |i: usize| mfs[i];
+    let w = |i: usize| ws[i];
+    let i_m = *union
+        .iter()
+        .min_by(|&&a, &&b| mf(a).partial_cmp(&mf(b)).unwrap())
+        .unwrap();
+    let i_w = *union
+        .iter()
+        .min_by(|&&a, &&b| w(a).partial_cmp(&w(b)).unwrap())
+        .unwrap();
+    let d_m = roles_of(i_m, "dm", &mut designs);
+    let d_w = roles_of(i_w, "dw", &mut designs);
+
+    // d_wm: normalised-sum cost C(MF, W) between d_m and d_w.
+    let (mf_m, w_m) = (mf(i_m), w(i_m));
+    let (mf_w, w_w) = (mf(i_w), w(i_w));
+    let nmf = mf_m.max(mf_w).max(1e-24);
+    let nw = w_m.max(w_w).max(1e-24);
+    let cost_m = mf_m / nmf + w_m / nw;
+    let cost_w = mf_w / nmf + w_w / nw;
+    let d_wm = if cost_w < cost_m { d_w } else { d_m };
+    designs[d_wm].roles.push("dwm");
+
+    let policy = build_policy(problem, &feasible, &designs, &sets, &d_engine, d_m, d_w, d_wm);
+
+    Solution {
+        designs,
+        policy,
+        feasible_count: feasible.len(),
+        solve_time: t0.elapsed(),
+    }
+}
+
+/// Construct the total switching policy.
+///
+/// Rule template (matches Tables 7 and 8):
+/// * no trouble                → `d_0`
+/// * memory only               → `d_m`
+/// * engines S troubled, no mem → first `d_i` whose engine set avoids S;
+///   if every mapping set intersects S → `d_w`
+/// * engines S + memory        → first design among {d_m, d_i...}
+///   avoiding S, preferring memory-light ones; if none → `d_wm`
+#[allow(clippy::too_many_arguments)]
+fn build_policy(
+    problem: &Problem,
+    feasible: &[Config],
+    designs: &[Design],
+    sets: &[(Vec<Engine>, Vec<usize>)],
+    d_engine: &[usize],
+    d_m: usize,
+    d_w: usize,
+    d_wm: usize,
+) -> SwitchingPolicy {
+    let _ = feasible;
+    let engines = problem.device.engines.clone();
+    let n_states = 1usize << (engines.len() + 1);
+    let mut rules = vec![0usize; n_states];
+    let policy_shell = SwitchingPolicy { engines: engines.clone(), rules: Vec::new() };
+
+    let avoids = |design: usize, s: EnvState| -> bool {
+        designs[design]
+            .config
+            .engine_set()
+            .iter()
+            .all(|e| !s.is_troubled(*e))
+    };
+
+    for code in 0..n_states {
+        // decode
+        let mut s = EnvState::calm();
+        for (i, e) in engines.iter().enumerate() {
+            if code & (1 << i) != 0 {
+                s = s.with_engine(*e);
+            }
+        }
+        if code & (1 << engines.len()) != 0 {
+            s = s.with_memory();
+        }
+
+        let pick = if s.troubled == 0 && !s.memory {
+            d_engine[0] // d_0
+        } else if s.troubled == 0 && s.memory {
+            d_m
+        } else if !s.memory {
+            // processor trouble: migrate to the best mapping set that
+            // avoids every troubled engine (CP/CB), else shed workload (CM).
+            d_engine
+                .iter()
+                .copied()
+                .find(|&d| avoids(d, s))
+                .unwrap_or(d_w)
+        } else {
+            // both processor and memory trouble: memory-efficient design if
+            // it dodges the troubled engines, else the balanced d_wm.
+            if avoids(d_m, s) {
+                d_m
+            } else if let Some(d) = d_engine.iter().copied().find(|&d| avoids(d, s) && d != d_engine[0]) {
+                d
+            } else {
+                d_wm
+            }
+        };
+        rules[code] = pick;
+    }
+
+    let _ = (sets, policy_shell);
+    SwitchingPolicy { engines, rules }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::device::profiles;
+    use crate::zoo::Registry;
+
+    fn uc1_s20() -> (Problem, Solution) {
+        let p = config::use_case("uc1", &Registry::paper(), &profiles::galaxy_s20())
+            .unwrap();
+        let s = solve(&p);
+        (p, s)
+    }
+
+    #[test]
+    fn at_most_five_designs() {
+        let (_, s) = uc1_s20();
+        assert!(s.designs.len() <= 5, "{} designs", s.designs.len());
+        assert!(!s.designs.is_empty());
+    }
+
+    #[test]
+    fn d0_is_max_optimality() {
+        let (_, s) = uc1_s20();
+        let d0 = s.designs.iter().find(|d| d.roles.contains(&"d0")).unwrap();
+        for d in &s.designs {
+            assert!(d0.optimality >= d.optimality - 1e-9);
+        }
+    }
+
+    #[test]
+    fn designs_are_feasible() {
+        let (p, s) = uc1_s20();
+        for d in &s.designs {
+            assert!(p.feasible(&d.config), "{}", d.describe(&p));
+        }
+    }
+
+    #[test]
+    fn dm_minimises_memory_dw_minimises_workload() {
+        let (p, s) = uc1_s20();
+        let dm = s.designs.iter().find(|d| d.roles.contains(&"dm")).unwrap();
+        let dw = s.designs.iter().find(|d| d.roles.contains(&"dw")).unwrap();
+        let mf_m = p.metrics(&dm.config).total_mf_bytes();
+        let w_w = p.metrics(&dw.config).total_flops();
+        for d in &s.designs {
+            assert!(p.metrics(&d.config).total_mf_bytes() >= mf_m - 1.0);
+            assert!(p.metrics(&d.config).total_flops() >= w_w - 1.0);
+        }
+    }
+
+    #[test]
+    fn policy_total_and_state_only() {
+        let (p, s) = uc1_s20();
+        let n_e = p.device.engines.len();
+        assert_eq!(s.policy.n_states(), 1 << (n_e + 1));
+        for (_, d) in s.policy.iter_states() {
+            assert!(d < s.designs.len());
+        }
+    }
+
+    #[test]
+    fn calm_state_runs_d0_memory_state_runs_dm() {
+        let (_, s) = uc1_s20();
+        let d0 = s.policy.design_for(EnvState::calm());
+        assert!(s.designs[d0].roles.contains(&"d0"));
+        let dm = s.policy.design_for(EnvState::calm().with_memory());
+        assert!(s.designs[dm].roles.contains(&"dm"));
+    }
+
+    #[test]
+    fn troubled_engine_avoided_when_possible() {
+        let (_, s) = uc1_s20();
+        for (state, didx) in s.policy.iter_states() {
+            if state.memory {
+                continue;
+            }
+            let d = &s.designs[didx];
+            let avoidable = s.designs.iter().any(|alt| {
+                alt.config.engine_set().iter().all(|e| !state.is_troubled(*e))
+            });
+            if avoidable && !d.roles.contains(&"dw") {
+                for e in d.config.engine_set() {
+                    assert!(
+                        !state.is_troubled(e),
+                        "state {state:?} routed to design on troubled {e:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multi_dnn_solves_uc3() {
+        let p = config::use_case("uc3", &Registry::paper(), &profiles::galaxy_a71())
+            .unwrap();
+        let s = solve(&p);
+        assert!(!s.designs.is_empty());
+        assert!(s.designs.len() <= 5);
+        // every design assigns both tasks
+        for d in &s.designs {
+            assert_eq!(d.config.assignments.len(), 2);
+        }
+    }
+
+    #[test]
+    fn solve_is_deterministic() {
+        let p1 = config::use_case("uc1", &Registry::paper(), &profiles::pixel7()).unwrap();
+        let s1 = solve(&p1);
+        let s2 = solve(&p1);
+        assert_eq!(s1.designs.len(), s2.designs.len());
+        for (a, b) in s1.designs.iter().zip(&s2.designs) {
+            assert_eq!(a.config, b.config);
+        }
+    }
+}

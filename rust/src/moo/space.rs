@@ -1,0 +1,309 @@
+//! Decision-space construction (paper §4.1, Algorithm 1 lines 2–6).
+//!
+//! Single-DNN: `X = E = {⟨m, hw⟩}` — every (model variant, processor
+//! config) pair valid on the target device.
+//!
+//! Multi-DNN: `X = E_1 × ... × E_M`. The full product can reach millions
+//! of points (UC4); a *necessary-condition prefilter* drops per-task
+//! configurations that violate latency/memory constraints even solo
+//! (contention only makes them worse), which is sound because every
+//! constrained metric is monotone in contention.
+
+use crate::device::{compatible, Device, Proc};
+use crate::zoo::registry::Task;
+use crate::zoo::{Registry, Variant};
+
+use super::{Constraint, Metric, Problem, Statistic};
+
+/// One task's execution configuration `e = ⟨m, hw⟩` (paper Eq. 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Assignment {
+    pub variant: Variant,
+    pub proc: Proc,
+}
+
+/// A decision variable: one assignment per task (length 1 in single-DNN
+/// problems).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Config {
+    pub assignments: Vec<Assignment>,
+}
+
+impl Config {
+    pub fn single(variant: Variant, proc: Proc) -> Config {
+        Config { assignments: vec![Assignment { variant, proc }] }
+    }
+
+    /// Set of engines this configuration occupies (the key RASS groups
+    /// designs by — §4.3.4 "model-to-processor mappings").
+    pub fn engine_set(&self) -> Vec<crate::device::Engine> {
+        let mut es: Vec<_> = self.assignments.iter().map(|a| a.proc.engine()).collect();
+        es.sort();
+        es.dedup();
+        es
+    }
+
+    /// How many *other* tasks share the engine of task `t` (drives the
+    /// contention model).
+    pub fn co_located(&self, t: usize) -> usize {
+        let e = self.assignments[t].proc.engine();
+        self.assignments
+            .iter()
+            .enumerate()
+            .filter(|(i, a)| *i != t && a.proc.engine() == e)
+            .count()
+    }
+
+    pub fn describe(&self, reg: &Registry) -> String {
+        let parts: Vec<String> = self
+            .assignments
+            .iter()
+            .map(|a| format!("⟨{}, {}⟩", a.variant.describe(reg), a.proc.describe()))
+            .collect();
+        parts.join(" + ")
+    }
+
+    /// Total stored-model bytes (unique variants only; used by Table 10).
+    pub fn storage_bytes(&self, reg: &Registry) -> f64 {
+        let mut seen: Vec<Variant> = Vec::new();
+        let mut total = 0.0;
+        for a in &self.assignments {
+            if !seen.contains(&a.variant) {
+                seen.push(a.variant);
+                total += a.variant.size_bytes(reg);
+            }
+        }
+        total
+    }
+}
+
+/// All processor configurations available on a device.
+pub fn proc_options(device: &Device) -> Vec<Proc> {
+    let mut out = Proc::cpu_options();
+    for e in &device.engines {
+        match e {
+            crate::device::Engine::Gpu => out.push(Proc::Gpu),
+            crate::device::Engine::Npu => out.push(Proc::Npu),
+            crate::device::Engine::Dsp => out.push(Proc::Dsp),
+            crate::device::Engine::Cpu => {}
+        }
+    }
+    out
+}
+
+/// Per-task execution-configuration space `E_i`.
+pub fn task_space(reg: &Registry, device: &Device, task: Task) -> Vec<Assignment> {
+    let mut out = Vec::new();
+    for variant in reg.variants_for_task(task) {
+        for proc in proc_options(device) {
+            if compatible(device, proc, variant.scheme) {
+                out.push(Assignment { variant, proc });
+            }
+        }
+    }
+    out
+}
+
+/// Enumerate the decision space for a set of tasks, applying the
+/// necessary-condition prefilter for multi-DNN products.
+pub fn enumerate(
+    reg: &Registry,
+    device: &Device,
+    tasks: &[Task],
+    constraints: &[Constraint],
+) -> Vec<Config> {
+    let spaces: Vec<Vec<Assignment>> = tasks
+        .iter()
+        .map(|&t| task_space(reg, device, t))
+        .collect();
+    if tasks.len() == 1 {
+        return spaces[0]
+            .iter()
+            .map(|&a| Config { assignments: vec![a] })
+            .collect();
+    }
+    // Multi-DNN: prefilter each task space by solo-feasibility of latency
+    // constraints (necessary condition), then take the product.
+    let filtered: Vec<Vec<Assignment>> = spaces
+        .iter()
+        .enumerate()
+        .map(|(t, space)| {
+            space
+                .iter()
+                .copied()
+                .filter(|a| solo_feasible(reg, device, *a, t, constraints))
+                .collect()
+        })
+        .collect();
+    let mut out = Vec::new();
+    product(&filtered, &mut Vec::new(), &mut out);
+    out
+}
+
+fn product(spaces: &[Vec<Assignment>], acc: &mut Vec<Assignment>, out: &mut Vec<Config>) {
+    if acc.len() == spaces.len() {
+        out.push(Config { assignments: acc.clone() });
+        return;
+    }
+    for &a in &spaces[acc.len()] {
+        acc.push(a);
+        product(spaces, acc, out);
+        acc.pop();
+    }
+}
+
+/// Necessary condition: an assignment whose *solo* mean latency already
+/// violates a per-task latency bound can never satisfy it under
+/// contention (contention multiplies latency by >= 1).
+fn solo_feasible(
+    reg: &Registry,
+    device: &Device,
+    a: Assignment,
+    task_idx: usize,
+    constraints: &[Constraint],
+) -> bool {
+    let entry = &reg.models[a.variant.model];
+    let perf = device.perf(a.proc.engine());
+    let mean = perf.latency_ms(
+        a.variant.flops(reg) * entry.batch as f64,
+        a.proc,
+        a.variant.scheme,
+        entry.family,
+    );
+    for c in constraints {
+        if c.metric == Metric::Latency
+            && (c.task.is_none() || c.task == Some(task_idx))
+        {
+            // optimistic value per statistic: solo mean (max/std only grow)
+            let optimistic = match c.stat {
+                Statistic::Std => 0.0,
+                _ => mean,
+            };
+            if optimistic > c.bound {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Construct a full [`Problem`].
+#[allow(clippy::too_many_arguments)]
+pub fn build_problem(
+    name: &str,
+    tasks: Vec<Task>,
+    device: Device,
+    reg: Registry,
+    objectives: Vec<super::Objective>,
+    constraints: Vec<Constraint>,
+    profile_seed: u64,
+) -> Problem {
+    let space = enumerate(&reg, &device, &tasks, &constraints);
+    let cache = crate::profiler::profile_space(&reg, &device, &space, profile_seed);
+    Problem {
+        name: name.to_string(),
+        tasks,
+        device,
+        registry: reg,
+        objectives,
+        constraints,
+        space,
+        cache,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::zoo::Scheme;
+
+    #[test]
+    fn uc1_space_size_s20() {
+        // S20: 8 CPU configs + GPU + NPU. UC1 has 34 variants; GPU takes
+        // fp32/fp16/fx8, NPU takes fp16/fx8/ffx8.
+        let reg = Registry::paper();
+        let dev = profiles::galaxy_s20();
+        let space = task_space(&reg, &dev, Task::ImageCls);
+        let cpu_only: usize = 34 * 8;
+        assert!(space.len() > cpu_only, "space {} should include GPU/NPU", space.len());
+        // every assignment is scheme-compatible
+        for a in &space {
+            assert!(compatible(&dev, a.proc, a.variant.scheme));
+        }
+    }
+
+    #[test]
+    fn a71_exposes_dsp_options() {
+        let reg = Registry::paper();
+        let dev = profiles::galaxy_a71();
+        let space = task_space(&reg, &dev, Task::SceneCls);
+        assert!(space.iter().any(|a| a.proc == Proc::Dsp
+            && a.variant.scheme == Scheme::Ffx8));
+        assert!(!space.iter().any(|a| a.proc == Proc::Dsp
+            && a.variant.scheme != Scheme::Ffx8));
+    }
+
+    #[test]
+    fn multi_product_dims() {
+        let reg = Registry::paper();
+        let dev = profiles::galaxy_s20();
+        let cfgs = enumerate(&reg, &dev, &[Task::SceneCls, Task::AudioCls], &[]);
+        let s1 = task_space(&reg, &dev, Task::SceneCls).len();
+        let s2 = task_space(&reg, &dev, Task::AudioCls).len();
+        assert_eq!(cfgs.len(), s1 * s2);
+        assert!(cfgs.iter().all(|c| c.assignments.len() == 2));
+    }
+
+    #[test]
+    fn prefilter_shrinks_uc4() {
+        let reg = Registry::paper();
+        let dev = profiles::galaxy_a71();
+        let tasks = vec![Task::FaceGender, Task::FaceAge, Task::FaceEth];
+        let tight = [Constraint {
+            metric: Metric::Latency,
+            stat: Statistic::Max,
+            task: None,
+            bound: 10.0,
+        }];
+        let with = enumerate(&reg, &dev, &tasks, &tight);
+        let without_sz: usize = tasks
+            .iter()
+            .map(|&t| task_space(&reg, &dev, t).len())
+            .product();
+        assert!(with.len() < without_sz, "{} !< {}", with.len(), without_sz);
+        assert!(!with.is_empty());
+    }
+
+    #[test]
+    fn engine_set_and_colocation() {
+        let reg = Registry::paper();
+        let i = reg.find("GenderNet-MNV2").unwrap();
+        let v = Variant { model: i, scheme: Scheme::Ffx8 };
+        let cpu = Proc::Cpu { threads: 4, xnnpack: true };
+        let cfg = Config {
+            assignments: vec![
+                Assignment { variant: v, proc: cpu },
+                Assignment { variant: v, proc: cpu },
+                Assignment { variant: v, proc: Proc::Npu },
+            ],
+        };
+        assert_eq!(cfg.engine_set().len(), 2);
+        assert_eq!(cfg.co_located(0), 1);
+        assert_eq!(cfg.co_located(2), 0);
+    }
+
+    #[test]
+    fn storage_dedups_shared_variants() {
+        let reg = Registry::paper();
+        let i = reg.find("GenderNet-MNV2").unwrap();
+        let v = Variant { model: i, scheme: Scheme::Ffx8 };
+        let cfg = Config {
+            assignments: vec![
+                Assignment { variant: v, proc: Proc::Npu },
+                Assignment { variant: v, proc: Proc::Cpu { threads: 1, xnnpack: false } },
+            ],
+        };
+        assert!((cfg.storage_bytes(&reg) - v.size_bytes(&reg)).abs() < 1.0);
+    }
+}

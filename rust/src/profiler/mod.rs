@@ -1,0 +1,160 @@
+//! Objective-function evaluation by profiling (paper §4.2, §6.4).
+//!
+//! Device-dependent metrics (latency, energy, memory) cannot be derived
+//! analytically; CARIn profiles every (model variant, processor config)
+//! pair on the target device: 5 warm-up runs, 100 measured runs, and an
+//! idle period between sets to keep the die temperature consistent.
+//! Here the "device" is the behavioural simulator ([`crate::device`]);
+//! the end-to-end example additionally substitutes *measured* PJRT
+//! latencies for the CPU reference point (see `examples/e2e_serving.rs`).
+
+pub mod predictor;
+pub mod stats;
+
+use std::collections::HashMap;
+
+use crate::device::{Device, Proc, Simulator};
+use crate::moo::space::Config;
+use crate::util::Summary;
+use crate::zoo::{Registry, Variant};
+
+/// Paper §6.4 profiling protocol.
+pub const WARMUP_RUNS: usize = 5;
+pub const MEASURE_RUNS: usize = 100;
+/// Idle gap between profiling sets, seconds (paper uses 2 minutes).
+pub const IDLE_BETWEEN_SETS_S: f64 = 120.0;
+
+/// Profiled statistics of one (variant, proc) execution configuration.
+#[derive(Debug, Clone)]
+pub struct ProfiledPoint {
+    pub latency_ms: Summary,
+    pub energy_mj: Summary,
+    pub mf_bytes: f64,
+}
+
+/// Cache of profiled points, keyed by execution configuration.
+#[derive(Debug, Clone, Default)]
+pub struct ProfileCache {
+    map: HashMap<(Variant, Proc), ProfiledPoint>,
+}
+
+impl ProfileCache {
+    pub fn get(&self, variant: Variant, proc: Proc) -> &ProfiledPoint {
+        self.map.get(&(variant, proc)).unwrap_or_else(|| {
+            panic!("unprofiled configuration {variant:?} on {proc:?}")
+        })
+    }
+
+    pub fn contains(&self, variant: Variant, proc: Proc) -> bool {
+        self.map.contains_key(&(variant, proc))
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn insert(&mut self, variant: Variant, proc: Proc, point: ProfiledPoint) {
+        self.map.insert((variant, proc), point);
+    }
+}
+
+/// Profile one execution configuration on a (reset) simulator.
+pub fn profile_one(
+    reg: &Registry,
+    sim: &mut Simulator,
+    variant: Variant,
+    proc: Proc,
+) -> ProfiledPoint {
+    for _ in 0..WARMUP_RUNS {
+        sim.run_inference(reg, variant, proc, 0);
+    }
+    let mut lat = Vec::with_capacity(MEASURE_RUNS);
+    let mut en = Vec::with_capacity(MEASURE_RUNS);
+    for _ in 0..MEASURE_RUNS {
+        let o = sim.run_inference(reg, variant, proc, 0);
+        lat.push(o.latency_ms);
+        en.push(o.energy_mj);
+    }
+    ProfiledPoint {
+        latency_ms: Summary::of(&lat),
+        energy_mj: Summary::of(&en),
+        mf_bytes: sim.footprint_bytes(reg, variant, proc),
+    }
+}
+
+/// Profile every unique (variant, proc) appearing in `space`.
+pub fn profile_space(
+    reg: &Registry,
+    device: &Device,
+    space: &[Config],
+    seed: u64,
+) -> ProfileCache {
+    let mut cache = ProfileCache::default();
+    let mut sim = Simulator::new(device.clone(), seed);
+    for cfg in space {
+        for a in &cfg.assignments {
+            if cache.contains(a.variant, a.proc) {
+                continue;
+            }
+            let point = profile_one(reg, &mut sim, a.variant, a.proc);
+            // §6.4: cool-down between sets keeps temperatures consistent.
+            sim.idle(IDLE_BETWEEN_SETS_S);
+            cache.insert(a.variant, a.proc, point);
+        }
+    }
+    cache
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::zoo::registry::Task;
+    use crate::zoo::Scheme;
+
+    #[test]
+    fn profile_one_has_100_samples() {
+        let reg = Registry::paper();
+        let mut sim = Simulator::new(profiles::galaxy_s20(), 1);
+        let v = Variant { model: reg.find("MobileNet V2 1.0").unwrap(), scheme: Scheme::Fp32 };
+        let p = profile_one(&reg, &mut sim, v, Proc::Gpu);
+        assert_eq!(p.latency_ms.n, MEASURE_RUNS);
+        assert!(p.latency_ms.mean > 0.0);
+        assert!(p.energy_mj.mean > 0.0);
+        assert!(p.mf_bytes > 0.0);
+    }
+
+    #[test]
+    fn profile_space_covers_every_assignment() {
+        let reg = Registry::paper();
+        let dev = profiles::galaxy_s20();
+        let space: Vec<Config> = crate::moo::space::task_space(&reg, &dev, Task::AudioCls)
+            .into_iter()
+            .map(|a| Config { assignments: vec![a] })
+            .collect();
+        let cache = profile_space(&reg, &dev, &space, 3);
+        for cfg in &space {
+            assert!(cache.contains(cfg.assignments[0].variant, cfg.assignments[0].proc));
+        }
+    }
+
+    #[test]
+    fn faster_engine_profiles_faster() {
+        let reg = Registry::paper();
+        let dev = profiles::galaxy_s20();
+        let mut sim = Simulator::new(dev, 5);
+        let v = Variant {
+            model: reg.find("EfficientNet Lite0").unwrap(),
+            scheme: Scheme::Ffx8,
+        };
+        let cpu1 = profile_one(&reg, &mut sim, v,
+            Proc::Cpu { threads: 1, xnnpack: false });
+        sim.idle(IDLE_BETWEEN_SETS_S);
+        let npu = profile_one(&reg, &mut sim, v, Proc::Npu);
+        assert!(npu.latency_ms.mean < cpu1.latency_ms.mean);
+    }
+}

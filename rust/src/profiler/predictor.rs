@@ -1,0 +1,302 @@
+//! Latency/energy prediction (paper §8): exhaustive on-device profiling
+//! is the paper's acknowledged scalability limit; related work (nn-Meter,
+//! CoDL, HERTI) replaces it with learned predictors. This module fits a
+//! per-(engine, scheme-class, family) linear model
+//!
+//! `latency_ms ≈ a * GFLOPs + b`
+//!
+//! by least squares over a *subset* of profiled points and predicts the
+//! rest, so a CARIn deployment can profile O(engines) configurations
+//! instead of O(|X|). The ablation bench quantifies the accuracy/cost
+//! trade-off against full profiling.
+
+use std::collections::HashMap;
+
+use crate::device::{Engine, Proc};
+use crate::profiler::{ProfileCache, ProfiledPoint};
+use crate::util::Summary;
+use crate::zoo::registry::Family;
+use crate::zoo::{Registry, Scheme, Variant};
+
+/// Key under which points share one linear model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ModelKey {
+    pub engine: Engine,
+    pub integer: bool,
+    pub family_transformer: bool,
+}
+
+fn key_of(reg: &Registry, v: Variant, proc: Proc) -> ModelKey {
+    ModelKey {
+        engine: proc.engine(),
+        integer: v.scheme.is_integer(),
+        family_transformer: matches!(
+            reg.models[v.model].family,
+            Family::Transformer
+        ),
+    }
+}
+
+/// CPU-scaling feature replicated from the perf model: the predictor
+/// regresses over *normalised* work so one model covers all thread/XNNPACK
+/// options.
+fn cpu_norm(proc: Proc, scheme: Scheme) -> f64 {
+    match proc {
+        Proc::Cpu { threads, xnnpack } => {
+            let t = (threads as f64).powf(0.72);
+            let x = if xnnpack {
+                if scheme.is_integer() { 2.0 } else { 1.5 }
+            } else {
+                1.0
+            };
+            t * x
+        }
+        _ => 1.0,
+    }
+}
+
+/// A fitted latency predictor.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyPredictor {
+    /// (slope ms per normalised GFLOP, intercept ms, cv) per key.
+    coeffs: HashMap<ModelKey, (f64, f64, f64)>,
+}
+
+impl LatencyPredictor {
+    /// Fit from a set of profiled (variant, proc) points.
+    pub fn fit(
+        reg: &Registry,
+        points: &[(Variant, Proc, ProfiledPoint)],
+    ) -> LatencyPredictor {
+        let mut groups: HashMap<ModelKey, Vec<(f64, f64, f64)>> = HashMap::new();
+        for (v, proc, point) in points {
+            let entry = &reg.models[v.model];
+            let gflops = v.flops(reg) * entry.batch as f64 / 1e9
+                / cpu_norm(*proc, v.scheme);
+            groups.entry(key_of(reg, *v, *proc)).or_default().push((
+                gflops,
+                point.latency_ms.mean,
+                point.latency_ms.cv(),
+            ));
+        }
+        let mut coeffs = HashMap::new();
+        for (k, pts) in groups {
+            let n = pts.len() as f64;
+            let sx: f64 = pts.iter().map(|p| p.0).sum();
+            let sy: f64 = pts.iter().map(|p| p.1).sum();
+            let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+            let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+            let denom = n * sxx - sx * sx;
+            let (a, b) = if denom.abs() < 1e-12 || pts.len() < 2 {
+                // degenerate: one sample — proportional model
+                let p = &pts[0];
+                (if p.0 > 0.0 { p.1 / p.0 } else { 0.0 }, 0.0)
+            } else {
+                let a = (n * sxy - sx * sy) / denom;
+                let b = (sy - a * sx) / n;
+                (a.max(0.0), b.max(0.0))
+            };
+            let cv = pts.iter().map(|p| p.2).sum::<f64>() / n;
+            coeffs.insert(k, (a, b, cv));
+        }
+        LatencyPredictor { coeffs }
+    }
+
+    /// Predict the mean latency of an unprofiled configuration, ms.
+    pub fn predict_mean(&self, reg: &Registry, v: Variant, proc: Proc) -> Option<f64> {
+        let (a, b, _) = self.coeffs.get(&key_of(reg, v, proc))?;
+        let entry = &reg.models[v.model];
+        let gflops =
+            v.flops(reg) * entry.batch as f64 / 1e9 / cpu_norm(proc, v.scheme);
+        Some(a * gflops + b)
+    }
+
+    /// Synthesize a full profiled point (latency distribution via the
+    /// group's typical coefficient of variation; energy via the device
+    /// power model; memory analytically).
+    pub fn predict_point(
+        &self,
+        reg: &Registry,
+        device: &crate::device::Device,
+        v: Variant,
+        proc: Proc,
+    ) -> Option<ProfiledPoint> {
+        let (a, b, cv) = *self.coeffs.get(&key_of(reg, v, proc))?;
+        let entry = &reg.models[v.model];
+        let gflops =
+            v.flops(reg) * entry.batch as f64 / 1e9 / cpu_norm(proc, v.scheme);
+        let mean = a * gflops + b;
+        // a deterministic synthetic distribution with matching mean/cv
+        let std = mean * cv;
+        let samples: Vec<f64> = (0..crate::profiler::MEASURE_RUNS)
+            .map(|i| {
+                let z = (i as f64 / (crate::profiler::MEASURE_RUNS - 1) as f64 - 0.5) * 3.46;
+                (mean + std * z).max(mean * 0.2)
+            })
+            .collect();
+        let power = device.perf(proc.engine()).power_w;
+        let energy: Vec<f64> = samples.iter().map(|l| l * power).collect();
+        Some(ProfiledPoint {
+            latency_ms: Summary::of(&samples),
+            energy_mj: Summary::of(&energy),
+            mf_bytes: crate::device::memory::footprint_bytes(reg, v, proc),
+        })
+    }
+
+    pub fn n_models(&self) -> usize {
+        self.coeffs.len()
+    }
+}
+
+/// Build a profile cache for `space` by profiling only `train_frac` of
+/// the unique configurations and predicting the rest. Returns the cache
+/// and the number of configurations actually profiled.
+pub fn predicted_cache(
+    reg: &Registry,
+    device: &crate::device::Device,
+    space: &[crate::moo::space::Config],
+    train_frac: f64,
+    seed: u64,
+) -> (ProfileCache, usize) {
+    // unique assignments
+    let mut uniq: Vec<(Variant, Proc)> = Vec::new();
+    for cfg in space {
+        for a in &cfg.assignments {
+            if !uniq.contains(&(a.variant, a.proc)) {
+                uniq.push((a.variant, a.proc));
+            }
+        }
+    }
+    let mut rng = crate::util::Rng::new(seed);
+    let mut idx: Vec<usize> = (0..uniq.len()).collect();
+    rng.shuffle(&mut idx);
+    let n_train = ((uniq.len() as f64 * train_frac).ceil() as usize)
+        .clamp(1, uniq.len());
+
+    let mut sim = crate::device::Simulator::new(device.clone(), seed);
+    let mut train: Vec<(Variant, Proc, ProfiledPoint)> = Vec::new();
+    for &i in idx.iter().take(n_train) {
+        let (v, p) = uniq[i];
+        let point = crate::profiler::profile_one(reg, &mut sim, v, p);
+        sim.idle(crate::profiler::IDLE_BETWEEN_SETS_S);
+        train.push((v, p, point));
+    }
+    let predictor = LatencyPredictor::fit(reg, &train);
+
+    let mut cache = ProfileCache::default();
+    for (v, p, point) in &train {
+        cache.insert(*v, *p, point.clone());
+    }
+    for &(v, p) in &uniq {
+        if cache.contains(v, p) {
+            continue;
+        }
+        let point = predictor
+            .predict_point(reg, device, v, p)
+            .unwrap_or_else(|| {
+                // key unseen in training: fall back to profiling
+                let pt = crate::profiler::profile_one(reg, &mut sim, v, p);
+                sim.idle(crate::profiler::IDLE_BETWEEN_SETS_S);
+                pt
+            });
+        cache.insert(v, p, point);
+    }
+    (cache, n_train)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::device::profiles;
+    use crate::zoo::registry::Task;
+
+    fn training_points(
+        reg: &Registry,
+        dev: &crate::device::Device,
+    ) -> Vec<(Variant, Proc, ProfiledPoint)> {
+        let mut sim = crate::device::Simulator::new(dev.clone(), 4);
+        let mut out = Vec::new();
+        for a in crate::moo::space::task_space(reg, dev, Task::ImageCls) {
+            let pt = crate::profiler::profile_one(reg, &mut sim, a.variant, a.proc);
+            sim.idle(crate::profiler::IDLE_BETWEEN_SETS_S);
+            out.push((a.variant, a.proc, pt));
+        }
+        out
+    }
+
+    #[test]
+    fn predictor_accuracy_within_20_percent() {
+        let reg = Registry::paper();
+        let dev = profiles::galaxy_s20();
+        let points = training_points(&reg, &dev);
+        // leave-half-out evaluation
+        let (train, test): (Vec<_>, Vec<_>) =
+            points.iter().cloned().enumerate().fold(
+                (Vec::new(), Vec::new()),
+                |(mut tr, mut te), (i, p)| {
+                    if i % 2 == 0 { tr.push(p) } else { te.push(p) }
+                    (tr, te)
+                },
+            );
+        let pred = LatencyPredictor::fit(&reg, &train);
+        let mut errs = Vec::new();
+        for (v, p, point) in &test {
+            if let Some(m) = pred.predict_mean(&reg, *v, *p) {
+                errs.push((m - point.latency_ms.mean).abs() / point.latency_ms.mean);
+            }
+        }
+        assert!(!errs.is_empty());
+        let mape = errs.iter().sum::<f64>() / errs.len() as f64;
+        assert!(mape < 0.20, "MAPE {mape:.3}");
+    }
+
+    #[test]
+    fn predicted_cache_covers_space_and_profiles_fraction() {
+        let reg = Registry::paper();
+        let dev = profiles::galaxy_a71();
+        let p = config::use_case("uc2", &reg, &dev).unwrap();
+        let (cache, n_train) = predicted_cache(&reg, &dev, &p.space, 0.3, 6);
+        for cfg in &p.space {
+            for a in &cfg.assignments {
+                assert!(cache.contains(a.variant, a.proc));
+            }
+        }
+        assert!(n_train < cache.len(), "{n_train} !< {}", cache.len());
+    }
+
+    #[test]
+    fn rass_on_predicted_cache_picks_near_optimal_design() {
+        // the headline of §8: prediction should preserve the *decision*,
+        // not just the numbers. Solve UC1 with full profiling and with a
+        // 30%-profiled predicted cache; the predicted d0's true optimality
+        // must be within 25% of the fully-profiled d0.
+        let reg = Registry::paper();
+        let dev = profiles::galaxy_s20();
+        let full = config::use_case("uc1", &reg, &dev).unwrap();
+        let full_sol = crate::moo::rass::solve(&full);
+
+        let (cache, _) = predicted_cache(&reg, &dev, &full.space, 0.3, 9);
+        let approx = crate::moo::Problem {
+            name: "uc1-pred".into(),
+            tasks: full.tasks.clone(),
+            device: full.device.clone(),
+            registry: full.registry.clone(),
+            objectives: full.objectives.clone(),
+            constraints: full.constraints.clone(),
+            space: full.space.clone(),
+            cache,
+        };
+        let approx_sol = crate::moo::rass::solve(&approx);
+        // evaluate the predicted pick under the TRUE cache
+        let true_opt = crate::moo::baselines::optimality_of(
+            &full,
+            &approx_sol.designs[0].config,
+        );
+        assert!(
+            true_opt >= full_sol.designs[0].optimality * 0.75,
+            "predicted design true-opt {true_opt:.3} vs full {:.3}",
+            full_sol.designs[0].optimality
+        );
+    }
+}

@@ -1,0 +1,43 @@
+//! Summary scaling helpers for contention-adjusted statistics.
+//!
+//! Multi-DNN evaluation scales a solo-profiled latency distribution by a
+//! deterministic contention factor instead of re-profiling every point of
+//! the M-dimensional product space — the paper itself notes exhaustive
+//! multi-DNN profiling is infeasible (§4.2, §8). Scaling a distribution
+//! by c > 0 scales its mean, std, min, max and every percentile by c,
+//! which is exactly what the time-slicing contention model predicts.
+
+use crate::util::Summary;
+
+/// Scale every sample of a summary by `c` (c > 0).
+pub fn scale(s: &Summary, c: f64) -> Summary {
+    s.scaled(c)
+}
+
+/// Contention factor for an engine shared by `k` *other* DNNs: near-linear
+/// time slicing (paper §2.1.3), matching the simulator's co-location model.
+pub fn contention_factor(co_located: usize) -> f64 {
+    ((co_located + 1) as f64).powf(0.95)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaling_scales_moments() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        let t = scale(&s, 2.0);
+        assert!((t.mean - 2.0 * s.mean).abs() < 1e-9);
+        assert!((t.std - 2.0 * s.std).abs() < 1e-9);
+        assert!((t.max - 2.0 * s.max).abs() < 1e-9);
+        assert!((t.percentile(50.0) - 2.0 * s.percentile(50.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn contention_monotone_and_identity_at_zero() {
+        assert_eq!(contention_factor(0), 1.0);
+        assert!(contention_factor(1) > 1.8 && contention_factor(1) <= 2.0);
+        assert!(contention_factor(2) > contention_factor(1));
+    }
+}

@@ -1,0 +1,174 @@
+//! Artifact manifest: metadata for every compiled (model, scheme) pair,
+//! parsed from `artifacts/manifest.json` with the in-tree JSON parser.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Tensor element types crossing the rust/JAX boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    I8,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            "int8" => Ok(DType::I8),
+            other => Err(anyhow!("unsupported dtype {other}")),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 => 1,
+        }
+    }
+}
+
+/// Shape + dtype of one I/O tensor.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .context("missing shape")?
+            .iter()
+            .map(|x| x.as_usize().context("bad dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::parse(
+            j.get("dtype").and_then(|d| d.as_str()).context("missing dtype")?,
+        )?;
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One manifest entry (one AOT-compiled model variant).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    /// Artifact stem, e.g. `cnn_s_ffx8`.
+    pub stem: String,
+    pub hlo_path: PathBuf,
+    pub weights_path: PathBuf,
+    /// npz keys in graph-parameter order (after the input).
+    pub weight_keys: Vec<String>,
+    pub model: String,
+    pub task: String,
+    pub scheme: String,
+    pub input: TensorSpec,
+    pub outputs: Vec<TensorSpec>,
+    pub params: usize,
+    pub flops: f64,
+    pub weight_bytes: usize,
+    /// FFX8 input quantisation scale (int8 = round(f32 / scale)).
+    pub input_scale: Option<f64>,
+}
+
+/// Load and validate `<dir>/manifest.json`.
+pub fn load_manifest(dir: &Path) -> Result<Vec<ArtifactMeta>> {
+    let text = std::fs::read_to_string(dir.join("manifest.json"))
+        .with_context(|| format!("reading {}/manifest.json — run `make artifacts`", dir.display()))?;
+    let root = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+    let mut out = Vec::new();
+    for e in root.as_arr().context("manifest must be an array")? {
+        let file = e.get("file").and_then(|f| f.as_str()).context("file")?;
+        let stem = file.trim_end_matches(".hlo.txt").to_string();
+        let weight_keys = e
+            .get("weight_keys")
+            .and_then(|k| k.as_arr())
+            .context("weight_keys")?
+            .iter()
+            .map(|x| x.as_str().map(String::from).context("weight key"))
+            .collect::<Result<Vec<_>>>()?;
+        out.push(ArtifactMeta {
+            hlo_path: dir.join(file),
+            weights_path: dir.join(
+                e.get("weights").and_then(|w| w.as_str()).context("weights")?,
+            ),
+            weight_keys,
+            model: e.get("model").and_then(|m| m.as_str()).context("model")?.into(),
+            task: e.get("task").and_then(|t| t.as_str()).context("task")?.into(),
+            scheme: e.get("scheme").and_then(|s| s.as_str()).context("scheme")?.into(),
+            input: TensorSpec::from_json(e.get("input").context("input")?)?,
+            outputs: e
+                .get("outputs")
+                .and_then(|o| o.as_arr())
+                .context("outputs")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?,
+            params: e.get("params").and_then(|p| p.as_usize()).context("params")?,
+            flops: e.get("flops").and_then(|f| f.as_f64()).context("flops")?,
+            weight_bytes: e
+                .get("weight_bytes")
+                .and_then(|w| w.as_usize())
+                .context("weight_bytes")?,
+            input_scale: e.get("input_scale").and_then(|s| s.as_f64()),
+            stem,
+        });
+    }
+    Ok(out)
+}
+
+/// Find the artifact for a (model, scheme) pair.
+pub fn find<'a>(
+    manifest: &'a [ArtifactMeta],
+    model: &str,
+    scheme: &str,
+) -> Option<&'a ArtifactMeta> {
+    manifest.iter().find(|m| m.model == model && m.scheme == scheme)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn manifest_loads_when_built() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = load_manifest(&dir).unwrap();
+        assert!(!m.is_empty());
+        for a in &m {
+            assert!(a.hlo_path.exists(), "{}", a.hlo_path.display());
+            assert!(a.weights_path.exists(), "{}", a.weights_path.display());
+            assert!(!a.weight_keys.is_empty());
+            assert!(a.input.numel() > 0);
+        }
+        // ffx8 artifacts carry an input scale and int8 I/O
+        let ffx8 = find(&m, "cnn_s", "ffx8").expect("cnn_s ffx8 missing");
+        assert_eq!(ffx8.input.dtype, DType::I8);
+        assert_eq!(ffx8.outputs[0].dtype, DType::I8);
+        assert!(ffx8.input_scale.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn dtype_parse_rejects_unknown() {
+        assert!(DType::parse("float64").is_err());
+        assert_eq!(DType::parse("int8").unwrap(), DType::I8);
+    }
+}

@@ -1,0 +1,235 @@
+//! The inference engine: PJRT CPU client + compiled executables +
+//! pre-uploaded weight buffers. This is the hot path — per request the
+//! only work is one host→device input upload, one `execute_b`, and one
+//! device→host readback.
+
+use std::collections::HashMap;
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+use xla::FromRawBytes;
+
+use super::artifact::{ArtifactMeta, DType};
+
+/// A host-side tensor crossing the engine boundary.
+#[derive(Debug, Clone)]
+pub enum Tensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    I8(Vec<i8>),
+}
+
+impl Tensor {
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32(_) => DType::F32,
+            Tensor::I32(_) => DType::I32,
+            Tensor::I8(_) => DType::I8,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32(v) => v.len(),
+            Tensor::I32(v) => v.len(),
+            Tensor::I8(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// View as f32 (dequantising int8 logits with `scale` when given).
+    pub fn to_f32(&self, scale: Option<f64>) -> Vec<f32> {
+        match self {
+            Tensor::F32(v) => v.clone(),
+            Tensor::I32(v) => v.iter().map(|&x| x as f32).collect(),
+            Tensor::I8(v) => {
+                let s = scale.unwrap_or(1.0) as f32;
+                v.iter().map(|&x| x as f32 * s).collect()
+            }
+        }
+    }
+
+    /// Index of the maximum element (top-1 class).
+    pub fn argmax(&self) -> usize {
+        let v = self.to_f32(None);
+        v.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+/// One compiled model variant resident in the engine.
+pub struct LoadedModel {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+    /// Weight buffers, uploaded once, passed after the input on every call.
+    weights: Vec<xla::PjRtBuffer>,
+    /// Host-side literals backing the buffers. The TFRT CPU client uses
+    /// zero-copy donation for host uploads, so the literal memory must
+    /// outlive the device buffers.
+    _weight_literals: Vec<xla::Literal>,
+    /// Wall-clock spent compiling + uploading at load time.
+    pub load_time_ms: f64,
+}
+
+/// The PJRT inference engine. Python never runs here: artifacts are
+/// self-contained HLO + weights.
+pub struct InferenceEngine {
+    client: xla::PjRtClient,
+    models: HashMap<String, LoadedModel>,
+}
+
+impl InferenceEngine {
+    /// Create a CPU-backed engine.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("{e:?}"))?;
+        Ok(InferenceEngine { client, models: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an artifact and upload its weights. Idempotent per stem.
+    pub fn load(&mut self, meta: &ArtifactMeta) -> Result<()> {
+        if self.models.contains_key(&meta.stem) {
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&meta.hlo_path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", meta.hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile: {e:?}"))?;
+        let names: Vec<&str> = meta.weight_keys.iter().map(|s| s.as_str()).collect();
+        // NOTE: read through Literal + buffer_from_host_literal rather than
+        // PjRtBuffer::read_npz_by_name — the latter forwards ElementType
+        // discriminants where the PJRT C API expects PrimitiveType values,
+        // producing mis-sized device buffers (crate bug in xla 0.1.6).
+        let literals =
+            xla::Literal::read_npz_by_name(&meta.weights_path, &(), &names)
+                .map_err(|e| anyhow!("weights {}: {e:?}", meta.weights_path.display()))?;
+        let weights = literals
+            .iter()
+            .map(|l| {
+                self.client
+                    .buffer_from_host_literal(None, l)
+                    .map_err(|e| anyhow!("weight upload: {e:?}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        self.models.insert(
+            meta.stem.clone(),
+            LoadedModel {
+                meta: meta.clone(),
+                exe,
+                weights,
+                _weight_literals: literals,
+                load_time_ms: t0.elapsed().as_secs_f64() * 1000.0,
+            },
+        );
+        Ok(())
+    }
+
+    /// Drop a compiled model (the RM unloads designs it rotated away from).
+    pub fn unload(&mut self, stem: &str) {
+        self.models.remove(stem);
+    }
+
+    pub fn is_loaded(&self, stem: &str) -> bool {
+        self.models.contains_key(stem)
+    }
+
+    pub fn loaded(&self) -> Vec<&LoadedModel> {
+        self.models.values().collect()
+    }
+
+    /// Run one inference. Validates input shape/dtype against the
+    /// manifest; returns the first output tensor (our zoo models return
+    /// a 1-tuple of logits).
+    pub fn infer(&self, stem: &str, input: &Tensor) -> Result<Tensor> {
+        let model = self
+            .models
+            .get(stem)
+            .with_context(|| format!("model {stem} not loaded"))?;
+        let meta = &model.meta;
+        if input.dtype() != meta.input.dtype {
+            return Err(anyhow!(
+                "{stem}: input dtype {:?} != manifest {:?}",
+                input.dtype(),
+                meta.input.dtype
+            ));
+        }
+        if input.len() != meta.input.numel() {
+            return Err(anyhow!(
+                "{stem}: input numel {} != manifest {}",
+                input.len(),
+                meta.input.numel()
+            ));
+        }
+        let dims = &meta.input.shape;
+        let in_buf = match input {
+            Tensor::F32(v) => self.client.buffer_from_host_buffer(v, dims, None),
+            Tensor::I32(v) => self.client.buffer_from_host_buffer(v, dims, None),
+            Tensor::I8(v) => self.client.buffer_from_host_buffer(v, dims, None),
+        }
+        .map_err(|e| anyhow!("input upload: {e:?}"))?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + model.weights.len());
+        args.push(&in_buf);
+        args.extend(model.weights.iter());
+        let result = model.exe.execute_b(&args).map_err(|e| anyhow!("execute: {e:?}"))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("readback: {e:?}"))?;
+        // computations are lowered with return_tuple=True
+        let out = literal.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let spec = &meta.outputs[0];
+        let tensor = match spec.dtype {
+            DType::F32 => Tensor::F32(out.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?),
+            DType::I32 => Tensor::I32(out.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?),
+            DType::I8 => Tensor::I8(out.to_vec::<i8>().map_err(|e| anyhow!("{e:?}"))?),
+        };
+        Ok(tensor)
+    }
+
+    /// Measure the steady-state latency of a loaded model: `warmup`
+    /// throwaway runs then `runs` timed ones. Returns latencies in ms.
+    pub fn measure(&self, stem: &str, input: &Tensor, warmup: usize, runs: usize) -> Result<Vec<f64>> {
+        for _ in 0..warmup {
+            self.infer(stem, input)?;
+        }
+        let mut out = Vec::with_capacity(runs);
+        for _ in 0..runs {
+            let t0 = Instant::now();
+            self.infer(stem, input)?;
+            out.push(t0.elapsed().as_secs_f64() * 1000.0);
+        }
+        Ok(out)
+    }
+}
+
+/// Build a zero-filled input tensor matching an artifact's input spec.
+pub fn zero_input(meta: &ArtifactMeta) -> Tensor {
+    let n = meta.input.numel();
+    match meta.input.dtype {
+        DType::F32 => Tensor::F32(vec![0.0; n]),
+        DType::I32 => Tensor::I32(vec![0; n]),
+        DType::I8 => Tensor::I8(vec![0; n]),
+    }
+}
+
+/// Build a deterministic pseudo-random input for an artifact.
+pub fn random_input(meta: &ArtifactMeta, seed: u64) -> Tensor {
+    let mut rng = crate::util::Rng::new(seed);
+    let n = meta.input.numel();
+    match meta.input.dtype {
+        DType::F32 => Tensor::F32((0..n).map(|_| rng.normal() as f32).collect()),
+        DType::I32 => Tensor::I32((0..n).map(|_| rng.below(1024) as i32).collect()),
+        DType::I8 => Tensor::I8((0..n).map(|_| (rng.below(200) as i32 - 100) as i8).collect()),
+    }
+}

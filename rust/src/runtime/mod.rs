@@ -1,0 +1,17 @@
+//! PJRT runtime (the request-path executor).
+//!
+//! Loads the AOT artifacts produced by `python/compile/aot.py` — HLO
+//! **text** plus an `.npz` of scheme-transformed weights — compiles them
+//! once on the PJRT CPU client, uploads the weights as device buffers,
+//! and serves inferences with zero python involvement.
+//!
+//! Interchange gotchas (see /opt/xla-example/README.md): HLO text, not
+//! serialized protos (xla_extension 0.5.1 rejects jax >= 0.5's 64-bit
+//! instruction ids); computations are lowered with `return_tuple=True`,
+//! so outputs unwrap with `to_tuple1`.
+
+pub mod artifact;
+pub mod engine;
+
+pub use artifact::{load_manifest, ArtifactMeta, DType};
+pub use engine::{InferenceEngine, LoadedModel, Tensor};

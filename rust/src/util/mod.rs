@@ -1,0 +1,10 @@
+//! In-tree substrates for crates unavailable in the offline registry:
+//! a fast deterministic RNG, descriptive statistics, and a minimal JSON
+//! parser (used for `artifacts/manifest.json`).
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+pub use stats::Summary;

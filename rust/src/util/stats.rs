@@ -1,0 +1,103 @@
+//! Descriptive statistics over profiling samples. The paper's narrow SLOs
+//! bound min/max/avg/std/n-th-percentile values of a metric (§4.1), so a
+//! single summary type carries all of them.
+
+/// Summary statistics of a sample set (latency runs, energy draws, ...).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    /// Sorted copy of the samples, kept for percentile queries.
+    sorted: Vec<f64>,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Self {
+        assert!(!samples.is_empty(), "empty sample set");
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            sorted,
+        }
+    }
+
+    /// p-th percentile (0..=100), linear interpolation between ranks.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let p = p.clamp(0.0, 100.0);
+        if self.n == 1 {
+            return self.sorted[0];
+        }
+        let rank = p / 100.0 * (self.n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.sorted[lo] * (1.0 - frac) + self.sorted[hi] * frac
+    }
+
+    /// Coefficient of variation (std / mean).
+    pub fn cv(&self) -> f64 {
+        if self.mean == 0.0 { 0.0 } else { self.std / self.mean }
+    }
+
+    /// Multiply the whole distribution by `c > 0` (O(n), no re-sort:
+    /// positive scaling preserves order). Used by the contention model.
+    pub fn scaled(&self, c: f64) -> Summary {
+        assert!(c > 0.0, "scale factor must be positive");
+        Summary {
+            n: self.n,
+            mean: self.mean * c,
+            std: self.std * c,
+            min: self.min * c,
+            max: self.max * c,
+            sorted: self.sorted.iter().map(|x| x * c).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.mean, 2.5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.std - 1.118).abs() < 1e-3);
+    }
+
+    #[test]
+    fn percentiles() {
+        let s = Summary::of(&[10.0, 20.0, 30.0, 40.0, 50.0]);
+        assert_eq!(s.percentile(0.0), 10.0);
+        assert_eq!(s.percentile(50.0), 30.0);
+        assert_eq!(s.percentile(100.0), 50.0);
+        assert_eq!(s.percentile(25.0), 20.0);
+    }
+
+    #[test]
+    fn single_sample() {
+        let s = Summary::of(&[5.0]);
+        assert_eq!(s.percentile(99.0), 5.0);
+        assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_panics() {
+        Summary::of(&[]);
+    }
+}

@@ -1,0 +1,169 @@
+//! Workload generators for the four use cases: arrival processes that
+//! feed the serving coordinator and the trace driver.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::coordinator::serve::ServeRequest;
+use crate::util::Rng;
+
+/// Arrival process shapes.
+#[derive(Debug, Clone, Copy)]
+pub enum Arrival {
+    /// Fixed-rate stream (UC1's 24 FPS camera).
+    Periodic { hz: f64 },
+    /// Poisson arrivals (UC2's text messages).
+    Poisson { hz: f64 },
+    /// Bursts of `burst` back-to-back requests (UC4's face crops per
+    /// detected frame).
+    Bursty { hz: f64, burst: usize },
+}
+
+/// A synthetic workload for one task.
+#[derive(Debug, Clone, Copy)]
+pub struct TaskWorkload {
+    pub task: usize,
+    pub arrival: Arrival,
+    pub total: usize,
+}
+
+/// Generate the request timeline of a workload (offsets in seconds).
+pub fn timeline(w: &TaskWorkload, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed ^ (w.task as u64) << 32);
+    let mut out = Vec::with_capacity(w.total);
+    let mut t = 0.0;
+    match w.arrival {
+        Arrival::Periodic { hz } => {
+            for i in 0..w.total {
+                out.push(i as f64 / hz);
+            }
+        }
+        Arrival::Poisson { hz } => {
+            for _ in 0..w.total {
+                t += -rng.f64().max(1e-12).ln() / hz;
+                out.push(t);
+            }
+        }
+        Arrival::Bursty { hz, burst } => {
+            let mut emitted = 0;
+            while emitted < w.total {
+                for _ in 0..burst.min(w.total - emitted) {
+                    out.push(t);
+                    emitted += 1;
+                }
+                t += 1.0 / hz;
+            }
+        }
+    }
+    out
+}
+
+/// Spawn producer threads feeding `tx` according to the workloads, in
+/// real time (sleeps between arrivals). Returns the join handles.
+pub fn spawn_producers(
+    workloads: Vec<TaskWorkload>,
+    tx: mpsc::Sender<ServeRequest>,
+    seed: u64,
+    time_scale: f64,
+) -> Vec<std::thread::JoinHandle<()>> {
+    workloads
+        .into_iter()
+        .map(|w| {
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                let times = timeline(&w, seed);
+                let start = Instant::now();
+                for (i, &due) in times.iter().enumerate() {
+                    let due = due * time_scale;
+                    let elapsed = start.elapsed().as_secs_f64();
+                    if due > elapsed {
+                        std::thread::sleep(std::time::Duration::from_secs_f64(due - elapsed));
+                    }
+                    let _ = tx.send(ServeRequest {
+                        task: w.task,
+                        id: (w.task as u64) << 48 | i as u64,
+                        submitted: Instant::now(),
+                    });
+                }
+            })
+        })
+        .collect()
+}
+
+/// Canonical workloads per use case (arrival shapes from §6.2).
+pub fn for_use_case(uc: &str, requests_per_task: usize) -> Vec<TaskWorkload> {
+    match uc {
+        "uc1" => vec![TaskWorkload {
+            task: 0,
+            arrival: Arrival::Periodic { hz: 24.0 },
+            total: requests_per_task,
+        }],
+        "uc2" => vec![TaskWorkload {
+            task: 0,
+            arrival: Arrival::Poisson { hz: 10.0 },
+            total: requests_per_task,
+        }],
+        "uc3" => vec![
+            TaskWorkload { task: 0, arrival: Arrival::Periodic { hz: 10.0 }, total: requests_per_task },
+            TaskWorkload { task: 1, arrival: Arrival::Periodic { hz: 1.0 / 0.975 }, total: requests_per_task },
+        ],
+        "uc4" => (0..3)
+            .map(|t| TaskWorkload {
+                task: t,
+                arrival: Arrival::Bursty { hz: 5.0, burst: 4 },
+                total: requests_per_task,
+            })
+            .collect(),
+        _ => Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn periodic_timeline_spacing() {
+        let w = TaskWorkload { task: 0, arrival: Arrival::Periodic { hz: 24.0 }, total: 48 };
+        let t = timeline(&w, 1);
+        assert_eq!(t.len(), 48);
+        assert!((t[1] - t[0] - 1.0 / 24.0).abs() < 1e-9);
+        assert!((t[47] - 47.0 / 24.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn poisson_mean_rate_close() {
+        let w = TaskWorkload { task: 0, arrival: Arrival::Poisson { hz: 100.0 }, total: 5000 };
+        let t = timeline(&w, 2);
+        let rate = t.len() as f64 / t.last().unwrap();
+        assert!((rate - 100.0).abs() < 10.0, "rate {rate}");
+    }
+
+    #[test]
+    fn bursts_are_coincident() {
+        let w = TaskWorkload { task: 0, arrival: Arrival::Bursty { hz: 5.0, burst: 4 }, total: 12 };
+        let t = timeline(&w, 3);
+        assert_eq!(t.len(), 12);
+        assert_eq!(t[0], t[3]);
+        assert!(t[4] > t[3]);
+    }
+
+    #[test]
+    fn use_case_task_counts() {
+        assert_eq!(for_use_case("uc1", 10).len(), 1);
+        assert_eq!(for_use_case("uc3", 10).len(), 2);
+        assert_eq!(for_use_case("uc4", 10).len(), 3);
+    }
+
+    #[test]
+    fn timelines_monotone() {
+        for uc in ["uc1", "uc2", "uc3", "uc4"] {
+            for w in for_use_case(uc, 50) {
+                let t = timeline(&w, 7);
+                for i in 1..t.len() {
+                    assert!(t[i] >= t[i - 1]);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! Model zoo registry: the paper's model suites (Tables 2–5) plus the
+//! mapping onto the executable JAX/Pallas artifacts built by
+//! `python/compile/aot.py`.
+//!
+//! Two tiers (DESIGN.md §6):
+//! * **registry models** — every model the paper evaluates, with its
+//!   published FLOPs / parameter counts / per-scheme accuracies, so the
+//!   MOO problems CARIn solves here are the paper's exact decision
+//!   problems;
+//! * **executable stand-ins** — each registry model references the
+//!   artifact of a compact zoo model of the same family and scale class,
+//!   which the PJRT runtime actually loads and runs on the request path.
+
+pub mod registry;
+
+pub use registry::{ModelEntry, Registry, Task};
+
+/// Post-training quantisation schemes (paper Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Scheme {
+    Fp32,
+    Fp16,
+    Dr8,
+    Fx8,
+    Ffx8,
+}
+
+impl Scheme {
+    pub const ALL: [Scheme; 5] =
+        [Scheme::Fp32, Scheme::Fp16, Scheme::Dr8, Scheme::Fx8, Scheme::Ffx8];
+
+    /// Weight bytes per parameter (Table 1: FP16 halves, int8 quarters).
+    pub fn bytes_per_param(self) -> f64 {
+        match self {
+            Scheme::Fp32 => 4.0,
+            Scheme::Fp16 => 2.0,
+            Scheme::Dr8 | Scheme::Fx8 | Scheme::Ffx8 => 1.0,
+        }
+    }
+
+    /// True for the schemes whose compute path is integer-dominant.
+    pub fn is_integer(self) -> bool {
+        matches!(self, Scheme::Dr8 | Scheme::Fx8 | Scheme::Ffx8)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scheme::Fp32 => "fp32",
+            Scheme::Fp16 => "fp16",
+            Scheme::Dr8 => "dr8",
+            Scheme::Fx8 => "fx8",
+            Scheme::Ffx8 => "ffx8",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Scheme> {
+        Scheme::ALL.iter().copied().find(|x| x.name() == s)
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            Scheme::Fp32 => 0,
+            Scheme::Fp16 => 1,
+            Scheme::Dr8 => 2,
+            Scheme::Fx8 => 3,
+            Scheme::Ffx8 => 4,
+        }
+    }
+}
+
+/// A concrete (model, scheme) pair — one row of the model repository.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Variant {
+    /// Index into [`Registry::models`].
+    pub model: usize,
+    pub scheme: Scheme,
+}
+
+impl Variant {
+    /// Stored model file size in bytes.
+    pub fn size_bytes(&self, reg: &Registry) -> f64 {
+        let m = &reg.models[self.model];
+        m.mparams * 1e6 * self.scheme.bytes_per_param()
+    }
+
+    /// Computational workload in FLOPs (scheme-independent).
+    pub fn flops(&self, reg: &Registry) -> f64 {
+        reg.models[self.model].gflops * 1e9
+    }
+
+    /// Task accuracy of this variant, if the scheme exists for the model.
+    pub fn accuracy(&self, reg: &Registry) -> Option<f64> {
+        reg.models[self.model].accuracy[self.scheme.index()]
+    }
+
+    pub fn describe(&self, reg: &Registry) -> String {
+        format!(
+            "{} {}",
+            reg.models[self.model].name,
+            self.scheme.name().to_uppercase()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_size_factors() {
+        assert_eq!(Scheme::Fp32.bytes_per_param(), 4.0);
+        assert_eq!(Scheme::Fp16.bytes_per_param(), 2.0);
+        assert_eq!(Scheme::Ffx8.bytes_per_param(), 1.0);
+    }
+
+    #[test]
+    fn scheme_roundtrip_names() {
+        for s in Scheme::ALL {
+            assert_eq!(Scheme::from_name(s.name()), Some(s));
+        }
+        assert_eq!(Scheme::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn variant_size() {
+        let reg = Registry::paper();
+        let mnv2 = reg.find("MobileNet V2 1.0").unwrap();
+        let v = Variant { model: mnv2, scheme: Scheme::Fp32 };
+        // 3.49 M params * 4 B
+        assert!((v.size_bytes(&reg) - 13.96e6).abs() < 1e4);
+        let v8 = Variant { model: mnv2, scheme: Scheme::Dr8 };
+        assert!((v.size_bytes(&reg) / v8.size_bytes(&reg) - 4.0).abs() < 1e-9);
+    }
+}

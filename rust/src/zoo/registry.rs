@@ -1,0 +1,237 @@
+//! The paper's model suites, transcribed from Tables 2–5.
+//!
+//! Accuracy cells that the ACM/arXiv source renders illegibly (parts of
+//! Tables 3 and 5) are filled with values consistent with the paper's
+//! prose and marked `estimated: true`; they sit between the published
+//! neighbours and preserve every ordering the evaluation relies on.
+//! UC4's age model reports mean-absolute-error (lower-better); it is
+//! stored as the higher-better quality `100 - MAE` so a single accuracy
+//! direction serves all tasks (documented in DESIGN.md §6).
+
+use super::Scheme;
+
+/// DL task identifiers used by the four use cases (§6.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Task {
+    /// UC1: image classification on ImageNet-1k.
+    ImageCls,
+    /// UC2: text classification (emotions).
+    TextCls,
+    /// UC3 task 1: scene classification (MIT Indoor Scenes).
+    SceneCls,
+    /// UC3 task 2: audio event classification (AudioSet).
+    AudioCls,
+    /// UC4: gender / age / ethnicity estimation on UTKFace.
+    FaceGender,
+    FaceAge,
+    FaceEth,
+}
+
+impl Task {
+    pub fn name(self) -> &'static str {
+        match self {
+            Task::ImageCls => "image-classification",
+            Task::TextCls => "text-classification",
+            Task::SceneCls => "scene-classification",
+            Task::AudioCls => "audio-classification",
+            Task::FaceGender => "face-gender",
+            Task::FaceAge => "face-age",
+            Task::FaceEth => "face-ethnicity",
+        }
+    }
+}
+
+/// Architecture family — drives the per-engine execution profile of the
+/// device simulator (transformers vectorise worse on NPUs/DSPs, etc.).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    Cnn,
+    Transformer,
+    Audio,
+}
+
+/// One registry model (a row of Tables 2–5).
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: &'static str,
+    pub family: Family,
+    pub task: Task,
+    /// Input edge (pixels), sequence length (tokens) or samples (audio).
+    pub input_size: usize,
+    /// Published workload in GFLOPs.
+    pub gflops: f64,
+    /// Published parameter count in millions.
+    pub mparams: f64,
+    /// Accuracy per scheme [fp32, fp16, dr8, fx8, ffx8]; `None` where the
+    /// paper publishes no variant (e.g. MobileViT int8, YAMNet fx8/ffx8).
+    pub accuracy: [Option<f64>; 5],
+    /// Batch size used at inference (UC4 uses 4).
+    pub batch: usize,
+    /// Executable stand-in: artifact stem produced by `compile/aot.py`.
+    pub artifact: &'static str,
+    /// True where an illegible table cell was reconstructed (see module doc).
+    pub estimated: bool,
+}
+
+/// The model repository: every model of Tables 2–5.
+#[derive(Debug, Clone)]
+pub struct Registry {
+    pub models: Vec<ModelEntry>,
+}
+
+const fn acc5(a: f64, b: f64, c: f64, d: f64, e: f64) -> [Option<f64>; 5] {
+    [Some(a), Some(b), Some(c), Some(d), Some(e)]
+}
+
+const fn acc2(a: f64, b: f64) -> [Option<f64>; 5] {
+    [Some(a), Some(b), None, None, None]
+}
+
+const fn acc3(a: f64, b: f64, c: f64) -> [Option<f64>; 5] {
+    [Some(a), Some(b), Some(c), None, None]
+}
+
+impl Registry {
+    /// The paper's full model suite.
+    pub fn paper() -> Registry {
+        use Family::*;
+        use Task::*;
+        let m = |name, family, task, input_size, gflops, mparams, accuracy,
+                 batch, artifact, estimated| ModelEntry {
+            name, family, task, input_size, gflops, mparams, accuracy,
+            batch, artifact, estimated,
+        };
+        Registry {
+            models: vec![
+                // ---- Table 2: UC1, image classification on ImageNet-1k ----
+                m("MobileNet V2 1.0", Cnn, ImageCls, 224, 0.60, 3.49,
+                  acc5(71.92, 71.96, 71.65, 71.28, 71.26), 1, "cnn_s", false),
+                m("RegNetY 008", Cnn, ImageCls, 224, 1.60, 6.25,
+                  acc5(74.28, 74.28, 74.18, 74.45, 74.47), 1, "cnn_m", false),
+                m("MobileViT XS", Transformer, ImageCls, 256, 2.10, 2.31,
+                  acc2(74.61, 74.61), 1, "vit_xs", false),
+                m("EfficientNet Lite0", Cnn, ImageCls, 224, 0.77, 4.63,
+                  acc5(75.19, 75.23, 75.14, 75.09, 75.11), 1, "cnn_m", false),
+                m("MobileNet V2 1.4", Cnn, ImageCls, 224, 1.16, 6.09,
+                  acc5(75.66, 75.68, 75.47, 75.41, 75.45), 1, "cnn_m", false),
+                m("RegNetY 016", Cnn, ImageCls, 224, 3.23, 11.18,
+                  acc5(76.76, 76.76, 76.62, 76.92, 76.84), 1, "cnn_l", false),
+                m("MobileViT S", Transformer, ImageCls, 256, 4.06, 5.57,
+                  acc2(78.31, 78.30), 1, "vit_xs", false),
+                m("EfficientNet Lite4", Cnn, ImageCls, 300, 5.11, 12.95,
+                  acc5(80.81, 80.80, 80.78, 80.69, 80.71), 1, "cnn_l", false),
+                // ---- Table 3: UC2, text classification on Emotions ----
+                // (accuracy cells partially illegible in the source; the
+                // legible anchors are XtremeDistil fp16 = 93.30 and
+                // MobileBERT fp16 = 93.80.)
+                m("BERT-L2-H128", Transformer, TextCls, 64, 0.05, 4.4,
+                  acc5(91.45, 91.45, 91.30, 91.10, 91.05), 1, "bert_s", true),
+                m("XtremeDistil-L6-H256", Transformer, TextCls, 64, 0.63, 12.8,
+                  acc5(93.35, 93.30, 93.20, 93.05, 93.00), 1, "bert_m", true),
+                m("MobileBERT-L24-H512", Transformer, TextCls, 64, 2.66, 25.3,
+                  acc5(93.85, 93.80, 93.65, 93.50, 93.45), 1, "bert_l", true),
+                // ---- Table 4: UC3, scene + audio classification ----
+                m("EfficientNet Lite0 (scene)", Cnn, SceneCls, 224, 0.59, 3.44,
+                  acc5(69.78, 69.70, 68.96, 69.18, 69.18), 1, "scene_s", false),
+                m("EfficientNet Lite2 (scene)", Cnn, SceneCls, 260, 1.51, 4.87,
+                  acc5(76.72, 76.72, 77.16, 77.69, 77.54), 1, "scene_m", false),
+                m("EfficientNet Lite4 (scene)", Cnn, SceneCls, 300, 4.57, 11.76,
+                  acc5(79.33, 79.33, 79.18, 79.78, 79.48), 1, "scene_l", false),
+                // YAMNet mAP is stored x100 to share the accuracy scale.
+                m("YAMNet", Audio, AudioCls, 15600, 0.14, 3.75,
+                  acc3(37.56, 37.57, 36.20), 1, "yamnet_lite", false),
+                // ---- Table 5: UC4, facial attribute prediction ----
+                // (gender row legible; age/ethnicity cells reconstructed.
+                // Age quality = 100 - MAE.)
+                m("GenderNet-MNV2", Cnn, FaceGender, 62, 0.04, 0.66,
+                  acc5(95.12, 94.95, 94.90, 94.79, 94.90), 4, "face_gender", false),
+                m("AgeNet-MNV2", Cnn, FaceAge, 62, 0.04, 0.66,
+                  acc5(94.65, 94.63, 94.58, 94.52, 94.55), 4, "face_age", true),
+                m("EthniNet-MNV2", Cnn, FaceEth, 62, 0.04, 0.66,
+                  acc5(80.21, 80.18, 80.02, 79.85, 79.92), 4, "face_eth", true),
+            ],
+        }
+    }
+
+    pub fn find(&self, name: &str) -> Option<usize> {
+        self.models.iter().position(|m| m.name == name)
+    }
+
+    /// All models for a given task.
+    pub fn for_task(&self, task: Task) -> Vec<usize> {
+        (0..self.models.len())
+            .filter(|&i| self.models[i].task == task)
+            .collect()
+    }
+
+    /// All valid variants (model x scheme with published accuracy) of a task.
+    pub fn variants_for_task(&self, task: Task) -> Vec<super::Variant> {
+        let mut out = Vec::new();
+        for i in self.for_task(task) {
+            for s in Scheme::ALL {
+                if self.models[i].accuracy[s.index()].is_some() {
+                    out.push(super::Variant { model: i, scheme: s });
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_counts_match_tables() {
+        let reg = Registry::paper();
+        assert_eq!(reg.for_task(Task::ImageCls).len(), 8); // Table 2
+        assert_eq!(reg.for_task(Task::TextCls).len(), 3); // Table 3
+        assert_eq!(reg.for_task(Task::SceneCls).len(), 3); // Table 4 (vision)
+        assert_eq!(reg.for_task(Task::AudioCls).len(), 1); // Table 4 (audio)
+        assert_eq!(reg.for_task(Task::FaceGender).len(), 1); // Table 5
+    }
+
+    #[test]
+    fn mobilevit_has_no_int8_variants() {
+        let reg = Registry::paper();
+        for name in ["MobileViT XS", "MobileViT S"] {
+            let i = reg.find(name).unwrap();
+            assert!(reg.models[i].accuracy[Scheme::Dr8.index()].is_none());
+            assert!(reg.models[i].accuracy[Scheme::Ffx8.index()].is_none());
+        }
+    }
+
+    #[test]
+    fn yamnet_schemes_match_table4() {
+        let reg = Registry::paper();
+        let i = reg.find("YAMNet").unwrap();
+        assert!(reg.models[i].accuracy[Scheme::Dr8.index()].is_some());
+        assert!(reg.models[i].accuracy[Scheme::Fx8.index()].is_none());
+    }
+
+    #[test]
+    fn uc1_variant_count() {
+        let reg = Registry::paper();
+        // 6 models x 5 schemes + 2 MobileViT x 2 schemes = 34
+        assert_eq!(reg.variants_for_task(Task::ImageCls).len(), 34);
+    }
+
+    #[test]
+    fn uc4_batch_is_4() {
+        let reg = Registry::paper();
+        for t in [Task::FaceGender, Task::FaceAge, Task::FaceEth] {
+            for i in reg.for_task(t) {
+                assert_eq!(reg.models[i].batch, 4);
+            }
+        }
+    }
+
+    #[test]
+    fn every_model_has_artifact_standin() {
+        let reg = Registry::paper();
+        for m in &reg.models {
+            assert!(!m.artifact.is_empty());
+        }
+    }
+}

@@ -1,0 +1,297 @@
+//! Property-based tests over randomized inputs (mini in-tree property
+//! harness — proptest is not in the offline registry). Each property runs
+//! against many seeded random cases; failures print the offending seed.
+
+use carin::device::{profiles, Proc};
+use carin::moo::pareto::{dominates, front, non_dominated_sort};
+use carin::moo::rass::EnvState;
+use carin::moo::{rass, Metric, Statistic};
+use carin::profiler::stats::{contention_factor, scale};
+use carin::util::{Rng, Summary};
+use carin::zoo::Registry;
+
+/// Run a property over `n` seeded cases.
+fn forall(n: u64, prop: impl Fn(&mut Rng) -> Result<(), String>) {
+    for seed in 0..n {
+        let mut rng = Rng::new(seed * 0x9E37 + 1);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+fn random_vectors(rng: &mut Rng, n: usize, d: usize) -> Vec<Vec<f64>> {
+    (0..n)
+        .map(|_| (0..d).map(|_| rng.range(-50.0, 50.0)).collect())
+        .collect()
+}
+
+#[test]
+fn prop_dominance_is_irreflexive_and_antisymmetric() {
+    forall(200, |rng| {
+        let d = 2 + rng.below(4);
+        let higher: Vec<bool> = (0..d).map(|_| rng.chance(0.5)).collect();
+        let vs = random_vectors(rng, 20, d);
+        for a in &vs {
+            if dominates(a, a, &higher) {
+                return Err("irreflexivity violated".into());
+            }
+        }
+        for a in &vs {
+            for b in &vs {
+                if dominates(a, b, &higher) && dominates(b, a, &higher) {
+                    return Err("antisymmetry violated".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_front_members_are_mutually_nondominated() {
+    forall(100, |rng| {
+        let d = 2 + rng.below(3);
+        let higher: Vec<bool> = (0..d).map(|_| rng.chance(0.5)).collect();
+        let vs = random_vectors(rng, 40, d);
+        let f = front(&vs, &higher);
+        if f.is_empty() {
+            return Err("empty front".into());
+        }
+        for &i in &f {
+            for &j in &f {
+                if i != j && dominates(&vs[i], &vs[j], &higher) {
+                    return Err(format!("{i} dominates front member {j}"));
+                }
+            }
+        }
+        // every non-front point is dominated by someone
+        for i in 0..vs.len() {
+            if !f.contains(&i)
+                && !vs.iter().any(|v| dominates(v, &vs[i], &higher))
+            {
+                return Err(format!("{i} excluded but undominated"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_nds_rank0_equals_front() {
+    forall(60, |rng| {
+        let higher = vec![rng.chance(0.5), rng.chance(0.5)];
+        let vs = random_vectors(rng, 30, 2);
+        let f = front(&vs, &higher);
+        let ranks = non_dominated_sort(&vs, &higher);
+        let rank0: Vec<usize> =
+            (0..vs.len()).filter(|&i| ranks[i] == 0).collect();
+        if f != rank0 {
+            return Err(format!("front {f:?} != rank0 {rank0:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_summary_percentiles_monotone_and_bounded() {
+    forall(150, |rng| {
+        let n = 1 + rng.below(200);
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal_ms(10.0, 5.0)).collect();
+        let s = Summary::of(&xs);
+        let mut last = f64::NEG_INFINITY;
+        for p in [0.0, 10.0, 25.0, 50.0, 75.0, 90.0, 99.0, 100.0] {
+            let v = s.percentile(p);
+            if v < last - 1e-12 {
+                return Err(format!("percentile not monotone at {p}"));
+            }
+            if v < s.min - 1e-12 || v > s.max + 1e-12 {
+                return Err("percentile out of [min,max]".into());
+            }
+            last = v;
+        }
+        if s.std < 0.0 {
+            return Err("negative std".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_summary_scaling_is_linear() {
+    forall(100, |rng| {
+        let n = 2 + rng.below(100);
+        let xs: Vec<f64> = (0..n).map(|_| rng.range(0.1, 100.0)).collect();
+        let c = rng.range(0.1, 10.0);
+        let s = Summary::of(&xs);
+        let t = scale(&s, c);
+        for (a, b) in [(t.mean, s.mean * c), (t.std, s.std * c), (t.max, s.max * c)] {
+            if (a - b).abs() > 1e-6 * b.abs().max(1.0) {
+                return Err(format!("scaling broke: {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_contention_factor_monotone_superadditive() {
+    for k in 0..8 {
+        assert!(contention_factor(k + 1) > contention_factor(k));
+        // bounded by perfect time slicing
+        assert!(contention_factor(k) <= (k + 1) as f64);
+    }
+}
+
+#[test]
+fn prop_env_state_roundtrips_through_policy_codes() {
+    let reg = Registry::paper();
+    let p = carin::config::use_case("uc1", &reg, &profiles::galaxy_a71()).unwrap();
+    let sol = rass::solve(&p);
+    // iter_states must enumerate each state exactly once and design_for
+    // must agree with the enumeration
+    let states: Vec<(EnvState, usize)> = sol.policy.iter_states().collect();
+    assert_eq!(states.len(), sol.policy.n_states());
+    for (s, d) in &states {
+        assert_eq!(sol.policy.design_for(*s), *d);
+    }
+    // distinct states (as (troubled-mask-over-device-engines, memory))
+    let mut seen = std::collections::HashSet::new();
+    for (s, _) in &states {
+        let key = (s.troubled, s.memory);
+        assert!(seen.insert(key), "duplicate state {key:?}");
+    }
+}
+
+#[test]
+fn prop_policy_never_dangles() {
+    // for random subsets of devices/use-cases, every state maps to a
+    // design index inside the design set
+    let reg = Registry::paper();
+    for dev in profiles::all() {
+        for uc in carin::config::USE_CASES {
+            let p = carin::config::use_case(uc, &reg, &dev).unwrap();
+            let sol = rass::solve(&p);
+            for (_, d) in sol.policy.iter_states() {
+                assert!(d < sol.designs.len());
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_constraint_violation_sign_consistent() {
+    // violation() <= 0 iff satisfied(), on random constraints over a real
+    // problem's metric sets
+    let reg = Registry::paper();
+    let p = carin::config::use_case("uc1", &reg, &profiles::galaxy_s20()).unwrap();
+    forall(50, |rng| {
+        let x = &p.space[rng.below(p.space.len())];
+        let m = p.metrics(x);
+        let metric = *rng.choose(&[
+            Metric::Latency,
+            Metric::Energy,
+            Metric::MemFootprint,
+            Metric::Accuracy,
+        ]);
+        let stat = *rng.choose(&[Statistic::Avg, Statistic::Max, Statistic::Min]);
+        let bound = rng.range(0.0, 200.0);
+        let c = carin::moo::Constraint { metric, stat, task: None, bound };
+        let v = c.violation(&m);
+        if (v <= 0.0) != c.satisfied(&m) {
+            return Err(format!("sign mismatch v={v}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simulator_latency_positive_under_any_state() {
+    let reg = Registry::paper();
+    forall(60, |rng| {
+        let dev = profiles::all()[rng.below(3)].clone();
+        let mut sim = carin::device::Simulator::new(dev.clone(), rng.next_u64());
+        let engines = dev.engines.clone();
+        let e = *rng.choose(&engines);
+        sim.set_external_load(e, rng.f64());
+        sim.set_temperature(e, rng.range(20.0, 120.0));
+        sim.set_background_ram(rng.range(0.0, dev.ram_gb * 1e9));
+        let proc = match e {
+            carin::device::Engine::Cpu => Proc::Cpu { threads: 4, xnnpack: true },
+            carin::device::Engine::Gpu => Proc::Gpu,
+            carin::device::Engine::Npu => Proc::Npu,
+            carin::device::Engine::Dsp => Proc::Dsp,
+        };
+        // only scheme-compatible pairs are ever enumerated by the space
+        // builder; incompatible ones have no defined latency.
+        let tasks: Vec<_> = reg
+            .variants_for_task(carin::zoo::Task::ImageCls)
+            .into_iter()
+            .filter(|v| carin::device::compatible(&dev, proc, v.scheme))
+            .collect();
+        if tasks.is_empty() {
+            return Ok(());
+        }
+        let v = tasks[rng.below(tasks.len())];
+        let l = sim.sample_latency_ms(&reg, v, proc, rng.below(3));
+        if !(l.is_finite() && l > 0.0) {
+            return Err(format!("latency {l}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batcher_conserves_requests() {
+    use carin::coordinator::Batcher;
+    use std::time::{Duration, Instant};
+    forall(80, |rng| {
+        let cap = 1 + rng.below(8);
+        let n = rng.below(50);
+        let mut b = Batcher::new(cap, 4, Duration::from_secs(100));
+        let mut out = 0usize;
+        for i in 0..n {
+            let r = carin::coordinator::batcher::Request {
+                id: i as u64,
+                payload: vec![0.0; 4],
+                enqueued: Instant::now(),
+            };
+            if let Some(batch) = b.push(r) {
+                if batch.occupancy > cap {
+                    return Err("batch over capacity".into());
+                }
+                out += batch.occupancy;
+            }
+        }
+        if let Some(batch) = b.flush() {
+            out += batch.occupancy;
+        }
+        if out != n {
+            return Err(format!("lost requests: {out} != {n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_multi_metrics_bounds_hold_for_random_configs() {
+    let reg = Registry::paper();
+    let p = carin::config::use_case("uc3", &reg, &profiles::galaxy_s20()).unwrap();
+    forall(100, |rng| {
+        let x = &p.space[rng.below(p.space.len())];
+        let m = p.metrics(x);
+        let msz = m.tasks.len() as f64;
+        if m.stp > msz + 1e-9 {
+            return Err(format!("STP {} > M", m.stp));
+        }
+        if !(0.0..=1.0 + 1e-9).contains(&m.fairness) {
+            return Err(format!("F {} out of range", m.fairness));
+        }
+        for t in &m.tasks {
+            if t.ntt < 1.0 - 1e-12 {
+                return Err(format!("NTT {} < 1", t.ntt));
+            }
+        }
+        Ok(())
+    });
+}

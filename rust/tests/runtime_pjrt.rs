@@ -1,0 +1,165 @@
+//! Real-PJRT integration tests: load AOT artifacts, execute them on the
+//! CPU client, and verify the numbers against the python-side goldens
+//! (artifacts/goldens.json) — the end-to-end proof that the HLO-text +
+//! npz interchange preserves semantics across the language boundary.
+//!
+//! The whole suite shares a single PJRT client: xla_extension 0.5.1 is
+//! unreliable when several TfrtCpuClients are created and destroyed in
+//! one process (teardown segfaults), so one `#[test]` drives every
+//! scenario sequentially over one engine.
+//!
+//! The suite skips (passes trivially) when `make artifacts` has not run.
+
+use std::path::PathBuf;
+
+use carin::runtime::engine::{zero_input, InferenceEngine, Tensor};
+use carin::runtime::{load_manifest, ArtifactMeta};
+use carin::util::json::Json;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn goldens() -> Option<std::collections::BTreeMap<String, Vec<f64>>> {
+    let path = artifacts_dir().join("goldens.json");
+    let text = std::fs::read_to_string(path).ok()?;
+    match Json::parse(&text).ok()? {
+        Json::Obj(m) => Some(
+            m.into_iter()
+                .map(|(k, v)| {
+                    let vals = v
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|x| x.as_f64().unwrap())
+                        .collect();
+                    (k, vals)
+                })
+                .collect(),
+        ),
+        _ => None,
+    }
+}
+
+fn find<'a>(manifest: &'a [ArtifactMeta], stem: &str) -> &'a ArtifactMeta {
+    manifest.iter().find(|m| m.stem == stem).unwrap_or_else(|| panic!("{stem} missing"))
+}
+
+#[test]
+fn pjrt_engine_suite() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let manifest = load_manifest(&dir).expect("manifest parses");
+    let mut engine = InferenceEngine::cpu().expect("PJRT CPU client");
+    assert!(engine.platform().to_lowercase().contains("cpu"));
+
+    load_and_infer_one_model_per_family(&mut engine, &manifest);
+    outputs_match_python_goldens(&mut engine, &manifest);
+    repeated_inference_is_deterministic(&mut engine, &manifest);
+    infer_validates_shape_and_dtype(&mut engine, &manifest);
+    unload_frees_model(&mut engine, &manifest);
+    measure_returns_positive_latencies(&mut engine, &manifest);
+    quantised_variants_agree_on_top1(&mut engine, &manifest);
+}
+
+fn load_and_infer_one_model_per_family(engine: &mut InferenceEngine, manifest: &[ArtifactMeta]) {
+    for stem in ["cnn_s_fp32", "bert_s_fp32", "yamnet_lite_fp32", "face_gender_fp32"] {
+        let meta = find(manifest, stem);
+        engine.load(meta).unwrap_or_else(|e| panic!("{stem}: {e}"));
+        let out = engine.infer(stem, &zero_input(meta)).unwrap();
+        assert_eq!(out.len(), meta.outputs[0].numel(), "{stem} output size");
+        let v = out.to_f32(None);
+        assert!(v.iter().all(|x| x.is_finite()), "{stem} non-finite output");
+    }
+}
+
+fn outputs_match_python_goldens(engine: &mut InferenceEngine, manifest: &[ArtifactMeta]) {
+    let Some(gold) = goldens() else {
+        eprintln!("skipping goldens: goldens.json missing");
+        return;
+    };
+    // one artifact per (family x scheme class) covers every code path:
+    // f32, f16 dequant, dr8, fx8 (fused kernel), ffx8 int8 I/O, int32 ids.
+    let picks = [
+        "cnn_s_fp32", "cnn_s_fp16", "cnn_s_dr8", "cnn_s_fx8", "cnn_s_ffx8",
+        "bert_s_fp32", "bert_s_ffx8", "yamnet_lite_dr8", "face_eth_fx8",
+        "scene_m_fp16", "vit_xs_fp32",
+    ];
+    for stem in picks {
+        let meta = find(manifest, stem);
+        let want = gold.get(stem).unwrap_or_else(|| panic!("no golden for {stem}"));
+        engine.load(meta).unwrap();
+        let out = engine.infer(stem, &zero_input(meta)).unwrap();
+        let got = out.to_f32(None);
+        for (i, (&g, &w)) in got.iter().zip(want.iter()).enumerate() {
+            let w = w as f32;
+            let tol = if stem.ends_with("ffx8") {
+                1.001 // one int8 quantisation step
+            } else {
+                2e-3 * w.abs().max(1.0)
+            };
+            assert!((g - w).abs() <= tol, "{stem}[{i}]: rust {g} vs python {w}");
+        }
+    }
+}
+
+fn repeated_inference_is_deterministic(engine: &mut InferenceEngine, manifest: &[ArtifactMeta]) {
+    let meta = find(manifest, "cnn_s_ffx8");
+    engine.load(meta).unwrap();
+    let input = carin::runtime::engine::random_input(meta, 3);
+    let a = engine.infer("cnn_s_ffx8", &input).unwrap().to_f32(None);
+    let b = engine.infer("cnn_s_ffx8", &input).unwrap().to_f32(None);
+    assert_eq!(a, b);
+}
+
+fn infer_validates_shape_and_dtype(engine: &mut InferenceEngine, manifest: &[ArtifactMeta]) {
+    let meta = find(manifest, "cnn_s_fp32");
+    engine.load(meta).unwrap();
+    // wrong dtype
+    let bad = Tensor::I8(vec![0; meta.input.numel()]);
+    assert!(engine.infer("cnn_s_fp32", &bad).is_err());
+    // wrong size
+    let bad = Tensor::F32(vec![0.0; 3]);
+    assert!(engine.infer("cnn_s_fp32", &bad).is_err());
+    // unknown model
+    let ok = zero_input(meta);
+    assert!(engine.infer("nope", &ok).is_err());
+}
+
+fn unload_frees_model(engine: &mut InferenceEngine, manifest: &[ArtifactMeta]) {
+    let meta = find(manifest, "face_age_fp32");
+    engine.load(meta).unwrap();
+    assert!(engine.is_loaded("face_age_fp32"));
+    engine.unload("face_age_fp32");
+    assert!(!engine.is_loaded("face_age_fp32"));
+    assert!(engine.infer("face_age_fp32", &zero_input(meta)).is_err());
+}
+
+fn measure_returns_positive_latencies(engine: &mut InferenceEngine, manifest: &[ArtifactMeta]) {
+    let meta = find(manifest, "face_gender_ffx8");
+    engine.load(meta).unwrap();
+    let lat = engine
+        .measure("face_gender_ffx8", &zero_input(meta), 2, 10)
+        .unwrap();
+    assert_eq!(lat.len(), 10);
+    assert!(lat.iter().all(|&x| x > 0.0));
+}
+
+fn quantised_variants_agree_on_top1(engine: &mut InferenceEngine, manifest: &[ArtifactMeta]) {
+    // fp32 and fx8 variants of the same model must rank classes the same
+    // way on a random input (accuracy preservation, Tables 2-5 premise).
+    let f32m = find(manifest, "scene_s_fp32");
+    engine.load(f32m).unwrap();
+    engine.load(find(manifest, "scene_s_fx8")).unwrap();
+    let mut agree = 0;
+    for seed in 0..5 {
+        let input = carin::runtime::engine::random_input(f32m, seed);
+        let a = engine.infer("scene_s_fp32", &input).unwrap().argmax();
+        let b = engine.infer("scene_s_fx8", &input).unwrap().argmax();
+        agree += (a == b) as u32;
+    }
+    assert!(agree >= 4, "top-1 agreement {agree}/5");
+}
