@@ -46,18 +46,21 @@ fn main() -> anyhow::Result<()> {
         }
         for t in &report.tasks {
             println!(
-                "task {} [{:18}] {:4} reqs  exec mean {:7.3} ms  p95 {:7.3} ms  e2e mean {:7.3} ms",
+                "task {} [{:18}] {:4} reqs  exec mean {:7.3} ms  p95 {:7.3} ms  e2e mean {:7.3} ms  ({} retried, {} failed, {} shed)",
                 t.task,
                 t.artifact,
                 t.completed,
                 t.latency_ms.mean,
                 t.latency_ms.percentile(95.0),
                 t.e2e_ms.mean,
+                t.retried,
+                t.failed,
+                t.shed,
             );
         }
         println!(
-            "=> {} requests in {:.2} s = {:.1} req/s",
-            report.total_requests, report.wall_s, report.throughput_rps
+            "=> {} requests in {:.2} s = {:.1} req/s ({:.1} req/s goodput)",
+            report.total_requests, report.wall_s, report.throughput_rps, report.goodput_rps
         );
     }
     Ok(())

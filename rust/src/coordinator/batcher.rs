@@ -1,6 +1,8 @@
 //! Dynamic batcher: groups single-sample requests into fixed-size batch
 //! tensors (UC4 runs its face models at batch 4) with a deadline so tail
-//! requests are not starved.
+//! requests are not starved. Formed batches keep every member's enqueue
+//! timestamp and completion deadline, so the serving report can account
+//! e2e latency and deadline hits per request rather than per batch.
 
 use std::time::{Duration, Instant};
 
@@ -11,6 +13,8 @@ pub struct Request {
     /// Flat input payload for one sample.
     pub payload: Vec<f32>,
     pub enqueued: Instant,
+    /// Absolute completion deadline (None = no deadline).
+    pub deadline: Option<Instant>,
 }
 
 /// A formed batch.
@@ -21,6 +25,10 @@ pub struct Batch {
     pub payload: Vec<f32>,
     /// Number of real (non-padding) samples.
     pub occupancy: usize,
+    /// Per-member enqueue timestamps, aligned with `ids`.
+    pub enqueued: Vec<Instant>,
+    /// Per-member deadlines, aligned with `ids`.
+    pub deadlines: Vec<Option<Instant>>,
 }
 
 /// Deadline-bounded fixed-capacity batcher.
@@ -86,6 +94,8 @@ impl Batcher {
             ids: reqs.iter().map(|r| r.id).collect(),
             payload,
             occupancy: reqs.len(),
+            enqueued: reqs.iter().map(|r| r.enqueued).collect(),
+            deadlines: reqs.iter().map(|r| r.deadline).collect(),
         }
     }
 }
@@ -95,7 +105,12 @@ mod tests {
     use super::*;
 
     fn req(id: u64, len: usize) -> Request {
-        Request { id, payload: vec![id as f32; len], enqueued: Instant::now() }
+        Request {
+            id,
+            payload: vec![id as f32; len],
+            enqueued: Instant::now(),
+            deadline: None,
+        }
     }
 
     #[test]
@@ -144,5 +159,21 @@ mod tests {
         assert!(b.flush().is_none());
         b.push(req(1, 1));
         assert_eq!(b.flush().unwrap().occupancy, 1);
+    }
+
+    #[test]
+    fn batch_carries_per_member_timestamps_and_deadlines() {
+        let mut b = Batcher::new(2, 1, Duration::from_secs(60));
+        let t0 = Instant::now();
+        let dl = t0 + Duration::from_millis(50);
+        b.push(Request { id: 1, payload: vec![1.0], enqueued: t0, deadline: Some(dl) });
+        let batch = b
+            .push(Request { id: 2, payload: vec![2.0], enqueued: t0, deadline: None })
+            .unwrap();
+        assert_eq!(batch.enqueued.len(), 2);
+        assert_eq!(batch.deadlines, vec![Some(dl), None]);
+        // occupancy, ids and timestamps stay aligned
+        assert_eq!(batch.ids.len(), batch.occupancy);
+        assert_eq!(batch.enqueued.len(), batch.occupancy);
     }
 }

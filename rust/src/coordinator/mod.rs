@@ -10,5 +10,5 @@ pub mod trace;
 
 pub use batcher::{Batch, Batcher};
 pub use router::Router;
-pub use serve::{ServeReport, ServingCoordinator};
+pub use serve::{FaultPolicy, ServeReport, ServeRequest, ServingCoordinator, TaskReport};
 pub use trace::{run_trace, TraceLog, TracePoint};

@@ -1,8 +1,44 @@
-//! Serving front-end over the real PJRT engine: workload threads feed a
+//! Serving front-end over the inference engine: workload threads feed a
 //! request channel; the engine loop (PJRT types are not `Send`, so the
 //! engine lives on its owning thread) routes each request through the
 //! Runtime-Manager-selected design, batches where the model expects a
-//! batch, executes, and reports per-request latency.
+//! batch, executes under supervision, and reports per-request latency.
+//!
+//! # Fault model & recovery semantics
+//!
+//! The coordinator treats inference failure, slow execution and overload
+//! as first-class runtime states rather than process-terminating errors:
+//!
+//! * **Supervised execution** — every engine call is retried up to
+//!   [`FaultPolicy::max_attempts`] times with capped exponential backoff
+//!   ([`crate::util::Backoff`]). A request whose retries are exhausted is
+//!   counted `failed`, never propagated as a process error.
+//! * **Fault signaling** — after [`FaultPolicy::fault_threshold`]
+//!   consecutive exhausted-retry failures on a task, the engine carrying
+//!   that task's route is reported *faulted* to the [`Monitor`]; the
+//!   debounced [`EnvState::faulted`] bit drives the existing RASS
+//!   switching policy, which falls back to a design avoiding the engine.
+//!   Every [`FaultPolicy::probe_interval`] requests the faulted route is
+//!   health-probed off the request path; after
+//!   [`FaultPolicy::heal_threshold`] consecutive probe successes the
+//!   signal clears and the policy recovers to the calm design.
+//! * **Deadline-aware admission** — each [`ServeRequest`] may carry a
+//!   deadline derived from its task's SLO. A request whose remaining
+//!   budget is smaller than the task's running mean execution latency is
+//!   *shed at dequeue* (counted `shed`, not executed), protecting the
+//!   goodput of requests that can still make their deadlines.
+//!
+//! # Report taxonomy
+//!
+//! [`TaskReport`] counts per task: `completed` (successful executions),
+//! `retried` (engine calls that needed at least one retry), `failed`
+//! (requests whose retries were exhausted), `shed` (deadline-shed at
+//! dequeue) and `deadline_met` (completed in time; equals `completed`
+//! for deadline-free requests). [`ServeReport`] aggregates these and adds
+//! `goodput_rps` (successful-within-deadline requests per second),
+//! `fallback_switches` (design switches taken while a fault/overload
+//! signal was raised) and `recovered_switches` (switches back after the
+//! signal cleared).
 
 use std::collections::HashMap;
 use std::sync::mpsc;
@@ -10,48 +46,148 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coordinator::batcher::{Batcher, Request as BatchRequest};
+use crate::coordinator::batcher::{Batch, Batcher, Request as BatchRequest};
 use crate::coordinator::router::Router;
+use crate::device::Engine;
+use crate::manager::{Monitor, RuntimeManager};
 use crate::moo::Solution;
 use crate::runtime::engine::{random_input, InferenceEngine, Tensor};
+use crate::runtime::faults::Inference;
 use crate::runtime::ArtifactMeta;
-use crate::util::Summary;
+use crate::util::{Backoff, Summary};
 use crate::zoo::Registry;
 
-/// One serving request (payload generated if `None` — synthetic workload).
+/// One serving request (the synthetic workload generates payloads from
+/// the request id, so only routing metadata crosses the channel).
 #[derive(Debug)]
 pub struct ServeRequest {
     pub task: usize,
     pub id: u64,
     pub submitted: Instant,
+    /// Absolute completion deadline derived from the task's SLO; requests
+    /// that can no longer meet it are shed at dequeue instead of executed.
+    /// `None` disables shedding for this request.
+    pub deadline: Option<Instant>,
 }
 
-/// Per-task serving statistics.
+/// Supervision knobs for fault-tolerant serving.
+#[derive(Debug, Clone)]
+pub struct FaultPolicy {
+    /// Total attempts per engine call (1 = no retry).
+    pub max_attempts: usize,
+    /// First retry delay of the capped exponential backoff.
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_cap: Duration,
+    /// Consecutive exhausted-retry failures on a task before its routed
+    /// engine is reported faulted.
+    pub fault_threshold: usize,
+    /// Requests between health probes of a faulted route.
+    pub probe_interval: usize,
+    /// Consecutive probe successes before the fault signal clears.
+    pub heal_threshold: usize,
+    /// Monitor hysteresis: consecutive observations before a signal flips.
+    pub hysteresis_hold: usize,
+}
+
+impl Default for FaultPolicy {
+    fn default() -> Self {
+        FaultPolicy {
+            max_attempts: 3,
+            backoff_base: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(16),
+            fault_threshold: 2,
+            probe_interval: 8,
+            heal_threshold: 2,
+            hysteresis_hold: 2,
+        }
+    }
+}
+
+/// Per-task serving statistics. See the module docs for the taxonomy.
 #[derive(Debug)]
 pub struct TaskReport {
     pub task: usize,
     pub artifact: String,
+    /// Requests that executed successfully.
     pub completed: usize,
+    /// Engine calls that succeeded only after at least one retry.
+    pub retried: usize,
+    /// Requests whose retries were exhausted.
+    pub failed: usize,
+    /// Requests shed at dequeue because their deadline was unreachable.
+    pub shed: usize,
+    /// Completed requests that met their deadline (== `completed` when
+    /// requests carry no deadline).
+    pub deadline_met: usize,
+    /// Execution latency; [`Summary::empty`] when nothing completed.
     pub latency_ms: Summary,
-    /// Queue + batching + execution (request-to-response), ms.
+    /// Queue + batching + execution (request-to-response), ms, accounted
+    /// per request (batched requests use their own enqueue timestamps).
     pub e2e_ms: Summary,
     /// Executions that missed the task's latency SLO (if one is set).
     pub slo_misses: usize,
 }
 
-/// End-to-end serving report.
+/// End-to-end serving report. See the module docs for the taxonomy.
 #[derive(Debug)]
 pub struct ServeReport {
     pub tasks: Vec<TaskReport>,
     pub wall_s: f64,
     pub total_requests: usize,
-    /// Requests per second across tasks.
+    /// Completed requests per second across tasks.
     pub throughput_rps: f64,
+    /// Successful-within-deadline requests per second (goodput).
+    pub goodput_rps: f64,
+    /// Total retried engine calls across tasks.
+    pub retried: usize,
+    /// Total failed requests across tasks.
+    pub failed: usize,
+    /// Total shed requests across tasks.
+    pub shed: usize,
+    /// Design switches taken this run while a signal was raised.
+    pub fallback_switches: usize,
+    /// Design switches back to the calm design this run.
+    pub recovered_switches: usize,
 }
 
-/// The serving coordinator: owns the engine, router and batchers.
-pub struct ServingCoordinator {
-    engine: InferenceEngine,
+/// Mutable per-task accounting while a run is in flight.
+#[derive(Debug, Default)]
+struct TaskStats {
+    lat: Vec<f64>,
+    e2e: Vec<f64>,
+    exec_sum_ms: f64,
+    completed: usize,
+    retried: usize,
+    failed: usize,
+    shed: usize,
+    deadline_met: usize,
+}
+
+impl TaskStats {
+    fn mean_exec_ms(&self) -> f64 {
+        if self.lat.is_empty() {
+            0.0
+        } else {
+            self.exec_sum_ms / self.lat.len() as f64
+        }
+    }
+}
+
+/// Health-probe bookkeeping for one faulted route.
+#[derive(Debug)]
+struct ProbeState {
+    /// The artifact stem that was failing when the fault was raised.
+    stem: String,
+    /// Consecutive successful probes so far.
+    ok: usize,
+}
+
+/// The serving coordinator: owns the engine, router, batchers and the
+/// supervision loop (Runtime Manager + monitor) that keeps serving alive
+/// through engine faults.
+pub struct ServingCoordinator<E: Inference = InferenceEngine> {
+    engine: E,
     router: Router,
     manifest: Vec<ArtifactMeta>,
     /// Per-task batcher for batch>1 artifacts.
@@ -59,9 +195,16 @@ pub struct ServingCoordinator {
     n_tasks: usize,
     /// Optional per-execution latency SLO (ms) tracked in the report.
     slo_ms: Option<f64>,
+    policy: FaultPolicy,
+    monitor: Monitor,
+    rm: RuntimeManager,
+    /// Consecutive exhausted-retry failures per task.
+    consecutive_failures: Vec<usize>,
+    /// Engines currently reported faulted, with probe bookkeeping.
+    faulted: HashMap<Engine, ProbeState>,
 }
 
-impl ServingCoordinator {
+impl ServingCoordinator<InferenceEngine> {
     /// Compile and preload every artifact any design can route to — the
     /// RASS design set is small by construction, so this is the paper's
     /// storage/latency advantage over keeping the full zoo resident.
@@ -70,28 +213,46 @@ impl ServingCoordinator {
         solution: &Solution,
         manifest: Vec<ArtifactMeta>,
     ) -> Result<ServingCoordinator> {
-        let mut engine = InferenceEngine::cpu()?;
+        ServingCoordinator::with_engine(InferenceEngine::cpu()?, reg, solution, manifest)
+    }
+}
+
+impl<E: Inference> ServingCoordinator<E> {
+    /// Build a coordinator over any [`Inference`] executor (the real PJRT
+    /// engine, a [`crate::runtime::StubEngine`], or either wrapped in a
+    /// [`crate::runtime::FaultInjector`]).
+    pub fn with_engine(
+        engine: E,
+        reg: &Registry,
+        solution: &Solution,
+        manifest: Vec<ArtifactMeta>,
+    ) -> Result<ServingCoordinator<E>> {
+        let policy = FaultPolicy::default();
         let router = Router::new(reg, solution, &manifest)?;
-        for idx in router.preload_set() {
-            engine.load(&manifest[idx])?;
-        }
         let n_tasks = solution.designs[0].config.assignments.len();
-        let mut batchers = HashMap::new();
-        for t in 0..n_tasks {
-            let meta = &manifest[router.route_index(t)];
-            // a leading batch dimension only exists on rank-4 NHWC image
-            // inputs (UC4's face crops); 1-D waveforms and token sequences
-            // are single-sample.
-            let batch = if meta.input.shape.len() == 4 { meta.input.shape[0] } else { 1 };
-            if meta.input.dtype == crate::runtime::DType::F32 && batch > 1 {
-                let sample_len = meta.input.numel() / batch;
-                batchers.insert(
-                    t,
-                    Batcher::new(batch, sample_len, Duration::from_millis(5)),
-                );
-            }
+        let monitor = Monitor::new(solution.policy.engines.clone(), policy.hysteresis_hold);
+        let rm = RuntimeManager::new(solution.clone());
+        let mut coord = ServingCoordinator {
+            engine,
+            router,
+            manifest,
+            batchers: HashMap::new(),
+            n_tasks,
+            slo_ms: None,
+            policy,
+            monitor,
+            rm,
+            consecutive_failures: vec![0; n_tasks],
+            faulted: HashMap::new(),
+        };
+        let d0 = coord.rm.current_design();
+        coord.router.set_design(d0);
+        for idx in coord.router.preload_set() {
+            let meta = coord.manifest[idx].clone();
+            coord.supervised_load(&meta)?;
         }
-        Ok(ServingCoordinator { engine, router, manifest, batchers, n_tasks, slo_ms: None })
+        coord.batchers = build_batchers(&coord.manifest, &coord.router, coord.n_tasks);
+        Ok(coord)
     }
 
     /// Track executions against a latency SLO (ms); misses are reported
@@ -100,87 +261,138 @@ impl ServingCoordinator {
         self.slo_ms = Some(slo_ms);
     }
 
+    /// Replace the supervision knobs. Resets the monitor (hysteresis
+    /// counters restart) — call between runs, not mid-serve.
+    pub fn set_fault_policy(&mut self, policy: FaultPolicy) {
+        self.monitor = Monitor::new(
+            self.rm.solution.policy.engines.clone(),
+            policy.hysteresis_hold,
+        );
+        self.policy = policy;
+    }
+
     pub fn n_tasks(&self) -> usize {
         self.n_tasks
     }
 
+    /// Manually point the router at a design (benches/ablations; the
+    /// supervision loop normally drives this through the RM).
     pub fn set_design(&mut self, design: usize) {
         self.router.set_design(design);
+        self.batchers = build_batchers(&self.manifest, &self.router, self.n_tasks);
+    }
+
+    pub fn current_design(&self) -> usize {
+        self.router.design()
+    }
+
+    /// The Runtime Manager driving fault fallback/recovery (switch records
+    /// live here).
+    pub fn runtime_manager(&self) -> &RuntimeManager {
+        &self.rm
+    }
+
+    pub fn engine(&self) -> &E {
+        &self.engine
+    }
+
+    pub fn engine_mut(&mut self) -> &mut E {
+        &mut self.engine
     }
 
     pub fn loaded_models(&self) -> usize {
-        self.engine.loaded().len()
+        self.engine.loaded_count()
     }
 
     /// Serve a finite synthetic workload: `requests` arrive over an mpsc
     /// channel (producers run on their own threads); the engine loop
-    /// drains it until every producer hangs up.
+    /// drains it until every producer hangs up. Engine faults never abort
+    /// the loop — they are retried, shed around, or routed away from.
     pub fn serve(&mut self, rx: mpsc::Receiver<ServeRequest>) -> Result<ServeReport> {
         let t0 = Instant::now();
-        let mut lat: Vec<Vec<f64>> = vec![Vec::new(); self.n_tasks];
-        let mut e2e: Vec<Vec<f64>> = vec![Vec::new(); self.n_tasks];
-        let mut completed = vec![0usize; self.n_tasks];
+        let mut stats: Vec<TaskStats> = (0..self.n_tasks).map(|_| TaskStats::default()).collect();
+        self.consecutive_failures = vec![0; self.n_tasks];
+        let switches_before = self.rm.switches.len();
         let mut seed = 0u64;
+        let mut since_probe = 0usize;
 
         for req in rx.iter() {
             seed += 1;
+
+            // age out partial batches first so queued members are not
+            // starved past their deadline by a quiet task
+            self.flush_due_batches(&mut stats);
+
+            // supervision: debounced fault state -> RM -> router
+            self.observe_and_maybe_switch(t0, &mut stats);
+            since_probe += 1;
+            if !self.faulted.is_empty() && since_probe >= self.policy.probe_interval {
+                since_probe = 0;
+                self.probe_faulted(seed);
+                // a heal may have cleared the signal: recover promptly
+                self.observe_and_maybe_switch(t0, &mut stats);
+            }
+
             let t = req.task;
+
+            // deadline-aware admission: shed what cannot finish in time
+            if let Some(dl) = req.deadline {
+                let est = Duration::from_secs_f64(stats[t].mean_exec_ms() / 1000.0);
+                if dl.saturating_duration_since(Instant::now()) < est {
+                    stats[t].shed += 1;
+                    continue;
+                }
+            }
+
             let meta_idx = self.router.route_index(t);
-            let meta = &self.manifest[meta_idx];
-            if let Some(b) = self.batchers.get_mut(&t) {
+            let stem = self.manifest[meta_idx].stem.clone();
+            if self.batchers.contains_key(&t) {
                 // batched path: one engine call per formed batch
-                let sample_len = meta.input.numel() / meta.input.shape[0];
-                let maybe = b.push(BatchRequest {
+                let sample_len = {
+                    let meta = &self.manifest[meta_idx];
+                    meta.input.numel() / meta.input.shape[0]
+                };
+                let maybe = self.batchers.get_mut(&t).unwrap().push(BatchRequest {
                     id: req.id,
                     payload: vec_sample(sample_len, seed),
                     enqueued: req.submitted,
+                    deadline: req.deadline,
                 });
                 if let Some(batch) = maybe {
-                    let te = Instant::now();
-                    self.engine.infer(&meta.stem.clone(), &Tensor::F32(batch.payload))?;
-                    let exec_ms = te.elapsed().as_secs_f64() * 1000.0;
-                    for _ in 0..batch.occupancy {
-                        lat[t].push(exec_ms);
-                        completed[t] += 1;
-                    }
-                    e2e[t].push(req.submitted.elapsed().as_secs_f64() * 1000.0);
+                    self.execute_batch(t, &stem, batch, &mut stats);
                 }
             } else {
-                let input = random_input(meta, seed);
-                let te = Instant::now();
-                self.engine.infer(&meta.stem.clone(), &input)?;
-                lat[t].push(te.elapsed().as_secs_f64() * 1000.0);
-                e2e[t].push(req.submitted.elapsed().as_secs_f64() * 1000.0);
-                completed[t] += 1;
+                let input = random_input(&self.manifest[meta_idx], seed);
+                self.execute_one(t, &stem, &input, req.submitted, req.deadline, &mut stats);
             }
         }
-        // drain partial batches
-        for (t, b) in self.batchers.iter_mut() {
-            if let Some(batch) = b.flush() {
-                let meta = &self.manifest[self.router.route_index(*t)];
-                let te = Instant::now();
-                self.engine.infer(&meta.stem.clone(), &Tensor::F32(batch.payload))?;
-                let exec_ms = te.elapsed().as_secs_f64() * 1000.0;
-                for _ in 0..batch.occupancy {
-                    lat[*t].push(exec_ms);
-                    completed[*t] += 1;
-                }
-            }
-        }
+        // drain partial batches (their members' e2e is accounted normally)
+        self.flush_pending(&mut stats);
 
         let wall_s = t0.elapsed().as_secs_f64();
-        let total: usize = completed.iter().sum();
+        let total: usize = stats.iter().map(|s| s.completed).sum();
+        let met: usize = stats.iter().map(|s| s.deadline_met).sum();
+        let switches = &self.rm.switches[switches_before..];
+        let fallback_switches = switches.iter().filter(|s| !s.state.is_calm()).count();
+        let recovered_switches = switches.iter().filter(|s| s.state.is_calm()).count();
         let tasks = (0..self.n_tasks)
-            .map(|t| TaskReport {
-                task: t,
-                artifact: self.manifest[self.router.route_index(t)].stem.clone(),
-                completed: completed[t],
-                slo_misses: match self.slo_ms {
-                    Some(slo) => lat[t].iter().filter(|&&x| x > slo).count(),
-                    None => 0,
-                },
-                latency_ms: Summary::of(if lat[t].is_empty() { &[0.0] } else { &lat[t] }),
-                e2e_ms: Summary::of(if e2e[t].is_empty() { &[0.0] } else { &e2e[t] }),
+            .map(|t| {
+                let st = &stats[t];
+                TaskReport {
+                    task: t,
+                    artifact: self.manifest[self.router.route_index(t)].stem.clone(),
+                    completed: st.completed,
+                    retried: st.retried,
+                    failed: st.failed,
+                    shed: st.shed,
+                    deadline_met: st.deadline_met,
+                    slo_misses: match self.slo_ms {
+                        Some(slo) => st.lat.iter().filter(|&&x| x > slo).count(),
+                        None => 0,
+                    },
+                    latency_ms: Summary::of_or_empty(&st.lat),
+                    e2e_ms: Summary::of_or_empty(&st.e2e),
+                }
             })
             .collect();
         Ok(ServeReport {
@@ -188,8 +400,251 @@ impl ServingCoordinator {
             wall_s,
             total_requests: total,
             throughput_rps: total as f64 / wall_s,
+            goodput_rps: met as f64 / wall_s,
+            retried: stats.iter().map(|s| s.retried).sum(),
+            failed: stats.iter().map(|s| s.failed).sum(),
+            shed: stats.iter().map(|s| s.shed).sum(),
+            fallback_switches,
+            recovered_switches,
         })
     }
+
+    /// One supervised engine call: retry with capped exponential backoff.
+    /// Returns the successful attempt's execution latency (ms).
+    fn supervised_infer(
+        &mut self,
+        t: usize,
+        stem: &str,
+        input: &Tensor,
+        st: &mut TaskStats,
+    ) -> Result<f64> {
+        let mut backoff = Backoff::new(self.policy.backoff_base, self.policy.backoff_cap);
+        let mut attempt = 0usize;
+        loop {
+            attempt += 1;
+            let te = Instant::now();
+            match self.engine.infer(stem, input) {
+                Ok(_) => {
+                    if attempt > 1 {
+                        st.retried += 1;
+                    }
+                    self.consecutive_failures[t] = 0;
+                    return Ok(te.elapsed().as_secs_f64() * 1000.0);
+                }
+                Err(e) => {
+                    if attempt >= self.policy.max_attempts {
+                        return Err(e);
+                    }
+                    std::thread::sleep(backoff.next_delay());
+                }
+            }
+        }
+    }
+
+    /// Retrying model load (transient load faults are part of the fault
+    /// model; a persistent failure propagates).
+    fn supervised_load(&mut self, meta: &ArtifactMeta) -> Result<()> {
+        let mut backoff = Backoff::new(self.policy.backoff_base, self.policy.backoff_cap);
+        let mut attempt = 0usize;
+        loop {
+            attempt += 1;
+            match self.engine.load(meta) {
+                Ok(()) => return Ok(()),
+                Err(e) => {
+                    if attempt >= self.policy.max_attempts {
+                        return Err(e);
+                    }
+                    std::thread::sleep(backoff.next_delay());
+                }
+            }
+        }
+    }
+
+    fn execute_one(
+        &mut self,
+        t: usize,
+        stem: &str,
+        input: &Tensor,
+        submitted: Instant,
+        deadline: Option<Instant>,
+        stats: &mut [TaskStats],
+    ) {
+        match self.supervised_infer(t, stem, input, &mut stats[t]) {
+            Ok(exec_ms) => {
+                let done = Instant::now();
+                let st = &mut stats[t];
+                st.lat.push(exec_ms);
+                st.exec_sum_ms += exec_ms;
+                st.e2e.push(done.duration_since(submitted).as_secs_f64() * 1000.0);
+                st.completed += 1;
+                let met = match deadline {
+                    Some(dl) => done <= dl,
+                    None => true,
+                };
+                if met {
+                    st.deadline_met += 1;
+                }
+            }
+            Err(_) => {
+                stats[t].failed += 1;
+                self.note_failure(t);
+            }
+        }
+    }
+
+    fn execute_batch(&mut self, t: usize, stem: &str, batch: Batch, stats: &mut [TaskStats]) {
+        let Batch { payload, occupancy, enqueued, deadlines, .. } = batch;
+        let input = Tensor::F32(payload);
+        match self.supervised_infer(t, stem, &input, &mut stats[t]) {
+            Ok(exec_ms) => {
+                let done = Instant::now();
+                let st = &mut stats[t];
+                for i in 0..occupancy {
+                    st.lat.push(exec_ms);
+                    st.exec_sum_ms += exec_ms;
+                    // each member's own enqueue timestamp, not the batch
+                    // trigger's: queue time is part of its e2e.
+                    st.e2e.push(done.duration_since(enqueued[i]).as_secs_f64() * 1000.0);
+                    st.completed += 1;
+                    let met = match deadlines[i] {
+                        Some(dl) => done <= dl,
+                        None => true,
+                    };
+                    if met {
+                        st.deadline_met += 1;
+                    }
+                }
+            }
+            Err(_) => {
+                stats[t].failed += occupancy;
+                self.note_failure(t);
+            }
+        }
+    }
+
+    /// Exhausted-retry failure: raise the fault signal for the engine
+    /// carrying this task's route once the threshold is crossed.
+    fn note_failure(&mut self, t: usize) {
+        self.consecutive_failures[t] += 1;
+        if self.consecutive_failures[t] >= self.policy.fault_threshold {
+            let e = self.engine_of(t);
+            let stem = self.manifest[self.router.route_index(t)].stem.clone();
+            self.monitor.report_fault(e, true);
+            self.faulted.entry(e).or_insert(ProbeState { stem, ok: 0 });
+        }
+    }
+
+    /// The modeled engine serving task `t` under the current design.
+    fn engine_of(&self, t: usize) -> Engine {
+        self.rm.solution.designs[self.router.design()].config.assignments[t]
+            .proc
+            .engine()
+    }
+
+    /// Advance the monitor and let the RM fall back / recover.
+    fn observe_and_maybe_switch(&mut self, t0: Instant, stats: &mut [TaskStats]) {
+        let state = self.monitor.tick();
+        if let Some(d) = self.rm.observe(state, t0.elapsed().as_secs_f64()) {
+            self.apply_switch(d, stats);
+        }
+    }
+
+    /// Route to a new design: flush in-flight batches through the old
+    /// routes, repoint the router, make sure the new routes are resident
+    /// and rebuild the batchers for the new artifact shapes.
+    fn apply_switch(&mut self, design: usize, stats: &mut [TaskStats]) {
+        self.flush_pending(stats);
+        self.router.set_design(design);
+        for t in 0..self.n_tasks {
+            let idx = self.router.route_index(t);
+            if !self.engine.is_loaded(&self.manifest[idx].stem) {
+                let meta = self.manifest[idx].clone();
+                // a failed load leaves the route cold: requests on it will
+                // fail supervision and re-raise the fault signal, so the
+                // policy moves on rather than the process dying here.
+                let _ = self.supervised_load(&meta);
+            }
+        }
+        self.batchers = build_batchers(&self.manifest, &self.router, self.n_tasks);
+    }
+
+    /// Flush partial batches whose oldest member exceeded the batching
+    /// deadline; flushed members get full latency/e2e accounting.
+    fn flush_due_batches(&mut self, stats: &mut [TaskStats]) {
+        let now = Instant::now();
+        for t in 0..self.n_tasks {
+            let maybe = self.batchers.get_mut(&t).and_then(|b| b.flush_due(now));
+            if let Some(batch) = maybe {
+                let stem = self.manifest[self.router.route_index(t)].stem.clone();
+                self.execute_batch(t, &stem, batch, stats);
+            }
+        }
+    }
+
+    /// Execute every pending partial batch through its current route.
+    fn flush_pending(&mut self, stats: &mut [TaskStats]) {
+        for t in 0..self.n_tasks {
+            let maybe = self.batchers.get_mut(&t).and_then(|b| b.flush());
+            if let Some(batch) = maybe {
+                let stem = self.manifest[self.router.route_index(t)].stem.clone();
+                self.execute_batch(t, &stem, batch, stats);
+            }
+        }
+    }
+
+    /// Health-probe every faulted route off the request path; clear the
+    /// fault signal after `heal_threshold` consecutive successes.
+    fn probe_faulted(&mut self, seed: u64) {
+        let targets: Vec<(Engine, String)> = self
+            .faulted
+            .iter()
+            .map(|(e, p)| (*e, p.stem.clone()))
+            .collect();
+        for (e, stem) in targets {
+            let Some(input) = self
+                .manifest
+                .iter()
+                .find(|m| m.stem == stem)
+                .map(|meta| random_input(meta, seed))
+            else {
+                continue;
+            };
+            let healthy = self.engine.infer(&stem, &input).is_ok();
+            let mut healed = false;
+            if let Some(p) = self.faulted.get_mut(&e) {
+                if healthy {
+                    p.ok += 1;
+                    healed = p.ok >= self.policy.heal_threshold;
+                } else {
+                    p.ok = 0;
+                }
+            }
+            if healed {
+                self.monitor.report_fault(e, false);
+                self.faulted.remove(&e);
+            }
+        }
+    }
+}
+
+fn build_batchers(
+    manifest: &[ArtifactMeta],
+    router: &Router,
+    n_tasks: usize,
+) -> HashMap<usize, Batcher> {
+    let mut batchers = HashMap::new();
+    for t in 0..n_tasks {
+        let meta = &manifest[router.route_index(t)];
+        // a leading batch dimension only exists on rank-4 NHWC image
+        // inputs (UC4's face crops); 1-D waveforms and token sequences
+        // are single-sample.
+        let batch = if meta.input.shape.len() == 4 { meta.input.shape[0] } else { 1 };
+        if meta.input.dtype == crate::runtime::DType::F32 && batch > 1 {
+            let sample_len = meta.input.numel() / batch;
+            batchers.insert(t, Batcher::new(batch, sample_len, Duration::from_millis(5)));
+        }
+    }
+    batchers
 }
 
 fn vec_sample(len: usize, seed: u64) -> Vec<f32> {

@@ -205,18 +205,26 @@ fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
     }
     for t in &report.tasks {
         println!(
-            "task {} [{}]: {} done, exec mean {:.2} ms p95 {:.2} ms, e2e mean {:.2} ms",
+            "task {} [{}]: {} done ({} retried, {} failed, {} shed), exec mean {:.2} ms p95 {:.2} ms, e2e mean {:.2} ms",
             t.task,
             t.artifact,
             t.completed,
+            t.retried,
+            t.failed,
+            t.shed,
             t.latency_ms.mean,
             t.latency_ms.percentile(95.0),
             t.e2e_ms.mean
         );
     }
     println!(
-        "served {} requests in {:.2}s -> {:.1} req/s",
-        report.total_requests, report.wall_s, report.throughput_rps
+        "served {} requests in {:.2}s -> {:.1} req/s ({:.1} goodput), {} fallback / {} recovery switches",
+        report.total_requests,
+        report.wall_s,
+        report.throughput_rps,
+        report.goodput_rps,
+        report.fallback_switches,
+        report.recovered_switches
     );
     Ok(())
 }

@@ -3,12 +3,18 @@
 //! "several system parameters ... need to be continuously monitored").
 //!
 //! A hysteresis window debounces the signals so transient spikes do not
-//! cause design thrash.
+//! cause design thrash. Besides the simulator-sourced overload/memory
+//! signals, the monitor accepts an externally reported **fault** signal
+//! per engine (raised by the serving coordinator's supervised execution
+//! when a route fails repeatedly, cleared when health probes succeed);
+//! it is debounced with the same hold window and surfaces as
+//! [`EnvState::faulted`].
 
 use crate::device::{Engine, Simulator};
 use crate::moo::rass::EnvState;
 
-/// Debouncing monitor over the simulator's raw signals.
+/// Debouncing monitor over the simulator's raw signals plus the
+/// coordinator's fault reports.
 #[derive(Debug, Clone)]
 pub struct Monitor {
     engines: Vec<Engine>,
@@ -18,6 +24,11 @@ pub struct Monitor {
     counts_off: Vec<usize>,
     mem_on: usize,
     mem_off: usize,
+    fault_on: Vec<usize>,
+    fault_off: Vec<usize>,
+    /// Raw externally-reported fault bits (pre-debounce), over
+    /// [`Engine::index`].
+    fault_raw: u8,
     state: EnvState,
 }
 
@@ -31,6 +42,9 @@ impl Monitor {
             counts_off: vec![0; n],
             mem_on: 0,
             mem_off: 0,
+            fault_on: vec![0; n],
+            fault_off: vec![0; n],
+            fault_raw: 0,
             state: EnvState::calm(),
         }
     }
@@ -39,7 +53,55 @@ impl Monitor {
         self.state
     }
 
-    /// Sample the simulator; returns the (debounced) state.
+    /// Raise or clear the raw fault signal for an engine. The debounced
+    /// [`EnvState::faulted`] bit follows after `hold` consecutive
+    /// [`Monitor::tick`]/[`Monitor::sample`] observations.
+    pub fn report_fault(&mut self, e: Engine, faulted: bool) {
+        if faulted {
+            self.fault_raw |= 1 << e.index();
+        } else {
+            self.fault_raw &= !(1 << e.index());
+        }
+    }
+
+    /// Whether a raw (pre-debounce) fault is currently reported.
+    pub fn fault_reported(&self, e: Engine) -> bool {
+        self.fault_raw & (1 << e.index()) != 0
+    }
+
+    /// Debounce the externally-reported fault bits into `next`.
+    fn debounce_faults(&mut self, mut next: EnvState) -> EnvState {
+        for (i, &e) in self.engines.iter().enumerate() {
+            let raw = self.fault_raw & (1 << e.index()) != 0;
+            if raw {
+                self.fault_on[i] += 1;
+                self.fault_off[i] = 0;
+                if self.fault_on[i] >= self.hold && !next.is_faulted(e) {
+                    next = next.with_faulted(e);
+                }
+            } else {
+                self.fault_off[i] += 1;
+                self.fault_on[i] = 0;
+                if self.fault_off[i] >= self.hold && next.is_faulted(e) {
+                    next.faulted &= !(1 << e.index());
+                }
+            }
+        }
+        next
+    }
+
+    /// Advance only the fault signal — the serving loop has no device
+    /// simulator in the loop, so overload/memory bits keep their last
+    /// debounced value. Returns the (debounced) state.
+    pub fn tick(&mut self) -> EnvState {
+        let next = self.debounce_faults(self.state);
+        self.state = next;
+        next
+    }
+
+    /// Sample the simulator; returns the (debounced) state. Also advances
+    /// the fault-signal debounce, so mixed sim+fault deployments need only
+    /// one call per round.
     pub fn sample(&mut self, sim: &Simulator) -> EnvState {
         let mut next = self.state;
         for (i, &e) in self.engines.iter().enumerate() {
@@ -72,6 +134,7 @@ impl Monitor {
                 next.memory = false;
             }
         }
+        let next = self.debounce_faults(next);
         self.state = next;
         next
     }
@@ -107,5 +170,42 @@ mod tests {
         assert!(!mon.sample(&sim).memory);
         sim.set_background_ram(sim.device.ram_bytes() * 0.62);
         assert!(mon.sample(&sim).memory);
+    }
+
+    #[test]
+    fn fault_signal_debounces_like_overload() {
+        let dev = profiles::galaxy_s20();
+        let mut mon = Monitor::new(dev.engines.clone(), 2);
+        mon.report_fault(Engine::Cpu, true);
+        assert!(!mon.tick().is_faulted(Engine::Cpu));
+        assert!(mon.tick().is_faulted(Engine::Cpu));
+        // recovery also needs `hold` consecutive calm observations
+        mon.report_fault(Engine::Cpu, false);
+        assert!(mon.tick().is_faulted(Engine::Cpu));
+        assert!(!mon.tick().is_faulted(Engine::Cpu));
+        assert!(mon.state().is_calm());
+    }
+
+    #[test]
+    fn flapping_fault_never_flips_state() {
+        let dev = profiles::galaxy_s20();
+        let mut mon = Monitor::new(dev.engines.clone(), 3);
+        for i in 0..100 {
+            mon.report_fault(Engine::Gpu, i % 2 == 0);
+            assert!(!mon.tick().is_faulted(Engine::Gpu), "flap leaked at {i}");
+        }
+    }
+
+    #[test]
+    fn fault_and_sim_signals_compose() {
+        let dev = profiles::galaxy_s20();
+        let mut sim = Simulator::new(dev.clone(), 1);
+        let mut mon = Monitor::new(dev.engines.clone(), 1);
+        sim.set_external_load(Engine::Cpu, 0.9);
+        mon.report_fault(Engine::Gpu, true);
+        let s = mon.sample(&sim);
+        assert!(s.is_troubled(Engine::Cpu));
+        assert!(s.is_faulted(Engine::Gpu));
+        assert!(s.is_bad(Engine::Cpu) && s.is_bad(Engine::Gpu));
     }
 }

@@ -67,6 +67,18 @@ impl RuntimeManager {
         None
     }
 
+    /// Switches made while some signal (overload, fault, memory) was
+    /// raised — the RM falling back to a degraded design.
+    pub fn fallback_count(&self) -> usize {
+        self.switches.iter().filter(|s| !s.state.is_calm()).count()
+    }
+
+    /// Switches made once every signal cleared — the RM recovering to
+    /// the calm design.
+    pub fn recovery_count(&self) -> usize {
+        self.switches.iter().filter(|s| s.state.is_calm()).count()
+    }
+
     /// Mean decision latency across recorded switches (ns).
     pub fn mean_decision_ns(&self) -> f64 {
         if self.switches.is_empty() {
@@ -120,6 +132,20 @@ mod tests {
         m.observe(EnvState::calm().with_memory(), 1.0);
         // policy lookups must be far below OODIn's 0.55 ms best case
         assert!(m.mean_decision_ns() < 100_000.0, "{} ns", m.mean_decision_ns());
+    }
+
+    #[test]
+    fn faulted_state_falls_back_then_recovers() {
+        let mut m = rm();
+        // serving-path fault on the calm design's engine: degrade...
+        let f = EnvState::calm().with_faulted(Engine::Cpu);
+        let d = m.observe(f, 0.0);
+        assert!(d.is_some(), "fault signal must trigger a fallback switch");
+        // ...and recover once the probe path clears the signal.
+        let back = m.observe(EnvState::calm(), 1.0).unwrap();
+        assert!(m.solution.designs[back].roles.contains(&"d0"));
+        assert_eq!(m.fallback_count(), 1);
+        assert_eq!(m.recovery_count(), 1);
     }
 
     #[test]

@@ -27,19 +27,31 @@ pub const MAX_MAPPING_SETS: usize = 3;
 /// Environment state the Runtime Manager indexes the policy with.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct EnvState {
-    /// Troubled engines, as a bitmask over [`Engine::index`].
+    /// Troubled engines (overload/overheat), as a bitmask over
+    /// [`Engine::index`].
     pub troubled: u8,
+    /// Faulted engines: the supervised serving path observed repeated
+    /// execution failures on the engine's route. Distinct signal from
+    /// `troubled` (it comes from the coordinator, not the device
+    /// monitor) but routed identically by the policy — a faulted engine
+    /// must be avoided exactly like an overloaded one.
+    pub faulted: u8,
     /// Memory pressure (`c_m`).
     pub memory: bool,
 }
 
 impl EnvState {
     pub fn calm() -> EnvState {
-        EnvState { troubled: 0, memory: false }
+        EnvState { troubled: 0, faulted: 0, memory: false }
     }
 
     pub fn with_engine(mut self, e: Engine) -> EnvState {
         self.troubled |= 1 << e.index();
+        self
+    }
+
+    pub fn with_faulted(mut self, e: Engine) -> EnvState {
+        self.faulted |= 1 << e.index();
         self
     }
 
@@ -50,6 +62,24 @@ impl EnvState {
 
     pub fn is_troubled(&self, e: Engine) -> bool {
         self.troubled & (1 << e.index()) != 0
+    }
+
+    pub fn is_faulted(&self, e: Engine) -> bool {
+        self.faulted & (1 << e.index()) != 0
+    }
+
+    /// Engines the policy must route away from: troubled or faulted.
+    pub fn bad_mask(&self) -> u8 {
+        self.troubled | self.faulted
+    }
+
+    pub fn is_bad(&self, e: Engine) -> bool {
+        self.bad_mask() & (1 << e.index()) != 0
+    }
+
+    /// No signal of any kind is raised.
+    pub fn is_calm(&self) -> bool {
+        self.bad_mask() == 0 && !self.memory
     }
 }
 
@@ -69,7 +99,9 @@ impl SwitchingPolicy {
     fn state_code(&self, s: EnvState) -> usize {
         let mut code = 0usize;
         for (i, e) in self.engines.iter().enumerate() {
-            if s.is_troubled(*e) {
+            // faulted folds into the troubled bit: both mean "route away
+            // from this engine", so the policy table needs no extra states.
+            if s.is_bad(*e) {
                 code |= 1 << i;
             }
         }
@@ -351,6 +383,28 @@ mod tests {
         for (_, d) in s.policy.iter_states() {
             assert!(d < s.designs.len());
         }
+    }
+
+    #[test]
+    fn faulted_engine_routes_like_troubled() {
+        // the serving-path fault signal must trigger the same degraded
+        // design the overload signal does — one policy, two signal sources.
+        let (_, s) = uc1_s20();
+        for e in s.policy.engines.clone() {
+            assert_eq!(
+                s.policy.design_for(EnvState::calm().with_faulted(e)),
+                s.policy.design_for(EnvState::calm().with_engine(e)),
+            );
+            assert_eq!(
+                s.policy.design_for(EnvState::calm().with_faulted(e).with_memory()),
+                s.policy.design_for(EnvState::calm().with_engine(e).with_memory()),
+            );
+        }
+        // a faulted state is not calm and compares unequal to calm, so the
+        // RM sees the flip and the flip back.
+        let f = EnvState::calm().with_faulted(s.policy.engines[0]);
+        assert!(!f.is_calm());
+        assert_ne!(f, EnvState::calm());
     }
 
     #[test]

@@ -53,12 +53,16 @@ impl Tensor {
         }
     }
 
-    /// Index of the maximum element (top-1 class).
+    /// Index of the maximum element (top-1 class). NaN logits rank below
+    /// every real value (and `total_cmp` keeps the order total), so a
+    /// model emitting a bad logit yields a wrong class, never a panic in
+    /// the serve loop.
     pub fn argmax(&self) -> usize {
         let v = self.to_f32(None);
+        let key = |x: f32| if x.is_nan() { f32::NEG_INFINITY } else { x };
         v.iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| key(*a.1).total_cmp(&key(*b.1)))
             .map(|(i, _)| i)
             .unwrap_or(0)
     }
@@ -231,5 +235,28 @@ pub fn random_input(meta: &ArtifactMeta, seed: u64) -> Tensor {
         DType::F32 => Tensor::F32((0..n).map(|_| rng.normal() as f32).collect()),
         DType::I32 => Tensor::I32((0..n).map(|_| rng.below(1024) as i32).collect()),
         DType::I8 => Tensor::I8((0..n).map(|_| (rng.below(200) as i32 - 100) as i8).collect()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(Tensor::F32(vec![0.1, 0.9, 0.5]).argmax(), 1);
+        assert_eq!(Tensor::I8(vec![-3, 7, 2]).argmax(), 1);
+        assert_eq!(Tensor::F32(Vec::new()).argmax(), 0);
+    }
+
+    #[test]
+    fn argmax_survives_nan_logits() {
+        // NaN compares below every real under total_cmp: a bad output
+        // yields some class, never a panic mid-serve.
+        let t = Tensor::F32(vec![f32::NAN, 1.0, f32::NAN, 3.0, 2.0]);
+        assert_eq!(t.argmax(), 3);
+        // all-NaN still returns an index without panicking
+        let all = Tensor::F32(vec![f32::NAN, f32::NAN]);
+        assert!(all.argmax() < 2);
     }
 }

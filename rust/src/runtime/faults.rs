@@ -1,0 +1,520 @@
+//! Fault-injection harness for the serving path (the robustness
+//! substrate behind CARIn's "responsiveness under adversity" claim).
+//!
+//! Every executor sits behind the [`Inference`] trait; the
+//! [`FaultInjector`] decorator wraps any executor and injects **seeded,
+//! deterministic** faults with per-model probabilities:
+//!
+//! * *transient errors* — an inference call fails, the next may succeed;
+//! * *latency spikes* — the call succeeds but burns extra wall-clock;
+//! * *load failures* — compiling/uploading a model fails;
+//! * *outage windows* — a per-stem call-index interval during which every
+//!   call fails (a hard engine outage, used to force fallback switches).
+//!
+//! [`StubEngine`] is a PJRT-free executor (zero logits, optional fixed
+//! latency) so chaos tests and benches run without `make artifacts`;
+//! [`synthetic_manifest`] fabricates the matching artifact metadata for
+//! the whole model registry.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use super::artifact::{ArtifactMeta, DType, TensorSpec};
+use super::engine::{InferenceEngine, Tensor};
+use crate::util::Rng;
+use crate::zoo::{Registry, Scheme};
+
+/// The executor abstraction the serving coordinator supervises. The real
+/// PJRT engine, the stub engine and the fault injector all implement it,
+/// so supervision and injection compose with any backend.
+pub trait Inference {
+    /// Run one inference on a loaded model.
+    fn infer(&mut self, stem: &str, input: &Tensor) -> Result<Tensor>;
+    /// Compile an artifact and make it resident. Idempotent per stem.
+    fn load(&mut self, meta: &ArtifactMeta) -> Result<()>;
+    /// Drop a resident model.
+    fn unload(&mut self, stem: &str);
+    fn is_loaded(&self, stem: &str) -> bool;
+    /// Number of resident models.
+    fn loaded_count(&self) -> usize;
+}
+
+impl Inference for InferenceEngine {
+    fn infer(&mut self, stem: &str, input: &Tensor) -> Result<Tensor> {
+        InferenceEngine::infer(self, stem, input)
+    }
+
+    fn load(&mut self, meta: &ArtifactMeta) -> Result<()> {
+        InferenceEngine::load(self, meta)
+    }
+
+    fn unload(&mut self, stem: &str) {
+        InferenceEngine::unload(self, stem)
+    }
+
+    fn is_loaded(&self, stem: &str) -> bool {
+        InferenceEngine::is_loaded(self, stem)
+    }
+
+    fn loaded_count(&self) -> usize {
+        self.loaded().len()
+    }
+}
+
+/// What kind of fault was injected (error taxonomy for reports/tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// One-shot execution failure; retrying may succeed.
+    Transient,
+    /// Hard outage window: every call in the window fails.
+    Outage,
+    /// Model load/compile failure.
+    Load,
+}
+
+impl FaultKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Transient => "transient",
+            FaultKind::Outage => "outage",
+            FaultKind::Load => "load",
+        }
+    }
+}
+
+/// The error type injected faults surface as; supervised execution (and
+/// tests) can `downcast_ref::<InjectedFault>()` to classify failures.
+#[derive(Debug, Clone)]
+pub struct InjectedFault {
+    pub kind: FaultKind,
+    pub stem: String,
+    /// Per-stem call index at which the fault fired (1-based).
+    pub call: u64,
+}
+
+impl fmt::Display for InjectedFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "injected {} fault on {} (call #{})",
+            self.kind.name(),
+            self.stem,
+            self.call
+        )
+    }
+}
+
+impl std::error::Error for InjectedFault {}
+
+/// Per-model fault probabilities and schedules. All fields default to
+/// "no fault"; combine with the builder methods.
+#[derive(Debug, Clone, Default)]
+pub struct FaultSpec {
+    /// Per-call probability of a transient execution error.
+    pub transient_p: f64,
+    /// Per-call probability of a latency spike.
+    pub spike_p: f64,
+    /// Injected extra latency per spike, ms.
+    pub spike_ms: f64,
+    /// Per-call probability that a `load()` fails.
+    pub load_fail_p: f64,
+    /// Inclusive per-stem call-index window `[from, to]` (1-based) during
+    /// which every inference fails — a hard outage.
+    pub outage: Option<(u64, u64)>,
+}
+
+impl FaultSpec {
+    /// Only transient errors with probability `p`.
+    pub fn transient(p: f64) -> FaultSpec {
+        FaultSpec { transient_p: p, ..FaultSpec::default() }
+    }
+
+    /// Add latency spikes: probability `p`, `ms` extra wall-clock each.
+    pub fn with_spikes(mut self, p: f64, ms: f64) -> FaultSpec {
+        self.spike_p = p;
+        self.spike_ms = ms;
+        self
+    }
+
+    /// Add load failures with probability `p`.
+    pub fn with_load_failures(mut self, p: f64) -> FaultSpec {
+        self.load_fail_p = p;
+        self
+    }
+
+    /// Add a hard outage over the inclusive call window `[from, to]`.
+    pub fn with_outage(mut self, from: u64, to: u64) -> FaultSpec {
+        self.outage = Some((from, to));
+        self
+    }
+}
+
+/// Running injection counters (what the harness actually did).
+#[derive(Debug, Clone, Default)]
+pub struct FaultStats {
+    pub calls: u64,
+    pub injected_errors: u64,
+    pub injected_spikes: u64,
+    pub failed_loads: u64,
+}
+
+/// Deterministic fault-injecting decorator around any [`Inference`]
+/// executor. Faults are drawn from a seeded [`Rng`], so a given seed and
+/// call sequence replays the exact same fault schedule.
+pub struct FaultInjector<E: Inference> {
+    inner: E,
+    rng: Rng,
+    default_spec: FaultSpec,
+    per_stem: HashMap<String, FaultSpec>,
+    /// Per-stem inference call counts (1-based after increment).
+    calls: HashMap<String, u64>,
+    pub stats: FaultStats,
+}
+
+impl<E: Inference> FaultInjector<E> {
+    pub fn new(inner: E, seed: u64) -> FaultInjector<E> {
+        FaultInjector {
+            inner,
+            rng: Rng::new(seed ^ 0xFA17_FA17_FA17_FA17),
+            default_spec: FaultSpec::default(),
+            per_stem: HashMap::new(),
+            calls: HashMap::new(),
+            stats: FaultStats::default(),
+        }
+    }
+
+    /// Fault spec applied to stems without a dedicated entry.
+    pub fn set_default(&mut self, spec: FaultSpec) {
+        self.default_spec = spec;
+    }
+
+    /// Fault spec for one model stem (overrides the default).
+    pub fn set_for(&mut self, stem: &str, spec: FaultSpec) {
+        self.per_stem.insert(stem.to_string(), spec);
+    }
+
+    pub fn inner(&self) -> &E {
+        &self.inner
+    }
+
+    pub fn inner_mut(&mut self) -> &mut E {
+        &mut self.inner
+    }
+
+    pub fn into_inner(self) -> E {
+        self.inner
+    }
+
+    /// Inference calls observed for a stem so far.
+    pub fn calls_for(&self, stem: &str) -> u64 {
+        self.calls.get(stem).copied().unwrap_or(0)
+    }
+
+    fn spec_for(&self, stem: &str) -> FaultSpec {
+        self.per_stem.get(stem).unwrap_or(&self.default_spec).clone()
+    }
+}
+
+impl<E: Inference> Inference for FaultInjector<E> {
+    fn infer(&mut self, stem: &str, input: &Tensor) -> Result<Tensor> {
+        let call = {
+            let c = self.calls.entry(stem.to_string()).or_insert(0);
+            *c += 1;
+            *c
+        };
+        self.stats.calls += 1;
+        let spec = self.spec_for(stem);
+        if let Some((from, to)) = spec.outage {
+            if call >= from && call <= to {
+                self.stats.injected_errors += 1;
+                return Err(InjectedFault {
+                    kind: FaultKind::Outage,
+                    stem: stem.to_string(),
+                    call,
+                }
+                .into());
+            }
+        }
+        if spec.transient_p > 0.0 && self.rng.chance(spec.transient_p) {
+            self.stats.injected_errors += 1;
+            return Err(InjectedFault {
+                kind: FaultKind::Transient,
+                stem: stem.to_string(),
+                call,
+            }
+            .into());
+        }
+        if spec.spike_p > 0.0 && self.rng.chance(spec.spike_p) {
+            self.stats.injected_spikes += 1;
+            std::thread::sleep(Duration::from_secs_f64(spec.spike_ms.max(0.0) / 1000.0));
+        }
+        self.inner.infer(stem, input)
+    }
+
+    fn load(&mut self, meta: &ArtifactMeta) -> Result<()> {
+        let spec = self.spec_for(&meta.stem);
+        if spec.load_fail_p > 0.0 && self.rng.chance(spec.load_fail_p) {
+            self.stats.failed_loads += 1;
+            return Err(InjectedFault {
+                kind: FaultKind::Load,
+                stem: meta.stem.clone(),
+                call: self.calls_for(&meta.stem),
+            }
+            .into());
+        }
+        self.inner.load(meta)
+    }
+
+    fn unload(&mut self, stem: &str) {
+        self.inner.unload(stem)
+    }
+
+    fn is_loaded(&self, stem: &str) -> bool {
+        self.inner.is_loaded(stem)
+    }
+
+    fn loaded_count(&self) -> usize {
+        self.inner.loaded_count()
+    }
+}
+
+/// PJRT-free executor: validates requests against the artifact metadata
+/// and returns an all-zero logits tensor, optionally burning `exec_ms`
+/// of wall-clock per call. Lets chaos tests, examples and benches run
+/// the full coordinator stack without `make artifacts`.
+#[derive(Debug, Default)]
+pub struct StubEngine {
+    models: HashMap<String, ArtifactMeta>,
+    /// Simulated execution latency per call, ms (0 = instant).
+    pub exec_ms: f64,
+}
+
+impl StubEngine {
+    pub fn new() -> StubEngine {
+        StubEngine { models: HashMap::new(), exec_ms: 0.0 }
+    }
+
+    pub fn with_latency(exec_ms: f64) -> StubEngine {
+        StubEngine { models: HashMap::new(), exec_ms }
+    }
+}
+
+impl Inference for StubEngine {
+    fn infer(&mut self, stem: &str, input: &Tensor) -> Result<Tensor> {
+        let meta = self
+            .models
+            .get(stem)
+            .ok_or_else(|| anyhow!("model {stem} not loaded"))?;
+        if input.dtype() != meta.input.dtype {
+            return Err(anyhow!(
+                "{stem}: input dtype {:?} != manifest {:?}",
+                input.dtype(),
+                meta.input.dtype
+            ));
+        }
+        if input.len() != meta.input.numel() {
+            return Err(anyhow!(
+                "{stem}: input numel {} != manifest {}",
+                input.len(),
+                meta.input.numel()
+            ));
+        }
+        let n = meta.outputs[0].numel();
+        if self.exec_ms > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(self.exec_ms / 1000.0));
+        }
+        Ok(Tensor::F32(vec![0.0; n]))
+    }
+
+    fn load(&mut self, meta: &ArtifactMeta) -> Result<()> {
+        self.models.entry(meta.stem.clone()).or_insert_with(|| meta.clone());
+        Ok(())
+    }
+
+    fn unload(&mut self, stem: &str) {
+        self.models.remove(stem);
+    }
+
+    fn is_loaded(&self, stem: &str) -> bool {
+        self.models.contains_key(stem)
+    }
+
+    fn loaded_count(&self) -> usize {
+        self.models.len()
+    }
+}
+
+/// Fabricate an artifact manifest covering every (artifact, scheme) pair
+/// of the registry, for [`StubEngine`]-backed runs. Shapes are small and
+/// rank ≤ 2 (no batched rank-4 inputs) so payload generation stays cheap.
+pub fn synthetic_manifest(reg: &Registry) -> Vec<ArtifactMeta> {
+    let mut out: Vec<ArtifactMeta> = Vec::new();
+    for m in &reg.models {
+        for s in Scheme::ALL {
+            let stem = format!("{}_{}", m.artifact, s.name());
+            if out.iter().any(|a| a.stem == stem) {
+                continue;
+            }
+            let shape = if m.batch > 1 { vec![m.batch, 16] } else { vec![16] };
+            out.push(ArtifactMeta {
+                stem: stem.clone(),
+                hlo_path: format!("synthetic/{stem}.hlo.txt").into(),
+                weights_path: format!("synthetic/{stem}.npz").into(),
+                weight_keys: Vec::new(),
+                model: m.artifact.to_string(),
+                task: m.task.name().to_string(),
+                scheme: s.name().to_string(),
+                input: TensorSpec { shape, dtype: DType::F32 },
+                outputs: vec![TensorSpec { shape: vec![10], dtype: DType::F32 }],
+                params: (m.mparams * 1e6) as usize,
+                flops: m.gflops * 1e9,
+                weight_bytes: (m.mparams * 1e6 * s.bytes_per_param()) as usize,
+                input_scale: None,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::engine::random_input;
+
+    fn loaded_stub() -> (StubEngine, ArtifactMeta) {
+        let reg = Registry::paper();
+        let manifest = synthetic_manifest(&reg);
+        let meta = manifest[0].clone();
+        let mut e = StubEngine::new();
+        e.load(&meta).unwrap();
+        (e, meta)
+    }
+
+    #[test]
+    fn stub_engine_round_trip() {
+        let (mut e, meta) = loaded_stub();
+        assert!(e.is_loaded(&meta.stem));
+        assert_eq!(e.loaded_count(), 1);
+        let out = e.infer(&meta.stem, &random_input(&meta, 1)).unwrap();
+        assert_eq!(out.len(), meta.outputs[0].numel());
+        // validation mirrors the real engine's
+        assert!(e.infer(&meta.stem, &Tensor::F32(vec![0.0; 3])).is_err());
+        assert!(e.infer("nope", &random_input(&meta, 1)).is_err());
+        e.unload(&meta.stem);
+        assert!(!e.is_loaded(&meta.stem));
+    }
+
+    #[test]
+    fn synthetic_manifest_covers_registry_routes() {
+        let reg = Registry::paper();
+        let manifest = synthetic_manifest(&reg);
+        for m in &reg.models {
+            for s in Scheme::ALL {
+                assert!(
+                    crate::runtime::artifact::find(&manifest, m.artifact, s.name()).is_some(),
+                    "{} {} missing",
+                    m.artifact,
+                    s.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn transient_rate_tracks_probability() {
+        let (e, meta) = loaded_stub();
+        let mut inj = FaultInjector::new(e, 7);
+        inj.set_default(FaultSpec::transient(0.10));
+        let input = random_input(&meta, 1);
+        let mut errors = 0usize;
+        for _ in 0..2000 {
+            if inj.infer(&meta.stem, &input).is_err() {
+                errors += 1;
+            }
+        }
+        let rate = errors as f64 / 2000.0;
+        assert!((rate - 0.10).abs() < 0.03, "rate {rate}");
+        assert_eq!(inj.stats.injected_errors as usize, errors);
+        assert_eq!(inj.stats.calls, 2000);
+    }
+
+    #[test]
+    fn injection_is_deterministic_per_seed() {
+        let run = |seed: u64| -> Vec<bool> {
+            let (e, meta) = loaded_stub();
+            let mut inj = FaultInjector::new(e, seed);
+            inj.set_default(FaultSpec::transient(0.25));
+            let input = random_input(&meta, 1);
+            (0..200).map(|_| inj.infer(&meta.stem, &input).is_err()).collect()
+        };
+        assert_eq!(run(42), run(42));
+        assert_ne!(run(42), run(43));
+    }
+
+    #[test]
+    fn outage_window_is_exact() {
+        let (e, meta) = loaded_stub();
+        let mut inj = FaultInjector::new(e, 1);
+        inj.set_for(&meta.stem, FaultSpec::default().with_outage(3, 5));
+        let input = random_input(&meta, 1);
+        for call in 1u64..=8 {
+            let r = inj.infer(&meta.stem, &input);
+            if (3..=5).contains(&call) {
+                let err = r.unwrap_err();
+                let f = err.downcast_ref::<InjectedFault>().expect("typed fault");
+                assert_eq!(f.kind, FaultKind::Outage);
+                assert_eq!(f.call, call);
+            } else {
+                assert!(r.is_ok(), "call {call} should pass");
+            }
+        }
+    }
+
+    #[test]
+    fn spikes_add_latency() {
+        let (e, meta) = loaded_stub();
+        let mut inj = FaultInjector::new(e, 5);
+        inj.set_default(FaultSpec::default().with_spikes(1.0, 5.0));
+        let input = random_input(&meta, 1);
+        let t0 = std::time::Instant::now();
+        inj.infer(&meta.stem, &input).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(4));
+        assert_eq!(inj.stats.injected_spikes, 1);
+    }
+
+    #[test]
+    fn load_failures_inject() {
+        let reg = Registry::paper();
+        let meta = synthetic_manifest(&reg)[0].clone();
+        let mut inj = FaultInjector::new(StubEngine::new(), 3);
+        inj.set_default(FaultSpec::default().with_load_failures(1.0));
+        let err = inj.load(&meta).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<InjectedFault>().unwrap().kind,
+            FaultKind::Load
+        );
+        assert_eq!(inj.stats.failed_loads, 1);
+        // clearing the spec lets the load through
+        inj.set_default(FaultSpec::default());
+        inj.load(&meta).unwrap();
+        assert!(inj.is_loaded(&meta.stem));
+    }
+
+    #[test]
+    fn per_stem_spec_overrides_default() {
+        let reg = Registry::paper();
+        let manifest = synthetic_manifest(&reg);
+        let (a, b) = (manifest[0].clone(), manifest[1].clone());
+        let mut inj = FaultInjector::new(StubEngine::new(), 9);
+        inj.load(&a).unwrap();
+        inj.load(&b).unwrap();
+        inj.set_for(&a.stem, FaultSpec::transient(1.0));
+        let ia = random_input(&a, 1);
+        let ib = random_input(&b, 1);
+        assert!(inj.infer(&a.stem, &ia).is_err());
+        assert!(inj.infer(&b.stem, &ib).is_ok());
+    }
+}

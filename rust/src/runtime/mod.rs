@@ -12,6 +12,11 @@
 
 pub mod artifact;
 pub mod engine;
+pub mod faults;
 
 pub use artifact::{load_manifest, ArtifactMeta, DType};
 pub use engine::{InferenceEngine, LoadedModel, Tensor};
+pub use faults::{
+    synthetic_manifest, FaultInjector, FaultKind, FaultSpec, FaultStats, Inference,
+    InjectedFault, StubEngine,
+};

@@ -1,0 +1,76 @@
+//! Capped exponential backoff for supervised execution: the serving
+//! coordinator retries transient inference/load failures with delays
+//! `base * 2^attempt`, bounded by `cap`, so a glitching engine is given
+//! room to recover without head-of-line-blocking the request queue.
+
+use std::time::Duration;
+
+/// Capped exponential backoff schedule. Deterministic (no jitter): the
+/// serving loop is single-threaded per engine, so synchronized-retry
+/// stampedes cannot occur and reproducibility wins.
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    attempt: u32,
+}
+
+impl Backoff {
+    pub fn new(base: Duration, cap: Duration) -> Backoff {
+        Backoff { base, cap, attempt: 0 }
+    }
+
+    /// Delay before the next retry: `base * 2^n`, capped. Advances the
+    /// attempt counter.
+    pub fn next_delay(&mut self) -> Duration {
+        // past 2^16 the cap has long since taken over; clamping the
+        // exponent keeps the shift well-defined for pathological counts.
+        let exp = self.attempt.min(16);
+        self.attempt += 1;
+        self.base.saturating_mul(1u32 << exp).min(self.cap)
+    }
+
+    /// Retries scheduled so far.
+    pub fn attempts(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Restart the schedule (after a success).
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn doubles_until_cap() {
+        let mut b = Backoff::new(Duration::from_millis(1), Duration::from_millis(8));
+        assert_eq!(b.next_delay(), Duration::from_millis(1));
+        assert_eq!(b.next_delay(), Duration::from_millis(2));
+        assert_eq!(b.next_delay(), Duration::from_millis(4));
+        assert_eq!(b.next_delay(), Duration::from_millis(8));
+        // capped from here on
+        assert_eq!(b.next_delay(), Duration::from_millis(8));
+        assert_eq!(b.attempts(), 5);
+    }
+
+    #[test]
+    fn reset_restarts_schedule() {
+        let mut b = Backoff::new(Duration::from_millis(2), Duration::from_secs(1));
+        b.next_delay();
+        b.next_delay();
+        b.reset();
+        assert_eq!(b.next_delay(), Duration::from_millis(2));
+    }
+
+    #[test]
+    fn huge_attempt_counts_stay_capped() {
+        let mut b = Backoff::new(Duration::from_millis(1), Duration::from_millis(50));
+        for _ in 0..100 {
+            assert!(b.next_delay() <= Duration::from_millis(50));
+        }
+    }
+}

@@ -1,10 +1,12 @@
 //! In-tree substrates for crates unavailable in the offline registry:
-//! a fast deterministic RNG, descriptive statistics, and a minimal JSON
-//! parser (used for `artifacts/manifest.json`).
+//! a fast deterministic RNG, descriptive statistics, capped exponential
+//! backoff, and a minimal JSON parser (used for `artifacts/manifest.json`).
 
+pub mod backoff;
 pub mod json;
 pub mod rng;
 pub mod stats;
 
+pub use backoff::Backoff;
 pub use rng::Rng;
 pub use stats::Summary;

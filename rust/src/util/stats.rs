@@ -15,6 +15,27 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// The summary of zero samples: `n = 0` and every statistic 0.0.
+    /// Reports use this for tasks that completed nothing, instead of
+    /// fabricating a phantom `0.0` sample that would skew averages.
+    pub fn empty() -> Self {
+        Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0, sorted: Vec::new() }
+    }
+
+    /// Like [`Summary::of`] but maps an empty sample set to
+    /// [`Summary::empty`] instead of panicking.
+    pub fn of_or_empty(samples: &[f64]) -> Self {
+        if samples.is_empty() {
+            Summary::empty()
+        } else {
+            Summary::of(samples)
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
     pub fn of(samples: &[f64]) -> Self {
         assert!(!samples.is_empty(), "empty sample set");
         let n = samples.len();
@@ -34,8 +55,12 @@ impl Summary {
     }
 
     /// p-th percentile (0..=100), linear interpolation between ranks.
+    /// Returns 0.0 for the empty summary.
     pub fn percentile(&self, p: f64) -> f64 {
         let p = p.clamp(0.0, 100.0);
+        if self.n == 0 {
+            return 0.0;
+        }
         if self.n == 1 {
             return self.sorted[0];
         }
@@ -99,5 +124,23 @@ mod tests {
     #[should_panic]
     fn empty_panics() {
         Summary::of(&[]);
+    }
+
+    #[test]
+    fn empty_summary_is_all_zero() {
+        let s = Summary::of_or_empty(&[]);
+        assert!(s.is_empty());
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+        assert_eq!(s.percentile(95.0), 0.0);
+        assert_eq!(s.cv(), 0.0);
+    }
+
+    #[test]
+    fn of_or_empty_matches_of_when_nonempty() {
+        let a = Summary::of_or_empty(&[1.0, 3.0]);
+        let b = Summary::of(&[1.0, 3.0]);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
     }
 }

@@ -25,6 +25,10 @@ pub struct TaskWorkload {
     pub task: usize,
     pub arrival: Arrival,
     pub total: usize,
+    /// Per-request completion budget (ms from submission), derived from
+    /// the task's SLO. Requests that cannot finish inside it are shed by
+    /// the coordinator. `None` disables shedding.
+    pub deadline_ms: Option<f64>,
 }
 
 /// Generate the request timeline of a workload (offsets in seconds).
@@ -79,10 +83,17 @@ pub fn spawn_producers(
                     if due > elapsed {
                         std::thread::sleep(std::time::Duration::from_secs_f64(due - elapsed));
                     }
+                    let now = Instant::now();
                     let _ = tx.send(ServeRequest {
                         task: w.task,
                         id: (w.task as u64) << 48 | i as u64,
-                        submitted: Instant::now(),
+                        submitted: now,
+                        // absolute deadlines stay in real time even when
+                        // arrivals are time-scaled: the SLO budget is a
+                        // property of the request, not of the generator
+                        deadline: w.deadline_ms.map(|d| {
+                            now + std::time::Duration::from_secs_f64(d / 1000.0)
+                        }),
                     });
                 }
             })
@@ -90,28 +101,46 @@ pub fn spawn_producers(
         .collect()
 }
 
-/// Canonical workloads per use case (arrival shapes from §6.2).
+/// Canonical workloads per use case (arrival shapes from §6.2). The
+/// per-request deadline budgets derive from each use case's latency SLO
+/// (uc1: max L <= 41.67 ms, uc3: avg L <= 100 ms, uc4: max L <= 10 ms)
+/// with generous headroom for queueing, so shedding only engages when a
+/// request genuinely cannot make it; uc2 is throughput-bound (no
+/// per-request deadline).
 pub fn for_use_case(uc: &str, requests_per_task: usize) -> Vec<TaskWorkload> {
     match uc {
         "uc1" => vec![TaskWorkload {
             task: 0,
             arrival: Arrival::Periodic { hz: 24.0 },
             total: requests_per_task,
+            deadline_ms: Some(4.0 * 41.67),
         }],
         "uc2" => vec![TaskWorkload {
             task: 0,
             arrival: Arrival::Poisson { hz: 10.0 },
             total: requests_per_task,
+            deadline_ms: None,
         }],
         "uc3" => vec![
-            TaskWorkload { task: 0, arrival: Arrival::Periodic { hz: 10.0 }, total: requests_per_task },
-            TaskWorkload { task: 1, arrival: Arrival::Periodic { hz: 1.0 / 0.975 }, total: requests_per_task },
+            TaskWorkload {
+                task: 0,
+                arrival: Arrival::Periodic { hz: 10.0 },
+                total: requests_per_task,
+                deadline_ms: Some(400.0),
+            },
+            TaskWorkload {
+                task: 1,
+                arrival: Arrival::Periodic { hz: 1.0 / 0.975 },
+                total: requests_per_task,
+                deadline_ms: Some(400.0),
+            },
         ],
         "uc4" => (0..3)
             .map(|t| TaskWorkload {
                 task: t,
                 arrival: Arrival::Bursty { hz: 5.0, burst: 4 },
                 total: requests_per_task,
+                deadline_ms: Some(100.0),
             })
             .collect(),
         _ => Vec::new(),
@@ -124,7 +153,12 @@ mod tests {
 
     #[test]
     fn periodic_timeline_spacing() {
-        let w = TaskWorkload { task: 0, arrival: Arrival::Periodic { hz: 24.0 }, total: 48 };
+        let w = TaskWorkload {
+            task: 0,
+            arrival: Arrival::Periodic { hz: 24.0 },
+            total: 48,
+            deadline_ms: None,
+        };
         let t = timeline(&w, 1);
         assert_eq!(t.len(), 48);
         assert!((t[1] - t[0] - 1.0 / 24.0).abs() < 1e-9);
@@ -133,7 +167,12 @@ mod tests {
 
     #[test]
     fn poisson_mean_rate_close() {
-        let w = TaskWorkload { task: 0, arrival: Arrival::Poisson { hz: 100.0 }, total: 5000 };
+        let w = TaskWorkload {
+            task: 0,
+            arrival: Arrival::Poisson { hz: 100.0 },
+            total: 5000,
+            deadline_ms: None,
+        };
         let t = timeline(&w, 2);
         let rate = t.len() as f64 / t.last().unwrap();
         assert!((rate - 100.0).abs() < 10.0, "rate {rate}");
@@ -141,7 +180,12 @@ mod tests {
 
     #[test]
     fn bursts_are_coincident() {
-        let w = TaskWorkload { task: 0, arrival: Arrival::Bursty { hz: 5.0, burst: 4 }, total: 12 };
+        let w = TaskWorkload {
+            task: 0,
+            arrival: Arrival::Bursty { hz: 5.0, burst: 4 },
+            total: 12,
+            deadline_ms: None,
+        };
         let t = timeline(&w, 3);
         assert_eq!(t.len(), 12);
         assert_eq!(t[0], t[3]);
@@ -153,6 +197,15 @@ mod tests {
         assert_eq!(for_use_case("uc1", 10).len(), 1);
         assert_eq!(for_use_case("uc3", 10).len(), 2);
         assert_eq!(for_use_case("uc4", 10).len(), 3);
+    }
+
+    #[test]
+    fn use_case_deadlines_follow_slos() {
+        // latency-bound use cases carry a deadline budget; the
+        // throughput-bound uc2 must never shed
+        assert!(for_use_case("uc1", 1)[0].deadline_ms.is_some());
+        assert!(for_use_case("uc2", 1)[0].deadline_ms.is_none());
+        assert!(for_use_case("uc4", 1).iter().all(|w| w.deadline_ms == Some(100.0)));
     }
 
     #[test]

@@ -1,0 +1,108 @@
+//! Chaos acceptance test: the full serving stack (workload -> channel ->
+//! coordinator -> router/batcher -> executor) survives injected faults.
+//!
+//! 10% transient inference faults across every model plus a hard outage
+//! window on the calm design's route: the run must complete with zero
+//! process-level errors, keep the failure rate of admitted requests
+//! under 5%, take at least one fallback design switch while the route is
+//! out, and recover to the calm design once health probes pass.
+
+use std::sync::mpsc;
+
+use carin::config;
+use carin::coordinator::ServingCoordinator;
+use carin::device::profiles;
+use carin::moo::rass::{self, EnvState};
+use carin::runtime::{synthetic_manifest, FaultInjector, FaultSpec, StubEngine};
+use carin::workload;
+use carin::zoo::Registry;
+
+/// Artifact stem routed for `task` under the policy's calm design.
+fn calm_stem(reg: &Registry, sol: &carin::moo::Solution, task: usize) -> String {
+    let d0 = sol.policy.design_for(EnvState::calm());
+    let a = &sol.designs[d0].config.assignments[task];
+    format!("{}_{}", reg.models[a.variant.model].artifact, a.variant.scheme.name())
+}
+
+#[test]
+fn uc1_serving_survives_transient_faults_and_an_outage() {
+    let reg = Registry::paper();
+    let dev = profiles::galaxy_s20();
+    let p = config::use_case("uc1", &reg, &dev).unwrap();
+    let sol = rass::solve(&p);
+    let manifest = synthetic_manifest(&reg);
+
+    let mut inj = FaultInjector::new(StubEngine::new(), 42);
+    inj.set_default(FaultSpec::transient(0.10));
+    // hard outage on the calm design's route: calls 30..=44 all fail,
+    // forcing supervision to raise the fault signal and fall back
+    let stem = calm_stem(&reg, &sol, 0);
+    inj.set_for(&stem, FaultSpec::transient(0.10).with_outage(30, 44));
+
+    let mut coord =
+        ServingCoordinator::with_engine(inj, &reg, &sol, manifest).expect("preload");
+
+    let n = 240;
+    let (tx, rx) = mpsc::channel();
+    let producers =
+        workload::spawn_producers(workload::for_use_case("uc1", n), tx, 11, 0.0);
+    // zero process-level errors: serve() must return Ok under injection
+    let report = coord.serve(rx).expect("serving must survive injected faults");
+    for h in producers {
+        h.join().unwrap();
+    }
+
+    let admitted = report.total_requests + report.failed;
+    assert_eq!(admitted + report.shed, n, "every request accounted for");
+    assert!(report.total_requests > 0, "nothing completed");
+    // >= 95% of admitted (non-shed) requests succeed despite 10%
+    // transients (retries absorb them) and the outage (fallback bounds it)
+    let fail_rate = report.failed as f64 / admitted as f64;
+    assert!(fail_rate <= 0.05, "failure rate {fail_rate:.3} > 5%");
+    // retries actually engaged on transients
+    assert!(report.retried > 0, "no retry ever fired under 10% transients");
+    // the outage must force a fallback switch and a later recovery
+    assert!(
+        report.fallback_switches >= 1,
+        "outage never caused a fallback switch: {report:?}"
+    );
+    assert!(
+        report.recovered_switches >= 1,
+        "fault signal never cleared after the outage: {report:?}"
+    );
+    // the run ends back on the calm design
+    let d0 = sol.policy.design_for(EnvState::calm());
+    assert_eq!(coord.current_design(), d0, "did not recover to the calm design");
+    // goodput: completed-within-deadline requests were measured
+    assert!(report.goodput_rps > 0.0);
+    // the injector really injected
+    assert!(coord.engine().stats.injected_errors > 0);
+}
+
+#[test]
+fn clean_run_sheds_and_fails_nothing() {
+    let reg = Registry::paper();
+    let dev = profiles::galaxy_s20();
+    let p = config::use_case("uc1", &reg, &dev).unwrap();
+    let sol = rass::solve(&p);
+    let manifest = synthetic_manifest(&reg);
+
+    let mut coord =
+        ServingCoordinator::with_engine(StubEngine::new(), &reg, &sol, manifest)
+            .expect("preload");
+    let (tx, rx) = mpsc::channel();
+    let producers =
+        workload::spawn_producers(workload::for_use_case("uc1", 80), tx, 3, 0.0);
+    let report = coord.serve(rx).unwrap();
+    for h in producers {
+        h.join().unwrap();
+    }
+    assert_eq!(report.total_requests, 80);
+    assert_eq!(report.failed, 0);
+    assert_eq!(report.shed, 0);
+    assert_eq!(report.retried, 0);
+    assert_eq!(report.fallback_switches, 0);
+    assert_eq!(report.recovered_switches, 0);
+    // with no deadline misses goodput equals throughput
+    assert!((report.goodput_rps - report.throughput_rps).abs() < 1e-9);
+}

@@ -173,6 +173,46 @@ fn storage_reductions_match_paper_direction() {
 }
 
 #[test]
+fn flapping_fault_signal_is_debounced_end_to_end() {
+    // Monitor + RM under a flapping fault signal: hysteresis must absorb
+    // the flaps entirely, then a sustained fault causes exactly one
+    // fallback and a sustained recovery exactly one switch back.
+    use carin::manager::{Monitor, RuntimeManager};
+    let reg = Registry::paper();
+    let p = config::use_case("uc1", &reg, &profiles::galaxy_s20()).unwrap();
+    let sol = rass::solve(&p);
+    let engines = sol.policy.engines.clone();
+    let mut rm = RuntimeManager::new(sol);
+    let mut mon = Monitor::new(engines, 3);
+    let faulty = Engine::Cpu;
+
+    // flapping signal: raised and cleared on alternate observations
+    for i in 0..200 {
+        mon.report_fault(faulty, i % 2 == 0);
+        rm.observe(mon.tick(), i as f64 * 0.01);
+    }
+    assert_eq!(rm.switches.len(), 0, "flapping signal must never switch designs");
+
+    // sustained fault: exactly one fallback switch
+    mon.report_fault(faulty, true);
+    for i in 0..10 {
+        rm.observe(mon.tick(), 2.0 + i as f64 * 0.01);
+    }
+    assert_eq!(rm.switches.len(), 1, "sustained fault must switch exactly once");
+    assert_eq!(rm.fallback_count(), 1);
+
+    // sustained recovery: exactly one switch back to the calm design
+    mon.report_fault(faulty, false);
+    for i in 0..10 {
+        rm.observe(mon.tick(), 3.0 + i as f64 * 0.01);
+    }
+    assert_eq!(rm.switches.len(), 2, "recovery must switch exactly once");
+    assert_eq!(rm.recovery_count(), 1);
+    let back = rm.current_design();
+    assert!(rm.solution.designs[back].roles.contains(&"d0"));
+}
+
+#[test]
 fn workload_feeds_serving_channel() {
     // workload -> channel plumbing without PJRT (fast)
     let (tx, rx) = std::sync::mpsc::channel();

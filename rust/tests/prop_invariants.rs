@@ -255,6 +255,7 @@ fn prop_batcher_conserves_requests() {
                 id: i as u64,
                 payload: vec![0.0; 4],
                 enqueued: Instant::now(),
+                deadline: None,
             };
             if let Some(batch) = b.push(r) {
                 if batch.occupancy > cap {
