@@ -9,7 +9,9 @@
 //! without a single process-level error.
 //!
 //! Runs on the PJRT-free stub executor: `cargo run --release --example
-//! fault_tolerant_serving` (no `make artifacts` needed).
+//! fault_tolerant_serving` (no `make artifacts` needed). Pass
+//! `--telemetry <path>` to dump the event timeline as JSON-lines to
+//! `<path>` and a Prometheus metric snapshot to `<path>.prom`.
 
 use std::sync::mpsc;
 
@@ -22,6 +24,13 @@ use carin::workload;
 use carin::zoo::Registry;
 
 fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let telemetry_path = args
+        .iter()
+        .position(|a| a == "--telemetry")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+
     let reg = Registry::paper();
     let dev = profiles::by_name("s20").unwrap();
     let p = config::use_case("uc1", &reg, &dev).unwrap();
@@ -60,8 +69,8 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!(
-        "\n{} requests in {:.2} s: {:.1} req/s throughput, {:.1} req/s goodput",
-        report.total_requests, report.wall_s, report.throughput_rps, report.goodput_rps
+        "\n{} requests over a {:.2} s window: {:.1} req/s throughput, {:.1} req/s goodput",
+        report.total_requests, report.window_s, report.throughput_rps, report.goodput_rps
     );
     println!(
         "switches: {} fallback, {} recovery (final design index {})",
@@ -78,6 +87,27 @@ fn main() -> anyhow::Result<()> {
         println!(
             "  switch {}: d{} -> d{} at {:.2}s (state: troubled={:#06b} faulted={:#06b} mem={})",
             i, s.from, s.to, s.sim_time_s, s.state.troubled, s.state.faulted, s.state.memory
+        );
+    }
+
+    let tel = coord.telemetry();
+    if let Some(h) = tel.registry.histogram("carin_e2e_latency_ms") {
+        println!(
+            "e2e latency histogram: p50 {:.3} ms  p90 {:.3} ms  p99 {:.3} ms ({} samples)",
+            h.percentile(50.0),
+            h.percentile(90.0),
+            h.percentile(99.0),
+            h.count()
+        );
+    }
+    if let Some(path) = telemetry_path {
+        std::fs::write(&path, tel.events_jsonl())?;
+        let prom = format!("{path}.prom");
+        std::fs::write(&prom, tel.prometheus())?;
+        println!(
+            "telemetry: {} events ({} dropped) -> {path}, metrics -> {prom}",
+            tel.recorder.len(),
+            tel.recorder.dropped()
         );
     }
     Ok(())

@@ -4,6 +4,11 @@
 //! Runs on the PJRT-free [`StubEngine`] with a synthetic manifest so it
 //! needs no `make artifacts`; the stub burns a fixed per-call latency to
 //! make retries and backoff measurable in the goodput numbers.
+//!
+//! Besides the goodput table, the chaos run prints its supervision
+//! timeline (fault → fallback switch → probes → recovery switch) from
+//! the telemetry recorder and writes the full event stream as JSON-lines
+//! to the temp dir for replay.
 
 use std::sync::mpsc;
 
@@ -13,13 +18,29 @@ use carin::coordinator::serve::ServeReport;
 use carin::device::profiles;
 use carin::moo::rass::{self, EnvState};
 use carin::runtime::{synthetic_manifest, FaultInjector, FaultSpec, StubEngine};
+use carin::telemetry::{Event, EventKind};
 use carin::workload;
 use carin::zoo::Registry;
 
 const N_REQUESTS: usize = 400;
 const EXEC_MS: f64 = 0.2;
 
-fn run(reg: &Registry, sol: &carin::moo::Solution, spec: Option<FaultSpec>) -> anyhow::Result<(ServeReport, u64)> {
+/// What the bench keeps from a run's [`carin::telemetry::Telemetry`]
+/// after the coordinator is dropped.
+struct TelemetrySnapshot {
+    events: Vec<Event>,
+    dropped: u64,
+    window_s: f64,
+    jsonl: String,
+    e2e_p50_ms: f64,
+    e2e_p99_ms: f64,
+}
+
+fn run(
+    reg: &Registry,
+    sol: &carin::moo::Solution,
+    spec: Option<FaultSpec>,
+) -> anyhow::Result<(ServeReport, u64, TelemetrySnapshot)> {
     let manifest = synthetic_manifest(reg);
     let mut inj = FaultInjector::new(StubEngine::with_latency(EXEC_MS), 42);
     if let Some(spec) = spec.clone() {
@@ -40,7 +61,48 @@ fn run(reg: &Registry, sol: &carin::moo::Solution, spec: Option<FaultSpec>) -> a
     for h in producers {
         let _ = h.join();
     }
-    Ok((report, coord.engine().stats.injected_errors))
+    let tel = coord.telemetry();
+    let e2e = tel.registry.histogram("carin_e2e_latency_ms");
+    let snap = TelemetrySnapshot {
+        events: tel.recorder.events(),
+        dropped: tel.recorder.dropped(),
+        window_s: tel.window_s().unwrap_or(0.0),
+        jsonl: tel.events_jsonl(),
+        e2e_p50_ms: e2e.map_or(0.0, |h| h.percentile(50.0)),
+        e2e_p99_ms: e2e.map_or(0.0, |h| h.percentile(99.0)),
+    };
+    Ok((report, coord.engine().stats.injected_errors, snap))
+}
+
+/// Print the supervision-loop timeline (fault/switch/heal events; probes
+/// are summarised by count) from a run's retained events.
+fn print_timeline(snap: &TelemetrySnapshot) {
+    let mut probes = 0u64;
+    let mut probe_ok = 0u64;
+    for e in &snap.events {
+        let t_s = e.t_ns as f64 / 1e9;
+        match e.kind {
+            EventKind::FaultRaised { engine, task } => {
+                println!("  {t_s:8.3}s fault raised on engine {engine} (task {task})");
+            }
+            EventKind::FaultCleared { engine } => {
+                println!("  {t_s:8.3}s fault cleared on engine {engine} ({probe_ok}/{probes} probes ok so far)");
+            }
+            EventKind::Probe { ok, .. } => {
+                probes += 1;
+                if ok {
+                    probe_ok += 1;
+                }
+            }
+            EventKind::Switch { from, to, bad_mask, decision_ns, fallback, .. } => {
+                let why = if fallback { "fallback" } else { "recovery" };
+                println!(
+                    "  {t_s:8.3}s {why} switch d{from} -> d{to} (bad_mask={bad_mask:#06b}, decided in {decision_ns} ns)"
+                );
+            }
+            _ => {}
+        }
+    }
 }
 
 fn print_row(label: &str, r: &ServeReport, injected: u64) {
@@ -74,10 +136,10 @@ fn main() -> anyhow::Result<()> {
         "condition", "goodput", "rps", "done", "retry", "fail", "shed", "fall/recov", "injected"
     );
 
-    let (clean, injected) = run(&reg, &sol, None)?;
+    let (clean, injected, _clean_tel) = run(&reg, &sol, None)?;
     print_row("clean", &clean, injected);
 
-    let (chaos, injected) =
+    let (chaos, injected, chaos_tel) =
         run(&reg, &sol, Some(FaultSpec::transient(0.10).with_spikes(0.05, 2.0)))?;
     print_row("10% transient+outage", &chaos, injected);
 
@@ -86,5 +148,20 @@ fn main() -> anyhow::Result<()> {
         "\ngoodput retained under injection: {:.1}% ({:.1} -> {:.1} req/s)",
         retained, clean.goodput_rps, chaos.goodput_rps
     );
+
+    println!(
+        "\nchaos telemetry: {} events retained ({} dropped), {:.2}s window, e2e p50 {:.3} ms / p99 {:.3} ms",
+        chaos_tel.events.len(),
+        chaos_tel.dropped,
+        chaos_tel.window_s,
+        chaos_tel.e2e_p50_ms,
+        chaos_tel.e2e_p99_ms
+    );
+    println!("supervision timeline:");
+    print_timeline(&chaos_tel);
+
+    let path = std::env::temp_dir().join("chaos_serving.events.jsonl");
+    std::fs::write(&path, &chaos_tel.jsonl)?;
+    println!("replayable event stream -> {}", path.display());
     Ok(())
 }

@@ -13,6 +13,9 @@ pub struct Request {
     /// Flat input payload for one sample.
     pub payload: Vec<f32>,
     pub enqueued: Instant,
+    /// When the serve loop dequeued the request from the arrival channel
+    /// (span boundary: queue wait ends, batch wait starts).
+    pub admitted: Instant,
     /// Absolute completion deadline (None = no deadline).
     pub deadline: Option<Instant>,
 }
@@ -27,6 +30,8 @@ pub struct Batch {
     pub occupancy: usize,
     /// Per-member enqueue timestamps, aligned with `ids`.
     pub enqueued: Vec<Instant>,
+    /// Per-member admission timestamps, aligned with `ids`.
+    pub admitted: Vec<Instant>,
     /// Per-member deadlines, aligned with `ids`.
     pub deadlines: Vec<Option<Instant>>,
 }
@@ -95,6 +100,7 @@ impl Batcher {
             payload,
             occupancy: reqs.len(),
             enqueued: reqs.iter().map(|r| r.enqueued).collect(),
+            admitted: reqs.iter().map(|r| r.admitted).collect(),
             deadlines: reqs.iter().map(|r| r.deadline).collect(),
         }
     }
@@ -105,10 +111,12 @@ mod tests {
     use super::*;
 
     fn req(id: u64, len: usize) -> Request {
+        let now = Instant::now();
         Request {
             id,
             payload: vec![id as f32; len],
-            enqueued: Instant::now(),
+            enqueued: now,
+            admitted: now,
             deadline: None,
         }
     }
@@ -165,15 +173,30 @@ mod tests {
     fn batch_carries_per_member_timestamps_and_deadlines() {
         let mut b = Batcher::new(2, 1, Duration::from_secs(60));
         let t0 = Instant::now();
+        let t1 = t0 + Duration::from_millis(1);
         let dl = t0 + Duration::from_millis(50);
-        b.push(Request { id: 1, payload: vec![1.0], enqueued: t0, deadline: Some(dl) });
+        b.push(Request {
+            id: 1,
+            payload: vec![1.0],
+            enqueued: t0,
+            admitted: t1,
+            deadline: Some(dl),
+        });
         let batch = b
-            .push(Request { id: 2, payload: vec![2.0], enqueued: t0, deadline: None })
+            .push(Request {
+                id: 2,
+                payload: vec![2.0],
+                enqueued: t0,
+                admitted: t1,
+                deadline: None,
+            })
             .unwrap();
         assert_eq!(batch.enqueued.len(), 2);
+        assert_eq!(batch.admitted, vec![t1, t1]);
         assert_eq!(batch.deadlines, vec![Some(dl), None]);
         // occupancy, ids and timestamps stay aligned
         assert_eq!(batch.ids.len(), batch.occupancy);
         assert_eq!(batch.enqueued.len(), batch.occupancy);
+        assert_eq!(batch.admitted.len(), batch.occupancy);
     }
 }

@@ -38,7 +38,22 @@
 //! `goodput_rps` (successful-within-deadline requests per second),
 //! `fallback_switches` (design switches taken while a fault/overload
 //! signal was raised) and `recovered_switches` (switches back after the
-//! signal cleared).
+//! signal cleared). Both rates are computed over the *serving window*
+//! (first admission → last completion), not the loop's wall clock, so
+//! producer warm-up and drain time do not dilute them.
+//!
+//! # Telemetry
+//!
+//! The coordinator owns a [`Telemetry`] bundle: every admission, shed,
+//! dispatch, retry, completion, fault transition, probe and design
+//! switch is recorded as a typed event in a bounded ring buffer, each
+//! completed request carries a [`Span`] with its
+//! queue/batch/execute/total breakdown, and counters plus latency
+//! histograms accumulate in the metric registry. Note that a span's
+//! `exec` segment covers the whole supervised call (retries and backoff
+//! included), while the `carin_exec_latency_ms` histogram and the
+//! report's `latency_ms` record the successful attempt only. Export via
+//! [`Telemetry::events_jsonl`] / [`Telemetry::prometheus`].
 
 use std::collections::HashMap;
 use std::sync::mpsc;
@@ -54,6 +69,7 @@ use crate::moo::Solution;
 use crate::runtime::engine::{random_input, InferenceEngine, Tensor};
 use crate::runtime::faults::Inference;
 use crate::runtime::ArtifactMeta;
+use crate::telemetry::{EventKind, Span, Telemetry};
 use crate::util::{Backoff, Summary};
 use crate::zoo::Registry;
 
@@ -133,11 +149,16 @@ pub struct TaskReport {
 #[derive(Debug)]
 pub struct ServeReport {
     pub tasks: Vec<TaskReport>,
+    /// Full serve-loop wall clock (includes pre-admission and drain).
     pub wall_s: f64,
+    /// Serving window: first admission → last completion, seconds
+    /// (falls back to `wall_s` when nothing was admitted).
+    pub window_s: f64,
     pub total_requests: usize,
-    /// Completed requests per second across tasks.
+    /// Completed requests per second over the serving window.
     pub throughput_rps: f64,
-    /// Successful-within-deadline requests per second (goodput).
+    /// Successful-within-deadline requests per second over the serving
+    /// window (goodput).
     pub goodput_rps: f64,
     /// Total retried engine calls across tasks.
     pub retried: usize,
@@ -202,6 +223,8 @@ pub struct ServingCoordinator<E: Inference = InferenceEngine> {
     consecutive_failures: Vec<usize>,
     /// Engines currently reported faulted, with probe bookkeeping.
     faulted: HashMap<Engine, ProbeState>,
+    /// Event recorder + metric registry (see the module docs).
+    tel: Telemetry,
 }
 
 impl ServingCoordinator<InferenceEngine> {
@@ -244,9 +267,11 @@ impl<E: Inference> ServingCoordinator<E> {
             rm,
             consecutive_failures: vec![0; n_tasks],
             faulted: HashMap::new(),
+            tel: Telemetry::new(crate::telemetry::DEFAULT_EVENT_CAPACITY),
         };
         let d0 = coord.rm.current_design();
         coord.router.set_design(d0);
+        coord.tel.registry.set_gauge("carin_current_design", d0 as f64);
         for idx in coord.router.preload_set() {
             let meta = coord.manifest[idx].clone();
             coord.supervised_load(&meta)?;
@@ -292,6 +317,18 @@ impl<E: Inference> ServingCoordinator<E> {
         &self.rm
     }
 
+    /// The telemetry bundle: event timeline, spans-at-completion and the
+    /// metric registry. Use its exporters after (or during) a run.
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.tel
+    }
+
+    /// Mutable telemetry access (resize/clear the recorder, register
+    /// custom histograms) — between runs, not mid-serve.
+    pub fn telemetry_mut(&mut self) -> &mut Telemetry {
+        &mut self.tel
+    }
+
     pub fn engine(&self) -> &E {
         &self.engine
     }
@@ -312,12 +349,19 @@ impl<E: Inference> ServingCoordinator<E> {
         let t0 = Instant::now();
         let mut stats: Vec<TaskStats> = (0..self.n_tasks).map(|_| TaskStats::default()).collect();
         self.consecutive_failures = vec![0; self.n_tasks];
+        self.tel.reset_window();
         let switches_before = self.rm.switches.len();
         let mut seed = 0u64;
         let mut since_probe = 0usize;
 
         for req in rx.iter() {
             seed += 1;
+            let admitted_at = Instant::now();
+            self.tel.note_admit();
+            self.tel
+                .recorder
+                .record(EventKind::Admitted { task: req.task as u32, id: req.id });
+            self.tel.registry.inc("carin_requests_admitted_total");
 
             // age out partial batches first so queued members are not
             // starved past their deadline by a quiet task
@@ -340,6 +384,8 @@ impl<E: Inference> ServingCoordinator<E> {
                 let est = Duration::from_secs_f64(stats[t].mean_exec_ms() / 1000.0);
                 if dl.saturating_duration_since(Instant::now()) < est {
                     stats[t].shed += 1;
+                    self.tel.recorder.record(EventKind::Shed { task: t as u32, id: req.id });
+                    self.tel.registry.inc("carin_requests_shed_total");
                     continue;
                 }
             }
@@ -352,10 +398,12 @@ impl<E: Inference> ServingCoordinator<E> {
                     let meta = &self.manifest[meta_idx];
                     meta.input.numel() / meta.input.shape[0]
                 };
+                self.tel.recorder.record(EventKind::Batched { task: t as u32, id: req.id });
                 let maybe = self.batchers.get_mut(&t).unwrap().push(BatchRequest {
                     id: req.id,
                     payload: vec_sample(sample_len, seed),
                     enqueued: req.submitted,
+                    admitted: admitted_at,
                     deadline: req.deadline,
                 });
                 if let Some(batch) = maybe {
@@ -363,13 +411,31 @@ impl<E: Inference> ServingCoordinator<E> {
                 }
             } else {
                 let input = random_input(&self.manifest[meta_idx], seed);
-                self.execute_one(t, &stem, &input, req.submitted, req.deadline, &mut stats);
+                self.execute_one(
+                    t,
+                    &stem,
+                    &input,
+                    req.id,
+                    req.submitted,
+                    admitted_at,
+                    req.deadline,
+                    &mut stats,
+                );
             }
         }
         // drain partial batches (their members' e2e is accounted normally)
         self.flush_pending(&mut stats);
 
         let wall_s = t0.elapsed().as_secs_f64();
+        // throughput/goodput are over the serving window, not the loop's
+        // wall clock: channel setup and drain time belong to the harness,
+        // not the served requests.
+        let window_s = self.tel.window_s().unwrap_or(wall_s).max(1e-9);
+        if let Some((a, b)) = self.tel.window_ns() {
+            self.tel.registry.set_gauge("carin_window_start_s", a as f64 / 1e9);
+            self.tel.registry.set_gauge("carin_window_end_s", b as f64 / 1e9);
+        }
+        self.tel.registry.set_gauge("carin_window_s", window_s);
         let total: usize = stats.iter().map(|s| s.completed).sum();
         let met: usize = stats.iter().map(|s| s.deadline_met).sum();
         let switches = &self.rm.switches[switches_before..];
@@ -398,9 +464,10 @@ impl<E: Inference> ServingCoordinator<E> {
         Ok(ServeReport {
             tasks,
             wall_s,
+            window_s,
             total_requests: total,
-            throughput_rps: total as f64 / wall_s,
-            goodput_rps: met as f64 / wall_s,
+            throughput_rps: total as f64 / window_s,
+            goodput_rps: met as f64 / window_s,
             retried: stats.iter().map(|s| s.retried).sum(),
             failed: stats.iter().map(|s| s.failed).sum(),
             shed: stats.iter().map(|s| s.shed).sum(),
@@ -427,6 +494,11 @@ impl<E: Inference> ServingCoordinator<E> {
                 Ok(_) => {
                     if attempt > 1 {
                         st.retried += 1;
+                        self.tel.recorder.record(EventKind::Retried {
+                            task: t as u32,
+                            attempts: attempt as u32,
+                        });
+                        self.tel.registry.inc("carin_requests_retried_total");
                     }
                     self.consecutive_failures[t] = 0;
                     return Ok(te.elapsed().as_secs_f64() * 1000.0);
@@ -460,63 +532,113 @@ impl<E: Inference> ServingCoordinator<E> {
         }
     }
 
+    /// Registry + recorder bookkeeping for one completed request.
+    /// `exec_ms` is the successful attempt's engine latency; the span's
+    /// exec segment additionally covers retries and backoff.
+    fn note_completion(&mut self, span: &Span, exec_ms: f64, met: bool) {
+        span.record(&mut self.tel.recorder, met);
+        self.tel.note_done();
+        let r = &mut self.tel.registry;
+        r.inc("carin_requests_completed_total");
+        if met {
+            r.inc("carin_requests_deadline_met_total");
+        }
+        r.observe("carin_exec_latency_ms", exec_ms);
+        r.observe("carin_e2e_latency_ms", span.total_ms());
+        r.observe("carin_queue_latency_ms", span.queue_ms());
+        r.observe("carin_batch_wait_ms", span.batch_ms());
+    }
+
+    #[allow(clippy::too_many_arguments)]
     fn execute_one(
         &mut self,
         t: usize,
         stem: &str,
         input: &Tensor,
+        id: u64,
         submitted: Instant,
+        admitted: Instant,
         deadline: Option<Instant>,
         stats: &mut [TaskStats],
     ) {
+        let dispatched = Instant::now();
+        self.tel.recorder.record(EventKind::Dispatched { task: t as u32, occupancy: 1 });
+        self.tel.registry.inc("carin_engine_dispatch_total");
         match self.supervised_infer(t, stem, input, &mut stats[t]) {
             Ok(exec_ms) => {
                 let done = Instant::now();
-                let st = &mut stats[t];
-                st.lat.push(exec_ms);
-                st.exec_sum_ms += exec_ms;
-                st.e2e.push(done.duration_since(submitted).as_secs_f64() * 1000.0);
-                st.completed += 1;
                 let met = match deadline {
                     Some(dl) => done <= dl,
                     None => true,
                 };
-                if met {
-                    st.deadline_met += 1;
+                {
+                    let st = &mut stats[t];
+                    st.lat.push(exec_ms);
+                    st.exec_sum_ms += exec_ms;
+                    st.e2e.push(done.duration_since(submitted).as_secs_f64() * 1000.0);
+                    st.completed += 1;
+                    if met {
+                        st.deadline_met += 1;
+                    }
                 }
+                let span =
+                    Span { task: t, id, submitted, admitted, dispatched, completed: done };
+                self.note_completion(&span, exec_ms, met);
             }
             Err(_) => {
                 stats[t].failed += 1;
+                self.tel.recorder.record(EventKind::Failed { task: t as u32, id });
+                self.tel.registry.inc("carin_requests_failed_total");
                 self.note_failure(t);
             }
         }
     }
 
     fn execute_batch(&mut self, t: usize, stem: &str, batch: Batch, stats: &mut [TaskStats]) {
-        let Batch { payload, occupancy, enqueued, deadlines, .. } = batch;
+        let Batch { ids, payload, occupancy, enqueued, admitted, deadlines } = batch;
         let input = Tensor::F32(payload);
+        let dispatched = Instant::now();
+        self.tel
+            .recorder
+            .record(EventKind::Dispatched { task: t as u32, occupancy: occupancy as u32 });
+        self.tel.registry.inc("carin_engine_dispatch_total");
         match self.supervised_infer(t, stem, &input, &mut stats[t]) {
             Ok(exec_ms) => {
                 let done = Instant::now();
-                let st = &mut stats[t];
                 for i in 0..occupancy {
-                    st.lat.push(exec_ms);
-                    st.exec_sum_ms += exec_ms;
-                    // each member's own enqueue timestamp, not the batch
-                    // trigger's: queue time is part of its e2e.
-                    st.e2e.push(done.duration_since(enqueued[i]).as_secs_f64() * 1000.0);
-                    st.completed += 1;
                     let met = match deadlines[i] {
                         Some(dl) => done <= dl,
                         None => true,
                     };
-                    if met {
-                        st.deadline_met += 1;
+                    {
+                        let st = &mut stats[t];
+                        st.lat.push(exec_ms);
+                        st.exec_sum_ms += exec_ms;
+                        // each member's own enqueue timestamp, not the batch
+                        // trigger's: queue time is part of its e2e.
+                        st.e2e.push(done.duration_since(enqueued[i]).as_secs_f64() * 1000.0);
+                        st.completed += 1;
+                        if met {
+                            st.deadline_met += 1;
+                        }
                     }
+                    let span = Span {
+                        task: t,
+                        id: ids[i],
+                        submitted: enqueued[i],
+                        admitted: admitted[i],
+                        dispatched,
+                        completed: done,
+                    };
+                    self.note_completion(&span, exec_ms, met);
                 }
             }
             Err(_) => {
                 stats[t].failed += occupancy;
+                for &id in ids.iter().take(occupancy) {
+                    self.tel.recorder.record(EventKind::Failed { task: t as u32, id });
+                    self.tel.registry.inc("carin_requests_failed_total");
+                }
                 self.note_failure(t);
             }
         }
@@ -530,7 +652,22 @@ impl<E: Inference> ServingCoordinator<E> {
             let e = self.engine_of(t);
             let stem = self.manifest[self.router.route_index(t)].stem.clone();
             self.monitor.report_fault(e, true);
-            self.faulted.entry(e).or_insert(ProbeState { stem, ok: 0 });
+            if !self.faulted.contains_key(&e) {
+                crate::log_warn!(
+                    "fault raised on {} after {} consecutive failures (task {t}, route {stem})",
+                    e.name(),
+                    self.consecutive_failures[t]
+                );
+                self.faulted.insert(e, ProbeState { stem, ok: 0 });
+                self.tel.recorder.record(EventKind::FaultRaised {
+                    engine: e.index() as u8,
+                    task: t as u32,
+                });
+                self.tel.registry.inc("carin_faults_raised_total");
+            }
+            self.tel
+                .registry
+                .set_gauge("carin_fault_raw_mask", self.monitor.raw_fault_mask() as f64);
         }
     }
 
@@ -541,10 +678,42 @@ impl<E: Inference> ServingCoordinator<E> {
             .engine()
     }
 
-    /// Advance the monitor and let the RM fall back / recover.
+    /// Advance the monitor and let the RM fall back / recover. A switch
+    /// is mirrored into the telemetry timeline as the audit-trail event.
     fn observe_and_maybe_switch(&mut self, t0: Instant, stats: &mut [TaskStats]) {
         let state = self.monitor.tick();
         if let Some(d) = self.rm.observe(state, t0.elapsed().as_secs_f64()) {
+            if let Some(rec) = self.rm.switches.last() {
+                let fallback = !rec.state.is_calm();
+                crate::log_info!(
+                    "{} switch d[{}] -> d[{}] (bad_mask {:#04b}, {} ns decision)",
+                    if fallback { "fallback" } else { "recovery" },
+                    rec.from,
+                    rec.to,
+                    rec.bad_mask,
+                    rec.decision_ns
+                );
+                self.tel.recorder.record(EventKind::Switch {
+                    from: rec.from as u32,
+                    to: rec.to as u32,
+                    troubled: rec.state.troubled,
+                    faulted: rec.state.faulted,
+                    memory: rec.state.memory,
+                    bad_mask: rec.bad_mask,
+                    decision_ns: rec.decision_ns as u64,
+                    fallback,
+                });
+                let name = if fallback {
+                    "carin_switches_fallback_total"
+                } else {
+                    "carin_switches_recovery_total"
+                };
+                let decision_ns = rec.decision_ns as f64;
+                let r = &mut self.tel.registry;
+                r.inc(name);
+                r.observe("carin_switch_decision_ns", decision_ns);
+                r.set_gauge("carin_current_design", d as f64);
+            }
             self.apply_switch(d, stats);
         }
     }
@@ -610,6 +779,10 @@ impl<E: Inference> ServingCoordinator<E> {
                 continue;
             };
             let healthy = self.engine.infer(&stem, &input).is_ok();
+            self.tel
+                .recorder
+                .record(EventKind::Probe { engine: e.index() as u8, ok: healthy });
+            self.tel.registry.inc("carin_probes_total");
             let mut healed = false;
             if let Some(p) = self.faulted.get_mut(&e) {
                 if healthy {
@@ -620,8 +793,16 @@ impl<E: Inference> ServingCoordinator<E> {
                 }
             }
             if healed {
+                crate::log_info!("fault cleared on {} after consecutive probe successes", e.name());
                 self.monitor.report_fault(e, false);
                 self.faulted.remove(&e);
+                self.tel
+                    .recorder
+                    .record(EventKind::FaultCleared { engine: e.index() as u8 });
+                self.tel.registry.inc("carin_faults_cleared_total");
+                self.tel
+                    .registry
+                    .set_gauge("carin_fault_raw_mask", self.monitor.raw_fault_mask() as f64);
             }
         }
     }

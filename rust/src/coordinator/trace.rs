@@ -2,9 +2,12 @@
 //! the device simulator with the Runtime Manager in the loop, recording
 //! the per-inference timeline shown in Figures 7 and 8.
 
+use std::collections::BTreeMap;
+
 use crate::device::Simulator;
 use crate::manager::{EventSchedule, Monitor, RuntimeManager};
 use crate::moo::{Problem, Solution};
+use crate::util::json::Json;
 
 /// One recorded inference round (all tasks execute once, in parallel).
 #[derive(Debug, Clone)]
@@ -25,12 +28,60 @@ pub struct TracePoint {
     pub switched_to: Option<usize>,
 }
 
+impl TracePoint {
+    /// The round as a JSON object (NaN accuracies serialize as `null`).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("t_s".to_string(), Json::Num(self.t_s));
+        m.insert("design".to_string(), Json::Num(self.design as f64));
+        m.insert(
+            "latency_ms".to_string(),
+            Json::Arr(self.latency_ms.iter().map(|&v| Json::Num(v)).collect()),
+        );
+        m.insert(
+            "accuracy".to_string(),
+            Json::Arr(self.accuracy.iter().map(|&v| Json::Num(v)).collect()),
+        );
+        m.insert("throughput".to_string(), Json::Num(self.throughput));
+        m.insert("mem_mb".to_string(), Json::Num(self.mem_mb));
+        m.insert(
+            "events".to_string(),
+            Json::Arr(self.events.iter().map(|e| Json::Str(e.clone())).collect()),
+        );
+        m.insert(
+            "switched_to".to_string(),
+            match self.switched_to {
+                Some(d) => Json::Num(d as f64),
+                None => Json::Null,
+            },
+        );
+        Json::Obj(m)
+    }
+}
+
 /// A full adaptation run.
 #[derive(Debug)]
 pub struct TraceLog {
     pub points: Vec<TracePoint>,
     pub switches: usize,
     pub mean_decision_ns: f64,
+}
+
+impl TraceLog {
+    /// The whole run as one JSON object (Figure-7/8 plotting input).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("switches".to_string(), Json::Num(self.switches as f64));
+        m.insert(
+            "mean_decision_ns".to_string(),
+            Json::Num(self.mean_decision_ns),
+        );
+        m.insert(
+            "points".to_string(),
+            Json::Arr(self.points.iter().map(|p| p.to_json()).collect()),
+        );
+        Json::Obj(m)
+    }
 }
 
 /// Drive `solution` under `schedule` for `duration_s` of simulated time.
@@ -127,6 +178,28 @@ mod tests {
         assert!(designs.len() >= 2, "never switched design");
         // the run must return to the initial design once events clear
         assert_eq!(log.points.last().unwrap().design, log.points[0].design);
+    }
+
+    #[test]
+    fn trace_log_round_trips_through_json() {
+        let p = config::use_case("uc1", &Registry::paper(), &profiles::pixel7()).unwrap();
+        let sol = rass::solve(&p);
+        let log = run_trace(&p, sol, EventSchedule::default(), 1.0, 0.1, 5);
+        let parsed = Json::parse(&log.to_json().dump()).expect("valid trace json");
+        assert_eq!(
+            parsed.get("switches").unwrap().as_usize().unwrap(),
+            log.switches
+        );
+        let points = match parsed.get("points").unwrap() {
+            Json::Arr(pts) => pts,
+            other => panic!("expected array, got {other:?}"),
+        };
+        assert_eq!(points.len(), log.points.len());
+        let first = &points[0];
+        assert!(first.get("t_s").unwrap().as_f64().is_some());
+        assert!(first.get("design").unwrap().as_usize().is_some());
+        // no switch on round 0 -> null survives the round trip
+        assert_eq!(first.get("switched_to"), Some(&Json::Null));
     }
 
     #[test]

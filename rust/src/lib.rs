@@ -14,8 +14,9 @@
 //! * **L3** — this crate: MOO problem construction ([`moo`]), the RASS
 //!   solver ([`moo::rass`]), baseline solvers ([`moo::baselines`]), the
 //!   heterogeneous-device simulator ([`device`]), profiling ([`profiler`]),
-//!   the PJRT runtime ([`runtime`]), the Runtime Manager ([`manager`]) and
-//!   the serving coordinator ([`coordinator`]).
+//!   the PJRT runtime ([`runtime`]), the Runtime Manager ([`manager`]),
+//!   the serving coordinator ([`coordinator`]) and the telemetry
+//!   subsystem ([`telemetry`]).
 //!
 //! Python never runs on the request path: `make artifacts` lowers the zoo
 //! once, and the rust binary is self-contained afterwards.
@@ -43,6 +44,7 @@ pub mod manager;
 pub mod moo;
 pub mod profiler;
 pub mod runtime;
+pub mod telemetry;
 pub mod util;
 pub mod workload;
 pub mod zoo;

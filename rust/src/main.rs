@@ -12,6 +12,12 @@
 //! carin storage                             # Table 10
 //! carin solvetime                           # Table 9
 //! ```
+//!
+//! `trace --json <path>` writes the adaptation trace as JSON;
+//! `serve --telemetry <path>` dumps the event timeline as JSON-lines to
+//! `<path>` plus a Prometheus metric snapshot to `<path>.prom`.
+//! Diagnostics go to stderr through the `CARIN_LOG` leveled logger
+//! (`--log <level>` overrides the environment).
 
 use std::collections::HashMap;
 
@@ -35,6 +41,15 @@ fn main() {
     }
     let cmd = args[0].clone();
     let opts = parse_opts(&args[1..]);
+    if let Some(l) = opts.get("log") {
+        match carin::util::log::Level::parse(l) {
+            Ok(level) => carin::util::log::set_level(level),
+            Err(()) => {
+                eprintln!("error: unknown log level {l} (error|warn|info|debug|trace|off)");
+                std::process::exit(1);
+            }
+        }
+    }
     let result = match cmd.as_str() {
         "solve" => cmd_solve(&opts),
         "eval" => cmd_eval(&opts),
@@ -154,6 +169,10 @@ fn cmd_trace(opts: &HashMap<String, String>) -> Result<()> {
         log.switches,
         log.mean_decision_ns
     );
+    if let Some(path) = opts.get("json") {
+        std::fs::write(path, log.to_json().dump())?;
+        println!("trace json -> {path}");
+    }
     // condensed timeline: one line per second + every switch/event
     let mut next_mark = 0.0;
     for pt in &log.points {
@@ -203,6 +222,17 @@ fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
     for h in producers {
         let _ = h.join();
     }
+    if let Some(path) = opts.get("telemetry") {
+        let tel = coord.telemetry();
+        std::fs::write(path, tel.events_jsonl())?;
+        let prom = format!("{path}.prom");
+        std::fs::write(&prom, tel.prometheus())?;
+        println!(
+            "telemetry: {} events ({} dropped) -> {path}, metrics -> {prom}",
+            tel.recorder.len(),
+            tel.recorder.dropped()
+        );
+    }
     for t in &report.tasks {
         println!(
             "task {} [{}]: {} done ({} retried, {} failed, {} shed), exec mean {:.2} ms p95 {:.2} ms, e2e mean {:.2} ms",
@@ -218,8 +248,9 @@ fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
         );
     }
     println!(
-        "served {} requests in {:.2}s -> {:.1} req/s ({:.1} goodput), {} fallback / {} recovery switches",
+        "served {} requests over a {:.2}s window ({:.2}s wall) -> {:.1} req/s ({:.1} goodput), {} fallback / {} recovery switches",
         report.total_requests,
+        report.window_s,
         report.wall_s,
         report.throughput_rps,
         report.goodput_rps,

@@ -69,6 +69,13 @@ impl Monitor {
         self.fault_raw & (1 << e.index()) != 0
     }
 
+    /// The raw (pre-debounce) fault bitmask over [`Engine::index`] —
+    /// exported as a telemetry gauge so dashboards can see reported
+    /// faults before the hysteresis window admits them.
+    pub fn raw_fault_mask(&self) -> u8 {
+        self.fault_raw
+    }
+
     /// Debounce the externally-reported fault bits into `next`.
     fn debounce_faults(&mut self, mut next: EnvState) -> EnvState {
         for (i, &e) in self.engines.iter().enumerate() {
@@ -184,6 +191,21 @@ mod tests {
         assert!(mon.tick().is_faulted(Engine::Cpu));
         assert!(!mon.tick().is_faulted(Engine::Cpu));
         assert!(mon.state().is_calm());
+    }
+
+    #[test]
+    fn raw_fault_mask_tracks_reports() {
+        let dev = profiles::galaxy_s20();
+        let mut mon = Monitor::new(dev.engines.clone(), 2);
+        assert_eq!(mon.raw_fault_mask(), 0);
+        mon.report_fault(Engine::Gpu, true);
+        mon.report_fault(Engine::Cpu, true);
+        assert_eq!(
+            mon.raw_fault_mask(),
+            (1 << Engine::Gpu.index()) | (1 << Engine::Cpu.index())
+        );
+        mon.report_fault(Engine::Gpu, false);
+        assert_eq!(mon.raw_fault_mask(), 1 << Engine::Cpu.index());
     }
 
     #[test]

@@ -3,20 +3,42 @@
 //! latencies — the paper's headline adaptation-overhead claim (§7.2.3:
 //! OODIn re-solves in 0.5–34 ms; CARIn switches "instantaneously").
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use crate::moo::rass::EnvState;
 use crate::moo::Solution;
+use crate::util::json::Json;
 
-/// One recorded design switch.
+/// One recorded design switch: the audit-trail record of a policy
+/// decision (the environment state seen, the `bad_mask` it indexed the
+/// switching table with, the designs involved, and the lookup latency).
 #[derive(Debug, Clone)]
 pub struct SwitchRecord {
     pub sim_time_s: f64,
     pub from: usize,
     pub to: usize,
     pub state: EnvState,
+    /// `state.bad_mask()` at decision time (troubled | faulted bits).
+    pub bad_mask: u8,
     /// Wall-clock the decision took (policy lookup only).
     pub decision_ns: u128,
+}
+
+impl SwitchRecord {
+    /// The record as a JSON object (audit-trail export).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("sim_time_s".to_string(), Json::Num(self.sim_time_s));
+        m.insert("from".to_string(), Json::Num(self.from as f64));
+        m.insert("to".to_string(), Json::Num(self.to as f64));
+        m.insert("troubled".to_string(), Json::Num(self.state.troubled as f64));
+        m.insert("faulted".to_string(), Json::Num(self.state.faulted as f64));
+        m.insert("memory".to_string(), Json::Bool(self.state.memory));
+        m.insert("bad_mask".to_string(), Json::Num(self.bad_mask as f64));
+        m.insert("decision_ns".to_string(), Json::Num(self.decision_ns as f64));
+        Json::Obj(m)
+    }
 }
 
 /// Runtime Manager: the online half of CARIn (Algorithm 1 lines 13–18).
@@ -59,6 +81,7 @@ impl RuntimeManager {
                 from: self.current,
                 to: next,
                 state,
+                bad_mask: state.bad_mask(),
                 decision_ns,
             });
             self.current = next;
@@ -77,6 +100,11 @@ impl RuntimeManager {
     /// the calm design.
     pub fn recovery_count(&self) -> usize {
         self.switches.iter().filter(|s| s.state.is_calm()).count()
+    }
+
+    /// The full switch audit trail as a JSON array (decision replay).
+    pub fn audit_json(&self) -> Json {
+        Json::Arr(self.switches.iter().map(|s| s.to_json()).collect())
     }
 
     /// Mean decision latency across recorded switches (ns).
@@ -146,6 +174,32 @@ mod tests {
         assert!(m.solution.designs[back].roles.contains(&"d0"));
         assert_eq!(m.fallback_count(), 1);
         assert_eq!(m.recovery_count(), 1);
+    }
+
+    #[test]
+    fn audit_trail_records_bad_mask_and_exports_json() {
+        let mut m = rm();
+        m.observe(EnvState::calm().with_faulted(Engine::Cpu), 0.5);
+        m.observe(EnvState::calm(), 1.0);
+        assert_eq!(m.switches.len(), 2);
+        assert_eq!(m.switches[0].bad_mask, 1 << Engine::Cpu.index());
+        assert_eq!(m.switches[1].bad_mask, 0);
+        let audit = m.audit_json();
+        let rows = match &audit {
+            crate::util::json::Json::Arr(rows) => rows,
+            other => panic!("expected array, got {other:?}"),
+        };
+        assert_eq!(rows.len(), 2);
+        // the dump round-trips through the parser with fields intact
+        let parsed =
+            crate::util::json::Json::parse(&audit.dump()).expect("valid audit json");
+        let first = match &parsed {
+            crate::util::json::Json::Arr(rows) => &rows[0],
+            other => panic!("expected array, got {other:?}"),
+        };
+        assert_eq!(first.get("bad_mask").unwrap().as_usize().unwrap(), 1);
+        assert!(first.get("decision_ns").is_some());
+        assert_eq!(first.get("memory"), Some(&crate::util::json::Json::Bool(false)));
     }
 
     #[test]

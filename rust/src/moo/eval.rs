@@ -140,10 +140,17 @@ pub fn evaluate(p: &Problem, x: &Config) -> ConfigMetrics {
         } else {
             scale(&point.energy_mj, c)
         };
+        let accuracy = a.variant.accuracy(&p.registry).unwrap_or_else(|| {
+            crate::log_trace!(
+                "eval: {} task {t} has no accuracy figure; objective sees NaN",
+                p.name
+            );
+            f64::NAN
+        });
         tasks.push(TaskMetrics {
             size_bytes: a.variant.size_bytes(&p.registry),
             flops: a.variant.flops(&p.registry),
-            accuracy: a.variant.accuracy(&p.registry).unwrap_or(f64::NAN),
+            accuracy,
             solo_latency_ms: point.latency_ms.mean,
             latency_ms: latency,
             energy_mj: energy,

@@ -167,6 +167,11 @@ impl Constraint {
                 }
             }
         };
+        if worst.is_nan() {
+            // NaN never satisfies <=, so the config is rejected — make the
+            // silent rejection diagnosable without polluting stdout.
+            crate::log_trace!("constraint {} saw NaN; config rejected", self.describe());
+        }
         if self.metric.higher_is_better() {
             self.bound - worst
         } else {

@@ -240,6 +240,16 @@ pub fn solve(problem: &Problem) -> Solution {
 
     let policy = build_policy(problem, &feasible, &designs, &sets, &d_engine, d_m, d_w, d_wm);
 
+    crate::log_debug!(
+        "rass: {} solved in {:.1} ms — {} feasible / {} space, {} designs, {} policy states",
+        problem.name,
+        t0.elapsed().as_secs_f64() * 1000.0,
+        feasible.len(),
+        problem.space.len(),
+        designs.len(),
+        policy.n_states()
+    );
+
     Solution {
         designs,
         policy,

@@ -230,6 +230,7 @@ impl<E: Inference> Inference for FaultInjector<E> {
         if let Some((from, to)) = spec.outage {
             if call >= from && call <= to {
                 self.stats.injected_errors += 1;
+                crate::log_trace!("inject outage fault on {stem} (call #{call})");
                 return Err(InjectedFault {
                     kind: FaultKind::Outage,
                     stem: stem.to_string(),
@@ -240,6 +241,7 @@ impl<E: Inference> Inference for FaultInjector<E> {
         }
         if spec.transient_p > 0.0 && self.rng.chance(spec.transient_p) {
             self.stats.injected_errors += 1;
+            crate::log_trace!("inject transient fault on {stem} (call #{call})");
             return Err(InjectedFault {
                 kind: FaultKind::Transient,
                 stem: stem.to_string(),

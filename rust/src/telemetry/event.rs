@@ -1,0 +1,272 @@
+//! Typed structured events and the bounded ring-buffer [`Recorder`].
+//!
+//! Every event is `Copy` — no strings, no heap — so recording one is a
+//! timestamp read plus an array store. The buffer is allocated once at
+//! construction; when full, the oldest events are overwritten (and
+//! counted in [`Recorder::dropped`]), so the recorder never allocates on
+//! the serving hot path.
+
+use std::time::Instant;
+
+/// The event taxonomy of the serving path. Request-lifecycle events
+/// carry the task index and request id; supervision events carry engine
+/// indices ([`crate::device::Engine::index`]) and the environment bits
+/// the decision saw.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventKind {
+    /// Request dequeued from the arrival channel into the serve loop.
+    Admitted { task: u32, id: u64 },
+    /// Request parked in a dynamic batcher awaiting batch formation.
+    Batched { task: u32, id: u64 },
+    /// Engine call issued for a request or a formed batch.
+    Dispatched { task: u32, occupancy: u32 },
+    /// An engine call succeeded only after `attempts` tries.
+    Retried { task: u32, attempts: u32 },
+    /// Request shed at dequeue: its deadline was unreachable.
+    Shed { task: u32, id: u64 },
+    /// Request failed after retries were exhausted.
+    Failed { task: u32, id: u64 },
+    /// Request finished, with its span breakdown (`queue` = channel
+    /// wait, `batch` = batcher wait, `exec` = engine time incl. retries).
+    Completed {
+        task: u32,
+        id: u64,
+        queue_ns: u64,
+        batch_ns: u64,
+        exec_ns: u64,
+        total_ns: u64,
+        deadline_met: bool,
+    },
+    /// Consecutive failures crossed the threshold: the engine carrying
+    /// `task`'s route was reported faulted to the monitor.
+    FaultRaised { engine: u8, task: u32 },
+    /// Health probes healed the engine; the raw fault signal cleared.
+    FaultCleared { engine: u8 },
+    /// One off-path health probe of a faulted route.
+    Probe { engine: u8, ok: bool },
+    /// The Runtime Manager switched design (the audit-trail record: the
+    /// environment state seen, its `bad_mask`, prior and chosen design,
+    /// and the policy-lookup time).
+    Switch {
+        from: u32,
+        to: u32,
+        troubled: u8,
+        faulted: u8,
+        memory: bool,
+        bad_mask: u8,
+        decision_ns: u64,
+        /// Taken while a signal was raised (fallback) vs. after all
+        /// signals cleared (recovery).
+        fallback: bool,
+    },
+}
+
+impl EventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Admitted { .. } => "admitted",
+            EventKind::Batched { .. } => "batched",
+            EventKind::Dispatched { .. } => "dispatched",
+            EventKind::Retried { .. } => "retried",
+            EventKind::Shed { .. } => "shed",
+            EventKind::Failed { .. } => "failed",
+            EventKind::Completed { .. } => "completed",
+            EventKind::FaultRaised { .. } => "fault_raised",
+            EventKind::FaultCleared { .. } => "fault_cleared",
+            EventKind::Probe { .. } => "probe",
+            EventKind::Switch { .. } => "switch",
+        }
+    }
+}
+
+/// One recorded event: a monotonic timestamp (ns since the recorder's
+/// epoch), a global sequence number and the typed payload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    pub seq: u64,
+    pub t_ns: u64,
+    pub kind: EventKind,
+}
+
+/// Bounded ring-buffer event recorder. O(1) recording, zero allocation
+/// after construction; `events()` returns the retained window oldest
+/// first.
+#[derive(Debug)]
+pub struct Recorder {
+    epoch: Instant,
+    buf: Vec<Event>,
+    cap: usize,
+    /// Next write position once the buffer has wrapped.
+    next: usize,
+    seq: u64,
+    dropped: u64,
+}
+
+impl Recorder {
+    pub fn new(capacity: usize) -> Recorder {
+        assert!(capacity > 0, "recorder capacity must be positive");
+        Recorder {
+            epoch: Instant::now(),
+            buf: Vec::with_capacity(capacity),
+            cap: capacity,
+            next: 0,
+            seq: 0,
+            dropped: 0,
+        }
+    }
+
+    /// The instant timestamps are measured from.
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    /// Monotonic ns since the epoch.
+    #[inline]
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Ns-since-epoch of an [`Instant`] (0 if it predates the epoch).
+    #[inline]
+    pub fn ns_of(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_nanos() as u64
+    }
+
+    /// Record an event stamped with the current time.
+    #[inline]
+    pub fn record(&mut self, kind: EventKind) {
+        let t = self.now_ns();
+        self.record_at(t, kind);
+    }
+
+    /// Record an event with an explicit timestamp (ns since epoch).
+    pub fn record_at(&mut self, t_ns: u64, kind: EventKind) {
+        let ev = Event { seq: self.seq, t_ns, kind };
+        self.seq += 1;
+        if self.buf.len() < self.cap {
+            // within the pre-reserved capacity: push never reallocates
+            self.buf.push(ev);
+        } else {
+            self.buf[self.next] = ev;
+            self.next = (self.next + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Number of retained events (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Events overwritten because the buffer wrapped.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Total events ever recorded (retained + dropped).
+    pub fn recorded(&self) -> u64 {
+        self.seq
+    }
+
+    /// The retained events, oldest first (chronological / seq order).
+    pub fn events(&self) -> Vec<Event> {
+        if self.buf.len() < self.cap || self.next == 0 {
+            self.buf.clone()
+        } else {
+            let mut out = Vec::with_capacity(self.cap);
+            out.extend_from_slice(&self.buf[self.next..]);
+            out.extend_from_slice(&self.buf[..self.next]);
+            out
+        }
+    }
+
+    /// Drop every retained event (capacity and epoch are kept).
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.next = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(r: &Recorder) -> Vec<u64> {
+        r.events()
+            .iter()
+            .map(|e| match e.kind {
+                EventKind::Admitted { id, .. } => id,
+                _ => u64::MAX,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn records_in_order_under_capacity() {
+        let mut r = Recorder::new(8);
+        for id in 0..5u64 {
+            r.record(EventKind::Admitted { task: 0, id });
+        }
+        assert_eq!(r.len(), 5);
+        assert_eq!(r.dropped(), 0);
+        assert_eq!(kinds(&r), vec![0, 1, 2, 3, 4]);
+        let evs = r.events();
+        for w in evs.windows(2) {
+            assert!(w[0].seq < w[1].seq);
+            assert!(w[0].t_ns <= w[1].t_ns);
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let mut r = Recorder::new(4);
+        for id in 0..10u64 {
+            r.record(EventKind::Admitted { task: 0, id });
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.capacity(), 4);
+        assert_eq!(r.dropped(), 6);
+        assert_eq!(r.recorded(), 10);
+        // oldest-first window of the most recent 4
+        assert_eq!(kinds(&r), vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn ring_never_grows_past_capacity() {
+        let mut r = Recorder::new(16);
+        let before = r.buf.capacity();
+        for id in 0..1000u64 {
+            r.record(EventKind::Admitted { task: 1, id });
+        }
+        assert_eq!(r.buf.capacity(), before, "ring buffer reallocated");
+        assert_eq!(r.len(), 16);
+    }
+
+    #[test]
+    fn clear_keeps_capacity() {
+        let mut r = Recorder::new(4);
+        for id in 0..6u64 {
+            r.record(EventKind::Admitted { task: 0, id });
+        }
+        r.clear();
+        assert!(r.is_empty());
+        r.record(EventKind::Probe { engine: 0, ok: true });
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.events()[0].kind.name(), "probe");
+    }
+
+    #[test]
+    fn ns_of_saturates_before_epoch() {
+        let r = Recorder::new(1);
+        let past = r.epoch(); // identical instant -> 0, never panics
+        assert_eq!(r.ns_of(past), 0);
+    }
+}

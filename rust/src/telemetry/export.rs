@@ -1,0 +1,217 @@
+//! Exporters: JSON-lines event dumps (one event object per line, replay
+//! order) and Prometheus text-format metric snapshots. Export runs off
+//! the request path — it allocates freely.
+
+use std::collections::BTreeMap;
+use std::fmt::Write;
+
+use crate::util::json::Json;
+
+use super::event::{Event, EventKind};
+use super::metrics::Registry;
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+/// One event as a JSON object (`{"seq":..,"t_ns":..,"event":..,...}`).
+pub fn event_to_json(ev: &Event) -> Json {
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("seq", num(ev.seq as f64)),
+        ("t_ns", num(ev.t_ns as f64)),
+        ("event", Json::Str(ev.kind.name().to_string())),
+    ];
+    match ev.kind {
+        EventKind::Admitted { task, id }
+        | EventKind::Batched { task, id }
+        | EventKind::Shed { task, id }
+        | EventKind::Failed { task, id } => {
+            pairs.push(("task", num(task as f64)));
+            pairs.push(("id", num(id as f64)));
+        }
+        EventKind::Dispatched { task, occupancy } => {
+            pairs.push(("task", num(task as f64)));
+            pairs.push(("occupancy", num(occupancy as f64)));
+        }
+        EventKind::Retried { task, attempts } => {
+            pairs.push(("task", num(task as f64)));
+            pairs.push(("attempts", num(attempts as f64)));
+        }
+        EventKind::Completed {
+            task,
+            id,
+            queue_ns,
+            batch_ns,
+            exec_ns,
+            total_ns,
+            deadline_met,
+        } => {
+            pairs.push(("task", num(task as f64)));
+            pairs.push(("id", num(id as f64)));
+            pairs.push(("queue_ns", num(queue_ns as f64)));
+            pairs.push(("batch_ns", num(batch_ns as f64)));
+            pairs.push(("exec_ns", num(exec_ns as f64)));
+            pairs.push(("total_ns", num(total_ns as f64)));
+            pairs.push(("deadline_met", Json::Bool(deadline_met)));
+        }
+        EventKind::FaultRaised { engine, task } => {
+            pairs.push(("engine", num(engine as f64)));
+            pairs.push(("task", num(task as f64)));
+        }
+        EventKind::FaultCleared { engine } => {
+            pairs.push(("engine", num(engine as f64)));
+        }
+        EventKind::Probe { engine, ok } => {
+            pairs.push(("engine", num(engine as f64)));
+            pairs.push(("ok", Json::Bool(ok)));
+        }
+        EventKind::Switch {
+            from,
+            to,
+            troubled,
+            faulted,
+            memory,
+            bad_mask,
+            decision_ns,
+            fallback,
+        } => {
+            pairs.push(("from", num(from as f64)));
+            pairs.push(("to", num(to as f64)));
+            pairs.push(("troubled", num(troubled as f64)));
+            pairs.push(("faulted", num(faulted as f64)));
+            pairs.push(("memory", Json::Bool(memory)));
+            pairs.push(("bad_mask", num(bad_mask as f64)));
+            pairs.push(("decision_ns", num(decision_ns as f64)));
+            pairs.push(("fallback", Json::Bool(fallback)));
+        }
+    }
+    obj(pairs)
+}
+
+/// JSON-lines dump: one event object per line, oldest first. Each line
+/// parses standalone, so the timeline can be streamed, grepped and
+/// replayed without a JSON-array reader.
+pub fn events_jsonl(events: &[Event]) -> String {
+    let mut out = String::new();
+    for ev in events {
+        out.push_str(&event_to_json(ev).dump());
+        out.push('\n');
+    }
+    out
+}
+
+/// Prometheus text-format snapshot of a registry: counters, gauges and
+/// histograms with cumulative `_bucket{le=..}` series, `_sum` and
+/// `_count`, deterministic order. Metric names may embed a label set
+/// (`name{k="v"}`); the `# TYPE` header uses the base name and is
+/// emitted once per family.
+pub fn prometheus_snapshot(reg: &Registry) -> String {
+    let mut out = String::new();
+    let mut last_family = String::new();
+    let mut type_line = |out: &mut String, name: &str, kind: &str, last: &mut String| {
+        let base = name.split('{').next().unwrap_or(name);
+        if base != last {
+            let _ = writeln!(out, "# TYPE {base} {kind}");
+            *last = base.to_string();
+        }
+    };
+
+    for (name, v) in reg.counters() {
+        type_line(&mut out, name, "counter", &mut last_family);
+        let _ = writeln!(out, "{name} {v}");
+    }
+    for (name, v) in reg.gauges() {
+        type_line(&mut out, name, "gauge", &mut last_family);
+        let _ = writeln!(out, "{name} {v}");
+    }
+    for (name, h) in reg.histograms() {
+        type_line(&mut out, name, "histogram", &mut last_family);
+        let mut cum = 0u64;
+        for (i, &bound) in h.bounds().iter().enumerate() {
+            cum += h.counts()[i];
+            let _ = writeln!(out, "{name}_bucket{{le=\"{bound}\"}} {cum}");
+        }
+        cum += h.counts().last().copied().unwrap_or(0);
+        let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+        let _ = writeln!(out, "{name}_sum {}", h.sum());
+        let _ = writeln!(out, "{name}_count {}", h.count());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Recorder;
+
+    #[test]
+    fn jsonl_lines_parse_standalone() {
+        let mut r = Recorder::new(16);
+        r.record(EventKind::Admitted { task: 0, id: 1 });
+        r.record(EventKind::Dispatched { task: 0, occupancy: 1 });
+        r.record(EventKind::Switch {
+            from: 0,
+            to: 2,
+            troubled: 0,
+            faulted: 1,
+            memory: false,
+            bad_mask: 1,
+            decision_ns: 120,
+            fallback: true,
+        });
+        let dump = events_jsonl(&r.events());
+        let lines: Vec<&str> = dump.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for line in &lines {
+            let v = Json::parse(line).expect("valid json line");
+            assert!(v.get("event").is_some());
+            assert!(v.get("t_ns").is_some());
+        }
+        let sw = Json::parse(lines[2]).unwrap();
+        assert_eq!(sw.get("event").unwrap().as_str().unwrap(), "switch");
+        assert_eq!(sw.get("bad_mask").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(sw.get("fallback"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn prometheus_counters_gauges_and_histogram_shape() {
+        let mut reg = Registry::new();
+        reg.add("carin_requests_total", 5);
+        reg.set_gauge("carin_current_design", 1.0);
+        reg.observe("carin_exec_latency_ms", 0.5);
+        reg.observe("carin_exec_latency_ms", 2.0);
+        let text = prometheus_snapshot(&reg);
+        assert!(text.contains("# TYPE carin_requests_total counter"));
+        assert!(text.contains("carin_requests_total 5"));
+        assert!(text.contains("# TYPE carin_current_design gauge"));
+        assert!(text.contains("# TYPE carin_exec_latency_ms histogram"));
+        assert!(text.contains("carin_exec_latency_ms_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("carin_exec_latency_ms_count 2"));
+        assert!(text.contains("carin_exec_latency_ms_sum 2.5"));
+        // buckets are cumulative: last bucket equals count
+        let inf: u64 = text
+            .lines()
+            .find(|l| l.contains("le=\"+Inf\""))
+            .and_then(|l| l.split_whitespace().last())
+            .and_then(|v| v.parse().ok())
+            .unwrap();
+        assert_eq!(inf, 2);
+    }
+
+    #[test]
+    fn prometheus_labeled_series_share_one_type_line() {
+        let mut reg = Registry::new();
+        reg.add("carin_task_completed_total{task=\"0\"}", 3);
+        reg.add("carin_task_completed_total{task=\"1\"}", 4);
+        let text = prometheus_snapshot(&reg);
+        let type_lines =
+            text.lines().filter(|l| l.starts_with("# TYPE carin_task_completed_total")).count();
+        assert_eq!(type_lines, 1, "{text}");
+        assert!(text.contains("carin_task_completed_total{task=\"0\"} 3"));
+        assert!(text.contains("carin_task_completed_total{task=\"1\"} 4"));
+    }
+}

@@ -1,0 +1,302 @@
+//! Fixed-bucket log-scale latency histograms, counters and gauges, held
+//! in a name-indexed [`Registry`].
+//!
+//! Histograms trade exactness for a bounded footprint: bucket bounds are
+//! geometric (a fixed ratio apart), so a percentile query is accurate to
+//! one bucket width — a bounded *relative* error at every magnitude.
+//! The agreement with exact [`crate::util::Summary`] percentiles is
+//! property-tested in `tests/prop_invariants.rs`. Observation is O(log
+//! #buckets) (a binary search) and never allocates.
+
+use std::collections::BTreeMap;
+
+/// Log-scale fixed-bucket histogram. Bucket `i` covers
+/// `(bounds[i-1], bounds[i]]`; values above the last bound land in an
+/// implicit overflow bucket.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// Ascending bucket upper bounds.
+    bounds: Vec<f64>,
+    /// Per-bucket counts; `counts[bounds.len()]` is the overflow bucket.
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Histogram {
+    /// Geometric bounds from `lo` to at least `hi`, `per_decade` buckets
+    /// per factor of 10.
+    pub fn log_scale(lo: f64, hi: f64, per_decade: usize) -> Histogram {
+        assert!(lo > 0.0 && hi > lo && per_decade > 0, "bad histogram scale");
+        let ratio = 10f64.powf(1.0 / per_decade as f64);
+        let mut bounds = Vec::new();
+        let mut b = lo;
+        while b < hi * (1.0 + 1e-12) {
+            bounds.push(b);
+            b *= ratio;
+        }
+        let n = bounds.len();
+        Histogram {
+            bounds,
+            counts: vec![0; n + 1],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// The default latency scale: 1 µs to 10 s (in ms), 8 buckets per
+    /// decade (~33% relative bucket width), 57 buckets.
+    pub fn latency_ms() -> Histogram {
+        Histogram::log_scale(1e-3, 1e4, 8)
+    }
+
+    /// Record one observation. O(log #buckets), no allocation.
+    pub fn observe(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        let i = self.bounds.partition_point(|&b| b < v);
+        self.counts[i] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.sum / self.count as f64 }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.max }
+    }
+
+    /// Bucket upper bounds (the overflow bucket has none).
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    /// Per-bucket counts, overflow last (`len == bounds().len() + 1`).
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// The bucket index a value falls into.
+    pub fn bucket_index(&self, v: f64) -> usize {
+        self.bounds.partition_point(|&b| b < v)
+    }
+
+    /// `(lower, upper)` bounds of bucket `i` (`upper` is `+inf` for the
+    /// overflow bucket, `lower` is 0 for the first).
+    pub fn bucket_bounds(&self, i: usize) -> (f64, f64) {
+        let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+        let hi = self.bounds.get(i).copied().unwrap_or(f64::INFINITY);
+        (lo, hi)
+    }
+
+    /// p-th percentile estimate (0..=100): the upper bound of the bucket
+    /// holding the nearest-rank observation, clamped into the observed
+    /// `[min, max]`. Accurate to one bucket width; 0.0 when empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let p = p.clamp(0.0, 100.0);
+        let target = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                let hi = self.bounds.get(i).copied().unwrap_or(self.max);
+                return hi.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+}
+
+/// Name-indexed metrics: monotonic counters, point-in-time gauges and
+/// histograms. `BTreeMap` keys keep exports deterministic. Lookups of
+/// existing metrics never allocate; a name allocates once on first use.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Increment a counter by 1.
+    pub fn inc(&mut self, name: &str) {
+        self.add(name, 1);
+    }
+
+    /// Increment a counter by `by`.
+    pub fn add(&mut self, name: &str, by: u64) {
+        match self.counters.get_mut(name) {
+            Some(v) => *v += by,
+            None => {
+                self.counters.insert(name.to_string(), by);
+            }
+        }
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        match self.gauges.get_mut(name) {
+            Some(g) => *g = v,
+            None => {
+                self.gauges.insert(name.to_string(), v);
+            }
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Record into a histogram, creating it on the default latency scale
+    /// on first use.
+    pub fn observe(&mut self, name: &str, v: f64) {
+        match self.histograms.get_mut(name) {
+            Some(h) => h.observe(v),
+            None => {
+                let mut h = Histogram::latency_ms();
+                h.observe(v);
+                self.histograms.insert(name.to_string(), h);
+            }
+        }
+    }
+
+    /// Install a histogram with explicit buckets (before first observe).
+    pub fn register_histogram(&mut self, name: &str, h: Histogram) {
+        self.histograms.insert(name.to_string(), h);
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    pub fn counters(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.counters.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+
+    pub fn gauges(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.gauges.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+
+    pub fn histograms(&self) -> impl Iterator<Item = (&str, &Histogram)> {
+        self.histograms.iter().map(|(k, v)| (k.as_str(), v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Summary;
+
+    #[test]
+    fn buckets_are_geometric_and_cover_range() {
+        let h = Histogram::log_scale(1.0, 100.0, 4);
+        let r = 10f64.powf(0.25);
+        for w in h.bounds().windows(2) {
+            assert!((w[1] / w[0] - r).abs() < 1e-9);
+        }
+        assert_eq!(h.bounds()[0], 1.0);
+        assert!(*h.bounds().last().unwrap() >= 100.0);
+        assert_eq!(h.counts().len(), h.bounds().len() + 1);
+    }
+
+    #[test]
+    fn observe_counts_and_moments() {
+        let mut h = Histogram::latency_ms();
+        for v in [0.5, 1.0, 2.0, 4.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 7.5).abs() < 1e-12);
+        assert!((h.mean() - 1.875).abs() < 1e-12);
+        assert_eq!(h.min(), 0.5);
+        assert_eq!(h.max(), 4.0);
+        assert_eq!(h.counts().iter().sum::<u64>(), 4);
+    }
+
+    #[test]
+    fn non_finite_observations_are_ignored() {
+        let mut h = Histogram::latency_ms();
+        h.observe(f64::NAN);
+        h.observe(f64::INFINITY);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(99.0), 0.0);
+    }
+
+    #[test]
+    fn overflow_and_underflow_buckets() {
+        let mut h = Histogram::log_scale(1.0, 10.0, 1);
+        h.observe(0.01); // below lo -> first bucket
+        h.observe(1e9); // above hi -> overflow
+        assert_eq!(h.counts()[0], 1);
+        assert_eq!(*h.counts().last().unwrap(), 1);
+        // percentile of the overflow bucket reports the observed max
+        assert_eq!(h.percentile(100.0), 1e9);
+    }
+
+    #[test]
+    fn percentile_within_one_bucket_of_exact() {
+        let mut h = Histogram::latency_ms();
+        let samples: Vec<f64> = (1..=1000).map(|i| i as f64 / 10.0).collect();
+        for &s in &samples {
+            h.observe(s);
+        }
+        let exact = Summary::of(&samples);
+        let ratio = 10f64.powf(1.0 / 8.0);
+        for p in [10.0, 50.0, 90.0, 99.0] {
+            let (hp, ep) = (h.percentile(p), exact.percentile(p));
+            assert!(
+                ep <= hp * ratio && ep >= hp / (ratio * ratio),
+                "p{p}: hist {hp} exact {ep}"
+            );
+        }
+    }
+
+    #[test]
+    fn registry_counters_gauges_histograms() {
+        let mut r = Registry::new();
+        r.inc("reqs");
+        r.add("reqs", 2);
+        assert_eq!(r.counter("reqs"), 3);
+        assert_eq!(r.counter("nope"), 0);
+        r.set_gauge("design", 1.0);
+        r.set_gauge("design", 2.0);
+        assert_eq!(r.gauge("design"), Some(2.0));
+        r.observe("lat_ms", 1.5);
+        r.observe("lat_ms", 3.0);
+        assert_eq!(r.histogram("lat_ms").unwrap().count(), 2);
+        // deterministic iteration order (BTreeMap)
+        let names: Vec<&str> = r.counters().map(|(k, _)| k).collect();
+        assert_eq!(names, vec!["reqs"]);
+    }
+}

@@ -1,0 +1,161 @@
+//! Telemetry: the measurement substrate of the serving stack.
+//!
+//! CARIn's headline claim is *responsiveness* — the Runtime Manager
+//! reacts to environmental fluctuation through a pre-computed switching
+//! table in near-zero time (§4.3, Figures 7–8). Validating that claim
+//! (and every perf PR after it) needs more than end-of-run aggregates:
+//! this module turns the serving path into an inspectable system with a
+//! replayable event timeline, per-request spans and exportable metrics,
+//! at a cost small enough to leave on in production runs.
+//!
+//! # Event taxonomy
+//!
+//! [`EventKind`] covers the request lifecycle and the supervision loop:
+//!
+//! | event | meaning |
+//! |---|---|
+//! | `admitted` | request dequeued from the arrival channel |
+//! | `batched` | request parked in a dynamic batcher |
+//! | `dispatched` | engine call issued (occupancy = batch size) |
+//! | `retried` | engine call needed > 1 attempt |
+//! | `shed` | request dropped at dequeue (deadline unreachable) |
+//! | `failed` | retries exhausted |
+//! | `completed` | request done, with queue/batch/exec/total span ns |
+//! | `fault_raised` | consecutive failures crossed the fault threshold |
+//! | `probe` | off-path health probe of a faulted route |
+//! | `fault_cleared` | probes healed the route |
+//! | `switch` | RM design switch: state, `bad_mask`, from/to, decision ns |
+//!
+//! The `switch` events double as the RASS **audit trail**: every policy
+//! lookup that changed the design records the exact [`EnvState`] bits it
+//! saw and how long the lookup took, so adaptation traces can be
+//! replayed against the fault schedule that caused them.
+//!
+//! # Overhead budget
+//!
+//! Recording must never perturb what it measures:
+//!
+//! * the [`Recorder`] ring buffer is allocated once at construction and
+//!   overwrites oldest-first when full — recording is O(1), allocation-
+//!   free, and events are `Copy` (no strings on the hot path);
+//! * [`Histogram::observe`] is a binary search over ~57 fixed buckets;
+//! * [`Registry`] counter/gauge updates are a `BTreeMap` lookup that
+//!   allocates only the first time a name is seen;
+//! * exporters ([`export::events_jsonl`], [`export::prometheus_snapshot`])
+//!   are off the request path entirely.
+//!
+//! Size the recorder to the run (default 8192 events ≈ 2k requests'
+//! full lifecycle): a wrapped buffer still exports, but the replayable
+//! window starts at the oldest retained event and
+//! [`Recorder::dropped`] reports what was lost.
+//!
+//! [`EnvState`]: crate::moo::rass::EnvState
+
+pub mod event;
+pub mod export;
+pub mod metrics;
+pub mod span;
+
+pub use event::{Event, EventKind, Recorder};
+pub use metrics::{Histogram, Registry};
+pub use span::Span;
+
+/// Default ring-buffer capacity (events) for a serving run.
+pub const DEFAULT_EVENT_CAPACITY: usize = 8192;
+
+/// The per-coordinator telemetry bundle: the event recorder, the metric
+/// registry and the serving-window bounds (first admission → last
+/// completion) used for setup-free throughput accounting.
+#[derive(Debug)]
+pub struct Telemetry {
+    pub recorder: Recorder,
+    pub registry: Registry,
+    first_admit_ns: Option<u64>,
+    last_done_ns: Option<u64>,
+}
+
+impl Telemetry {
+    pub fn new(event_capacity: usize) -> Telemetry {
+        Telemetry {
+            recorder: Recorder::new(event_capacity),
+            registry: Registry::new(),
+            first_admit_ns: None,
+            last_done_ns: None,
+        }
+    }
+
+    /// Forget the serving window (call at the start of a run; events and
+    /// metrics accumulate across runs, the window does not).
+    pub fn reset_window(&mut self) {
+        self.first_admit_ns = None;
+        self.last_done_ns = None;
+    }
+
+    /// Note an admission at the current instant (first one opens the
+    /// serving window).
+    pub fn note_admit(&mut self) {
+        let t = self.recorder.now_ns();
+        if self.first_admit_ns.is_none() {
+            self.first_admit_ns = Some(t);
+        }
+        self.last_done_ns = Some(self.last_done_ns.unwrap_or(t).max(t));
+    }
+
+    /// Note a completion at the current instant (extends the window).
+    pub fn note_done(&mut self) {
+        let t = self.recorder.now_ns();
+        self.last_done_ns = Some(self.last_done_ns.unwrap_or(t).max(t));
+    }
+
+    /// Window bounds in ns since the recorder epoch, if any request was
+    /// admitted.
+    pub fn window_ns(&self) -> Option<(u64, u64)> {
+        match (self.first_admit_ns, self.last_done_ns) {
+            (Some(a), Some(b)) => Some((a, b.max(a))),
+            _ => None,
+        }
+    }
+
+    /// Serving-window length in seconds (first admission to last
+    /// completion), if any request was admitted.
+    pub fn window_s(&self) -> Option<f64> {
+        self.window_ns().map(|(a, b)| (b - a) as f64 / 1e9)
+    }
+
+    /// JSON-lines dump of the retained event timeline.
+    pub fn events_jsonl(&self) -> String {
+        export::events_jsonl(&self.recorder.events())
+    }
+
+    /// Prometheus text-format snapshot of the registry.
+    pub fn prometheus(&self) -> String {
+        export::prometheus_snapshot(&self.registry)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_tracks_admit_to_done() {
+        let mut t = Telemetry::new(16);
+        assert!(t.window_s().is_none());
+        t.note_admit();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        t.note_done();
+        let w = t.window_s().unwrap();
+        assert!(w >= 0.002, "window {w}");
+        t.reset_window();
+        assert!(t.window_s().is_none());
+    }
+
+    #[test]
+    fn bundle_exports_are_consistent() {
+        let mut t = Telemetry::new(16);
+        t.recorder.record(EventKind::Admitted { task: 0, id: 0 });
+        t.registry.inc("carin_requests_admitted_total");
+        assert_eq!(t.events_jsonl().lines().count(), 1);
+        assert!(t.prometheus().contains("carin_requests_admitted_total 1"));
+    }
+}

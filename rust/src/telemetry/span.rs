@@ -1,0 +1,139 @@
+//! Per-request spans: the four timestamps a request passes on its way
+//! through the serving pipeline, and the queue/batch/execute/total
+//! breakdown derived from them.
+
+use std::time::Instant;
+
+use super::event::EventKind;
+use super::Recorder;
+
+/// The lifecycle timestamps of one request.
+///
+/// ```text
+/// submitted ──queue──▶ admitted ──batch──▶ dispatched ──exec──▶ completed
+/// └──────────────────────────── total ───────────────────────────┘
+/// ```
+///
+/// * `queue` — arrival-channel wait (submission to dequeue);
+/// * `batch` — dynamic-batcher wait (zero on the unbatched path);
+/// * `exec`  — engine call including supervised retries and backoff;
+/// * `total` — request-to-response (the e2e latency of the report).
+#[derive(Debug, Clone, Copy)]
+pub struct Span {
+    pub task: usize,
+    pub id: u64,
+    pub submitted: Instant,
+    pub admitted: Instant,
+    pub dispatched: Instant,
+    pub completed: Instant,
+}
+
+impl Span {
+    pub fn queue_ms(&self) -> f64 {
+        ms(self.submitted, self.admitted)
+    }
+
+    pub fn batch_ms(&self) -> f64 {
+        ms(self.admitted, self.dispatched)
+    }
+
+    pub fn exec_ms(&self) -> f64 {
+        ms(self.dispatched, self.completed)
+    }
+
+    pub fn total_ms(&self) -> f64 {
+        ms(self.submitted, self.completed)
+    }
+
+    /// The [`EventKind::Completed`] record of this span, with durations
+    /// in integer nanoseconds.
+    pub fn completed_kind(&self, deadline_met: bool) -> EventKind {
+        EventKind::Completed {
+            task: self.task as u32,
+            id: self.id,
+            queue_ns: ns(self.submitted, self.admitted),
+            batch_ns: ns(self.admitted, self.dispatched),
+            exec_ns: ns(self.dispatched, self.completed),
+            total_ns: ns(self.submitted, self.completed),
+            deadline_met,
+        }
+    }
+
+    /// Record this span's completion event, stamped at `completed`.
+    pub fn record(&self, rec: &mut Recorder, deadline_met: bool) {
+        let t = rec.ns_of(self.completed);
+        rec.record_at(t, self.completed_kind(deadline_met));
+    }
+}
+
+fn ms(from: Instant, to: Instant) -> f64 {
+    to.saturating_duration_since(from).as_secs_f64() * 1000.0
+}
+
+fn ns(from: Instant, to: Instant) -> u64 {
+    to.saturating_duration_since(from).as_nanos() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let t0 = Instant::now();
+        let s = Span {
+            task: 2,
+            id: 7,
+            submitted: t0,
+            admitted: t0 + Duration::from_millis(3),
+            dispatched: t0 + Duration::from_millis(5),
+            completed: t0 + Duration::from_millis(9),
+        };
+        assert!((s.queue_ms() - 3.0).abs() < 1e-9);
+        assert!((s.batch_ms() - 2.0).abs() < 1e-9);
+        assert!((s.exec_ms() - 4.0).abs() < 1e-9);
+        assert!((s.total_ms() - 9.0).abs() < 1e-9);
+        assert!(
+            (s.queue_ms() + s.batch_ms() + s.exec_ms() - s.total_ms()).abs() < 1e-9
+        );
+    }
+
+    #[test]
+    fn completed_kind_carries_breakdown() {
+        let t0 = Instant::now();
+        let s = Span {
+            task: 1,
+            id: 42,
+            submitted: t0,
+            admitted: t0 + Duration::from_micros(10),
+            dispatched: t0 + Duration::from_micros(10),
+            completed: t0 + Duration::from_micros(30),
+        };
+        match s.completed_kind(true) {
+            EventKind::Completed { task, id, batch_ns, total_ns, deadline_met, .. } => {
+                assert_eq!(task, 1);
+                assert_eq!(id, 42);
+                assert_eq!(batch_ns, 0); // unbatched: admitted == dispatched
+                assert_eq!(total_ns, 30_000);
+                assert!(deadline_met);
+            }
+            other => panic!("wrong kind {other:?}"),
+        }
+    }
+
+    #[test]
+    fn out_of_order_instants_saturate() {
+        let t0 = Instant::now();
+        let s = Span {
+            task: 0,
+            id: 0,
+            submitted: t0 + Duration::from_millis(5),
+            admitted: t0,
+            dispatched: t0,
+            completed: t0,
+        };
+        assert_eq!(s.queue_ms(), 0.0);
+        assert_eq!(s.total_ms(), 0.0);
+    }
+}

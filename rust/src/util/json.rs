@@ -1,4 +1,5 @@
-//! Minimal JSON parser — just enough to read `artifacts/manifest.json`
+//! Minimal JSON parser and writer — just enough to read
+//! `artifacts/manifest.json` and to dump telemetry/trace exports
 //! (objects, arrays, strings, numbers, booleans, null). serde is not
 //! available in the offline registry.
 
@@ -76,6 +77,76 @@ impl Json {
     pub fn is_null(&self) -> bool {
         matches!(self, Json::Null)
     }
+
+    /// Serialize to compact JSON text. Non-finite numbers (NaN, ±inf)
+    /// have no JSON representation and are written as `null`, so dumps
+    /// of metric vectors always re-parse.
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => write_num(*x, out),
+            Json::Str(s) => write_str(s, out),
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_str(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_num(x: f64, out: &mut String) {
+    use std::fmt::Write;
+    if !x.is_finite() {
+        out.push_str("null");
+    } else if x == x.trunc() && x.abs() < 1e15 {
+        let _ = write!(out, "{}", x as i64);
+    } else {
+        let _ = write!(out, "{x}");
+    }
+}
+
+fn write_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                use std::fmt::Write;
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -296,6 +367,30 @@ mod tests {
     fn nested() {
         let v = Json::parse(r#"{"a": [1, [2, {"b": true}]]}"#).unwrap();
         assert!(v.get("a").is_some());
+    }
+
+    #[test]
+    fn dump_round_trips() {
+        let doc = r#"{"a": [1, 2.5, -3], "b": {"c": "x\ny", "d": null}, "e": true}"#;
+        let v = Json::parse(doc).unwrap();
+        let dumped = v.dump();
+        assert_eq!(Json::parse(&dumped).unwrap(), v);
+        // integers stay integral, no float noise
+        assert!(dumped.contains("[1,2.5,-3]"), "{dumped}");
+    }
+
+    #[test]
+    fn dump_maps_non_finite_to_null() {
+        assert_eq!(Json::Num(f64::NAN).dump(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).dump(), "null");
+        assert_eq!(Json::Num(1.5).dump(), "1.5");
+    }
+
+    #[test]
+    fn dump_escapes_strings() {
+        let v = Json::Str("a\"b\\c\nd\u{1}".into());
+        let dumped = v.dump();
+        assert_eq!(Json::parse(&dumped).unwrap(), v);
     }
 
     #[test]

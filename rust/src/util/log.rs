@@ -1,0 +1,180 @@
+//! Tiny leveled logger (the `log`/`env_logger` crates are not in the
+//! offline registry). Diagnostics go to stderr so benches and tests stay
+//! machine-readable on stdout; the level comes from the `CARIN_LOG`
+//! environment variable (`error|warn|info|debug|trace|off`, default
+//! `warn`), so everything runs quiet unless explicitly asked not to.
+//!
+//! Use through the crate-root macros:
+//!
+//! ```no_run
+//! carin::log_warn!("route {} went cold", "cnn_s_fp32");
+//! carin::log_debug!("solved in {:?}", std::time::Duration::from_millis(3));
+//! ```
+//!
+//! The enabled-check is a single relaxed atomic load, so disabled log
+//! statements cost one branch on the hot path.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Log severity, most severe first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+            Level::Trace => "trace",
+        }
+    }
+
+    /// Parse a level name (case-insensitive). `off`/`none` return `None`
+    /// inside `Some` semantics handled by [`set_level`]; unknown strings
+    /// are `Err`.
+    pub fn parse(s: &str) -> Result<Option<Level>, ()> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Ok(Some(Level::Error)),
+            "warn" | "warning" => Ok(Some(Level::Warn)),
+            "info" => Ok(Some(Level::Info)),
+            "debug" => Ok(Some(Level::Debug)),
+            "trace" => Ok(Some(Level::Trace)),
+            "off" | "none" => Ok(None),
+            _ => Err(()),
+        }
+    }
+}
+
+/// Stored as `max enabled level + 1` (0 = everything off);
+/// `UNSET` means "read `CARIN_LOG` on first use".
+const UNSET: usize = usize::MAX;
+static LEVEL: AtomicUsize = AtomicUsize::new(UNSET);
+
+fn init_from_env() -> usize {
+    let stored = match std::env::var("CARIN_LOG") {
+        Ok(v) => match Level::parse(&v) {
+            Ok(Some(l)) => l as usize + 1,
+            Ok(None) => 0,
+            Err(()) => Level::Warn as usize + 1,
+        },
+        Err(_) => Level::Warn as usize + 1,
+    };
+    LEVEL.store(stored, Ordering::Relaxed);
+    stored
+}
+
+/// Override the level programmatically (`None` silences everything).
+/// Wins over `CARIN_LOG` for the rest of the process.
+pub fn set_level(level: Option<Level>) {
+    LEVEL.store(level.map(|l| l as usize + 1).unwrap_or(0), Ordering::Relaxed);
+}
+
+/// The currently enabled maximum level, if any.
+pub fn level() -> Option<Level> {
+    match current() {
+        0 => None,
+        n => Some(match n - 1 {
+            0 => Level::Error,
+            1 => Level::Warn,
+            2 => Level::Info,
+            3 => Level::Debug,
+            _ => Level::Trace,
+        }),
+    }
+}
+
+fn current() -> usize {
+    let cur = LEVEL.load(Ordering::Relaxed);
+    if cur == UNSET {
+        init_from_env()
+    } else {
+        cur
+    }
+}
+
+/// Whether a statement at `l` would be emitted.
+#[inline]
+pub fn enabled(l: Level) -> bool {
+    (l as usize) < current()
+}
+
+/// Emit one record (used by the `log_*!` macros; call those instead).
+pub fn log(l: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(l) {
+        eprintln!("[carin {:5}] {}", l.name(), args);
+    }
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Error, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Info, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Debug, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_trace {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Trace, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_level_names() {
+        assert_eq!(Level::parse("ERROR"), Ok(Some(Level::Error)));
+        assert_eq!(Level::parse("warn"), Ok(Some(Level::Warn)));
+        assert_eq!(Level::parse("Info"), Ok(Some(Level::Info)));
+        assert_eq!(Level::parse("debug"), Ok(Some(Level::Debug)));
+        assert_eq!(Level::parse("trace"), Ok(Some(Level::Trace)));
+        assert_eq!(Level::parse("off"), Ok(None));
+        assert_eq!(Level::parse("banana"), Err(()));
+    }
+
+    #[test]
+    fn enabled_respects_ordering() {
+        // tests share the process-wide level; restore what we found.
+        let before = level();
+        set_level(Some(Level::Info));
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        assert!(!enabled(Level::Trace));
+        set_level(None);
+        assert!(!enabled(Level::Error));
+        set_level(before);
+    }
+}

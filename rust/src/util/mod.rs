@@ -1,9 +1,11 @@
 //! In-tree substrates for crates unavailable in the offline registry:
 //! a fast deterministic RNG, descriptive statistics, capped exponential
-//! backoff, and a minimal JSON parser (used for `artifacts/manifest.json`).
+//! backoff, a minimal JSON parser/writer (manifest loading, telemetry
+//! export) and a leveled stderr logger (`CARIN_LOG`).
 
 pub mod backoff;
 pub mod json;
+pub mod log;
 pub mod rng;
 pub mod stats;
 

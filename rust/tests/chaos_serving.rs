@@ -6,6 +6,11 @@
 //! process-level errors, keep the failure rate of admitted requests
 //! under 5%, take at least one fallback design switch while the route is
 //! out, and recover to the calm design once health probes pass.
+//!
+//! The telemetry recorder must tell the same story in order: fault
+//! raised -> fallback switch -> health probe -> recovery switch, and the
+//! JSONL / Prometheus exports must be parseable and consistent with the
+//! report.
 
 use std::sync::mpsc;
 
@@ -14,6 +19,8 @@ use carin::coordinator::ServingCoordinator;
 use carin::device::profiles;
 use carin::moo::rass::{self, EnvState};
 use carin::runtime::{synthetic_manifest, FaultInjector, FaultSpec, StubEngine};
+use carin::telemetry::EventKind;
+use carin::util::json::Json;
 use carin::workload;
 use carin::zoo::Registry;
 
@@ -77,6 +84,76 @@ fn uc1_serving_survives_transient_faults_and_an_outage() {
     assert!(report.goodput_rps > 0.0);
     // the injector really injected
     assert!(coord.engine().stats.injected_errors > 0);
+
+    // --- telemetry: the recorder must replay the supervision story in
+    // causal order: fault raised -> fallback switch -> probe -> recovery
+    let tel = coord.telemetry();
+    let events = tel.recorder.events();
+    assert!(!events.is_empty(), "no telemetry events recorded");
+    for w in events.windows(2) {
+        assert!(w[0].seq < w[1].seq, "events out of sequence order");
+        assert!(w[0].t_ns <= w[1].t_ns, "event timestamps regressed");
+    }
+    let after = |from: usize, what: &str, pred: fn(&EventKind) -> bool| -> usize {
+        events[from..]
+            .iter()
+            .position(|e| pred(&e.kind))
+            .map(|i| i + from)
+            .unwrap_or_else(|| panic!("no {what} event at/after index {from}"))
+    };
+    let i_fault = after(0, "fault_raised", |k| matches!(k, EventKind::FaultRaised { .. }));
+    let i_fall = after(i_fault, "fallback switch", |k| {
+        matches!(k, EventKind::Switch { fallback: true, .. })
+    });
+    let i_probe = after(i_fall, "probe", |k| matches!(k, EventKind::Probe { .. }));
+    let i_recov = after(i_probe, "recovery switch", |k| {
+        matches!(k, EventKind::Switch { fallback: false, .. })
+    });
+    assert!(i_fault < i_fall && i_fall < i_probe && i_probe < i_recov);
+    // the fallback switch saw the raised fault in its audit bits
+    if let EventKind::Switch { bad_mask, .. } = events[i_fall].kind {
+        assert!(bad_mask != 0, "fallback switch recorded a calm bad_mask");
+    }
+    // the recovery switch saw a clean environment
+    if let EventKind::Switch { bad_mask, to, .. } = events[i_recov].kind {
+        assert_eq!(bad_mask, 0, "recovery switch recorded a raised bad_mask");
+        assert_eq!(to as usize, d0, "recovery switch did not target the calm design");
+    }
+
+    // metric registry agrees with the report
+    let m = &tel.registry;
+    assert_eq!(m.counter("carin_requests_completed_total"), report.total_requests as u64);
+    assert_eq!(m.counter("carin_requests_failed_total"), report.failed as u64);
+    assert_eq!(m.counter("carin_requests_shed_total"), report.shed as u64);
+    assert_eq!(m.counter("carin_switches_fallback_total"), report.fallback_switches as u64);
+    assert_eq!(m.counter("carin_switches_recovery_total"), report.recovered_switches as u64);
+    assert!(m.counter("carin_faults_raised_total") >= 1);
+    assert!(m.counter("carin_probes_total") >= 1);
+    let e2e = m.histogram("carin_e2e_latency_ms").expect("e2e histogram missing");
+    assert_eq!(e2e.count(), report.total_requests as u64);
+
+    // serving window: positive and within the measured wall clock
+    assert!(report.window_s > 0.0, "window never opened");
+    assert!(report.window_s <= report.wall_s + 1e-6, "window exceeds wall clock");
+    assert_eq!(m.gauge("carin_window_s"), Some(report.window_s));
+
+    // every JSONL line is standalone-parseable JSON with the event schema
+    let jsonl = tel.events_jsonl();
+    assert_eq!(jsonl.lines().count(), events.len());
+    for line in jsonl.lines() {
+        let j = Json::parse(line).expect("telemetry JSONL line is not valid JSON");
+        assert!(j.get("event").and_then(Json::as_str).is_some(), "line lacks event: {line}");
+        assert!(j.get("t_ns").is_some(), "line lacks t_ns: {line}");
+    }
+
+    // the Prometheus snapshot exposes the request counters and at least
+    // one latency histogram with cumulative buckets
+    let prom = tel.prometheus();
+    assert!(prom.contains("carin_requests_admitted_total"));
+    assert!(prom.contains("carin_requests_completed_total"));
+    assert!(prom.contains("carin_e2e_latency_ms_bucket"));
+    assert!(prom.contains("le=\"+Inf\""));
+    assert!(prom.contains("carin_e2e_latency_ms_count"));
 }
 
 #[test]
@@ -105,4 +182,20 @@ fn clean_run_sheds_and_fails_nothing() {
     assert_eq!(report.recovered_switches, 0);
     // with no deadline misses goodput equals throughput
     assert!((report.goodput_rps - report.throughput_rps).abs() < 1e-9);
+
+    // telemetry on a clean run: window open, ring buffer far from full,
+    // and no supervision-loop events ever fired
+    let tel = coord.telemetry();
+    assert!(report.window_s > 0.0, "window never opened");
+    assert!(report.window_s <= report.wall_s + 1e-6, "window exceeds wall clock");
+    assert_eq!(tel.recorder.dropped(), 0, "ring buffer wrapped on an 80-request run");
+    assert!(tel.recorder.events().iter().all(|e| !matches!(
+        e.kind,
+        EventKind::FaultRaised { .. }
+            | EventKind::FaultCleared { .. }
+            | EventKind::Probe { .. }
+            | EventKind::Switch { .. }
+    )));
+    assert_eq!(tel.registry.counter("carin_requests_admitted_total"), 80);
+    assert_eq!(tel.registry.counter("carin_requests_completed_total"), 80);
 }

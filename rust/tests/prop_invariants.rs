@@ -251,10 +251,12 @@ fn prop_batcher_conserves_requests() {
         let mut b = Batcher::new(cap, 4, Duration::from_secs(100));
         let mut out = 0usize;
         for i in 0..n {
+            let now = Instant::now();
             let r = carin::coordinator::batcher::Request {
                 id: i as u64,
                 payload: vec![0.0; 4],
-                enqueued: Instant::now(),
+                enqueued: now,
+                admitted: now,
                 deadline: None,
             };
             if let Some(batch) = b.push(r) {
@@ -269,6 +271,39 @@ fn prop_batcher_conserves_requests() {
         }
         if out != n {
             return Err(format!("lost requests: {out} != {n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_histogram_percentiles_track_summary() {
+    // the telemetry histogram's bucketed percentiles must stay within
+    // one geometric bucket width of the exact interpolated Summary
+    // percentiles, for random dense sample sets on the latency scale
+    use carin::telemetry::Histogram;
+    let ratio = 10f64.powf(1.0 / 8.0); // latency_ms() bucket ratio
+    forall(60, |rng| {
+        let n = 200 + rng.below(800);
+        let lo = rng.range(0.05, 5.0);
+        let hi = lo * rng.range(4.0, 40.0);
+        let samples: Vec<f64> = (0..n).map(|_| rng.range(lo, hi)).collect();
+        let mut h = Histogram::latency_ms();
+        for &s in &samples {
+            h.observe(s);
+        }
+        let exact = Summary::of(&samples);
+        for p in [50.0, 90.0, 99.0] {
+            let (hp, ep) = (h.percentile(p), exact.percentile(p));
+            // hp is a bucket upper bound: the exact value sits at most
+            // one bucket below it; interpolation can nudge it at most
+            // one bucket past in either direction.
+            if !(ep <= hp * ratio && ep >= hp / (ratio * ratio)) {
+                return Err(format!("p{p}: hist {hp} vs exact {ep}"));
+            }
+        }
+        if h.count() != n as u64 {
+            return Err(format!("count {} != {n}", h.count()));
         }
         Ok(())
     });
