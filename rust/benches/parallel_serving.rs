@@ -1,0 +1,140 @@
+//! Parallel serving benchmark: single-loop coordinator vs the
+//! per-engine worker pool on a two-task UC3-style workload whose tasks
+//! are pinned to two distinct engines.
+//!
+//! Runs on the PJRT-free [`StubEngine`] with a synthetic manifest (no
+//! `make artifacts` needed); the stub burns a fixed per-call latency so
+//! engine-level parallelism is the only thing separating the two
+//! coordinators. With both arrival queues flooded, the single loop
+//! executes 2xN requests serially (~2N * exec_ms wall) while the pool
+//! overlaps the two engines (~N * exec_ms wall), so goodput should
+//! roughly double.
+//!
+//! Writes the comparison to `BENCH_serving.json` in the working
+//! directory (CI uploads it as an artifact and gates on the speedup).
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+
+use carin::config;
+use carin::coordinator::serve::ServeReport;
+use carin::coordinator::{PooledCoordinator, ServingCoordinator};
+use carin::device::Engine;
+use carin::runtime::{synthetic_manifest, StubEngine};
+use carin::util::json::Json;
+use carin::workload;
+use carin::zoo::Registry;
+
+const N_PER_TASK: usize = 150;
+const EXEC_MS: f64 = 2.0;
+
+struct RunResult {
+    report: ServeReport,
+    exec_p50_ms: f64,
+    exec_p99_ms: f64,
+}
+
+fn percentiles(tel: &carin::telemetry::Telemetry) -> (f64, f64) {
+    match tel.registry.histogram("carin_exec_latency_ms") {
+        Some(h) => (h.percentile(50.0), h.percentile(99.0)),
+        None => (0.0, 0.0),
+    }
+}
+
+fn run_single(reg: &Registry, sol: &carin::moo::Solution) -> anyhow::Result<RunResult> {
+    let manifest = synthetic_manifest(reg);
+    let engine = StubEngine::with_latency(EXEC_MS);
+    let mut coord = ServingCoordinator::with_engine(engine, reg, sol, manifest)?;
+    let (tx, rx) = mpsc::channel();
+    let producers =
+        workload::spawn_producers(workload::for_use_case("uc3", N_PER_TASK), tx, 23, 0.0);
+    let report = coord.serve(rx)?;
+    for h in producers {
+        let _ = h.join();
+    }
+    let (exec_p50_ms, exec_p99_ms) = percentiles(coord.telemetry());
+    Ok(RunResult { report, exec_p50_ms, exec_p99_ms })
+}
+
+fn run_pooled(reg: &Registry, sol: &carin::moo::Solution) -> anyhow::Result<RunResult> {
+    let manifest = synthetic_manifest(reg);
+    let factory =
+        |_: Engine| -> anyhow::Result<StubEngine> { Ok(StubEngine::with_latency(EXEC_MS)) };
+    let mut coord = PooledCoordinator::new(factory, reg, sol, manifest)?;
+    let (tx, rx) = mpsc::channel();
+    let producers =
+        workload::spawn_producers(workload::for_use_case("uc3", N_PER_TASK), tx, 23, 0.0);
+    let report = coord.serve(rx)?;
+    for h in producers {
+        let _ = h.join();
+    }
+    let (exec_p50_ms, exec_p99_ms) = percentiles(coord.telemetry());
+    Ok(RunResult { report, exec_p50_ms, exec_p99_ms })
+}
+
+fn print_row(label: &str, r: &RunResult) {
+    println!(
+        "{:12} {:>9.1} {:>9.1} {:>6} {:>6} {:>6} {:>9.2} {:>9.2} {:>8.3}",
+        label,
+        r.report.goodput_rps,
+        r.report.throughput_rps,
+        r.report.total_requests,
+        r.report.failed,
+        r.report.shed,
+        r.exec_p50_ms,
+        r.exec_p99_ms,
+        r.report.window_s
+    );
+}
+
+fn side(r: &RunResult) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("goodput_rps".into(), Json::Num(r.report.goodput_rps));
+    o.insert("throughput_rps".into(), Json::Num(r.report.throughput_rps));
+    o.insert("completed".into(), Json::Num(r.report.total_requests as f64));
+    o.insert("failed".into(), Json::Num(r.report.failed as f64));
+    o.insert("shed".into(), Json::Num(r.report.shed as f64));
+    o.insert("p50_ms".into(), Json::Num(r.exec_p50_ms));
+    o.insert("p99_ms".into(), Json::Num(r.exec_p99_ms));
+    o.insert("window_s".into(), Json::Num(r.report.window_s));
+    Json::Obj(o)
+}
+
+fn main() -> anyhow::Result<()> {
+    let reg = Registry::paper();
+    // the pinned solution routes scene->CPU and audio->GPU, so the pool
+    // has two genuinely independent engine queues to overlap
+    let sol = config::pinned_uc3_solution(&reg);
+
+    println!(
+        "=== uc3 pinned 2-engine serving, {} requests/task, stub exec {} ms ===",
+        N_PER_TASK, EXEC_MS
+    );
+    println!(
+        "{:12} {:>9} {:>9} {:>6} {:>6} {:>6} {:>9} {:>9} {:>8}",
+        "coordinator", "goodput", "rps", "done", "fail", "shed", "p50 ms", "p99 ms", "window"
+    );
+
+    let single = run_single(&reg, &sol)?;
+    print_row("single-loop", &single);
+    let pooled = run_pooled(&reg, &sol)?;
+    print_row("pooled", &pooled);
+
+    let speedup = pooled.report.goodput_rps / single.report.goodput_rps.max(1e-9);
+    println!(
+        "\npooled goodput speedup over single loop: {speedup:.2}x ({:.1} -> {:.1} req/s)",
+        single.report.goodput_rps, pooled.report.goodput_rps
+    );
+
+    let mut o = BTreeMap::new();
+    o.insert("bench".into(), Json::Str("parallel_serving".into()));
+    o.insert("workload".into(), Json::Str("uc3-pinned-2-engine".into()));
+    o.insert("n_requests_per_task".into(), Json::Num(N_PER_TASK as f64));
+    o.insert("exec_ms".into(), Json::Num(EXEC_MS));
+    o.insert("single".into(), side(&single));
+    o.insert("pooled".into(), side(&pooled));
+    o.insert("speedup_goodput".into(), Json::Num(speedup));
+    std::fs::write("BENCH_serving.json", Json::Obj(o).dump())?;
+    println!("comparison -> BENCH_serving.json");
+    Ok(())
+}

@@ -2,11 +2,14 @@
 //! plus a small text-based spec parser so custom applications can be
 //! launched from the CLI without recompiling.
 
-use crate::device::Device;
-use crate::moo::space::build_problem;
-use crate::moo::{Constraint, Metric, Objective, Problem, Statistic};
+use std::time::Duration;
+
+use crate::device::{Device, Engine, Proc};
+use crate::moo::rass::SwitchingPolicy;
+use crate::moo::space::{build_problem, Assignment};
+use crate::moo::{Config, Constraint, Design, Metric, Objective, Problem, Solution, Statistic};
 use crate::zoo::registry::Task;
-use crate::zoo::Registry;
+use crate::zoo::{Registry, Scheme, Variant};
 
 /// Deterministic profiling seed derived from the device (so reproductions
 /// are stable but devices differ).
@@ -129,6 +132,47 @@ pub fn use_case(name: &str, reg: &Registry, device: &Device) -> Option<Problem> 
 
 pub const USE_CASES: [&str; 4] = ["uc1", "uc2", "uc3", "uc4"];
 
+/// A fixed single-design UC3-style solution: scene recognition pinned to
+/// the CPU and audio classification pinned to the GPU, with a switching
+/// policy that never leaves design 0.
+///
+/// Deterministic two-engine placement for the pooled-coordinator tests
+/// and benches, where RASS's device-dependent choice (which may co-locate
+/// both tasks on one processor) would make engine-parallelism assertions
+/// meaningless.
+pub fn pinned_uc3_solution(reg: &Registry) -> Solution {
+    let scene = reg
+        .models
+        .iter()
+        .position(|m| m.task == Task::SceneCls)
+        .expect("registry has a scene model");
+    let audio = reg
+        .models
+        .iter()
+        .position(|m| m.task == Task::AudioCls)
+        .expect("registry has an audio model");
+    let config = Config {
+        assignments: vec![
+            Assignment {
+                variant: Variant { model: scene, scheme: Scheme::Fx8 },
+                proc: Proc::Cpu { threads: 4, xnnpack: true },
+            },
+            // YAMNet has no fixed-point accuracy entry, so the audio
+            // route stays fp32
+            Assignment {
+                variant: Variant { model: audio, scheme: Scheme::Fp32 },
+                proc: Proc::Gpu,
+            },
+        ],
+    };
+    Solution {
+        designs: vec![Design { config, optimality: 1.0, roles: vec!["d0"] }],
+        policy: SwitchingPolicy::pinned(vec![Engine::Cpu, Engine::Gpu], 0),
+        feasible_count: 1,
+        solve_time: Duration::ZERO,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -143,6 +187,27 @@ mod tests {
                     .unwrap_or_else(|| panic!("{uc} on {}", d.name));
                 assert!(!p.space.is_empty(), "{uc} on {} has empty space", d.name);
                 assert!(!p.objectives.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn pinned_uc3_solution_spans_two_engines() {
+        let reg = Registry::paper();
+        let sol = pinned_uc3_solution(&reg);
+        assert_eq!(sol.designs.len(), 1);
+        let a = &sol.designs[0].config.assignments;
+        assert_eq!(a.len(), 2);
+        assert_ne!(a[0].proc.engine(), a[1].proc.engine());
+        assert_eq!(sol.policy.engines, vec![Engine::Cpu, Engine::Gpu]);
+        // the policy is genuinely pinned: every environment state maps
+        // to design 0
+        for troubled in 0u8..4 {
+            for faulted in 0u8..4 {
+                for memory in [false, true] {
+                    let s = crate::moo::rass::EnvState { troubled, faulted, memory };
+                    assert_eq!(sol.policy.design_for(s), 0);
+                }
             }
         }
     }

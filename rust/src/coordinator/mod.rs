@@ -4,11 +4,13 @@
 //! example on real PJRT execution.
 
 pub mod batcher;
+pub mod pool;
 pub mod router;
 pub mod serve;
 pub mod trace;
 
 pub use batcher::{Batch, Batcher};
+pub use pool::PooledCoordinator;
 pub use router::Router;
 pub use serve::{FaultPolicy, ServeReport, ServeRequest, ServingCoordinator, TaskReport};
 pub use trace::{run_trace, TraceLog, TracePoint};

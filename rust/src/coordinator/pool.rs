@@ -1,0 +1,1186 @@
+//! Per-engine worker pool: truly concurrent multi-DNN serving across
+//! heterogeneous processors.
+//!
+//! [`ServingCoordinator`](super::serve::ServingCoordinator) interleaves
+//! every task on one engine-owning thread, so a CPU-routed and a
+//! GPU-routed model never overlap and one route's retry backoff stalls
+//! all serving. [`PooledCoordinator`] replaces that loop with one OS
+//! thread per device engine in the solution's switching policy — each
+//! worker *constructs and owns its engine locally* (PJRT handles are not
+//! `Send`; only an engine factory crosses the spawn boundary) — and a
+//! dispatcher thread that admits requests, sheds hopeless deadlines and
+//! routes work into per-engine mpsc queues per the active design's
+//! task→engine mapping.
+//!
+//! # Division of labour
+//!
+//! * **Workers** run supervised execution: batching, retry with capped
+//!   backoff, per-request span/latency accounting — all against their
+//!   own [`Telemetry`] shard and [`TaskStats`] vector, then report
+//!   completions/failures upstream as [`Feedback`]. A backoff sleep on
+//!   one engine therefore delays only that engine's queue.
+//! * **The dispatcher** owns the cross-engine state no worker may touch
+//!   concurrently: the [`Monitor`], the [`RuntimeManager`], the router
+//!   and the fault/probe bookkeeping. Consecutive-failure counting,
+//!   fault raising and probe-driven healing consume the feedback stream,
+//!   so the supervision semantics match the single-loop coordinator
+//!   exactly — they just run off the execution path.
+//!
+//! # Switch fence
+//!
+//! A design switch broadcasts `Switch{design, epoch}` to every worker
+//! queue. Queues are FIFO, so all work dispatched before the switch
+//! drains through the old design first; each worker then flushes its
+//! partial batches, loads the new design's artifacts, rebuilds its
+//! batchers and acks the epoch. The dispatcher blocks until every
+//! worker acks (processing other feedback meanwhile), then repoints its
+//! router — no request ever executes against a half-updated routing
+//! table.
+//!
+//! # Report assembly
+//!
+//! At drain time worker shards merge:
+//! [`Telemetry::merge_shards`] re-sorts events on the shared epoch
+//! clock and folds counters/gauges/histograms;
+//! [`TaskStats::merge_from`] reduces the per-task taxonomy. Per-engine
+//! `carin_engine_{queue_depth,queue_depth_peak,busy_ms,jobs_total}`
+//! series (labelled `{engine="CPU"}` etc.) make contention between
+//! co-located models observable in the Prometheus snapshot.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::batcher::{Batch, Batcher, Request as BatchRequest};
+use crate::coordinator::router::Router;
+use crate::coordinator::serve::{
+    build_batchers_for, vec_sample, FaultPolicy, ServeReport, ServeRequest, TaskReport,
+    TaskStats,
+};
+use crate::device::Engine;
+use crate::manager::{Monitor, RuntimeManager};
+use crate::moo::Solution;
+use crate::runtime::engine::{random_input, Tensor};
+use crate::runtime::faults::{FaultStats, Inference};
+use crate::runtime::ArtifactMeta;
+use crate::telemetry::{EventKind, Span, Telemetry};
+use crate::util::{Backoff, Summary};
+use crate::zoo::Registry;
+
+/// Work sent down a per-engine queue. FIFO ordering is what makes the
+/// switch fence correct: every `Exec` sent before a `Switch` executes
+/// under the old design.
+enum WorkerMsg {
+    Exec {
+        task: usize,
+        id: u64,
+        submitted: Instant,
+        admitted: Instant,
+        deadline: Option<Instant>,
+        /// Manifest index of the artifact serving `task` under the
+        /// design active at dispatch time.
+        meta_idx: usize,
+        seed: u64,
+    },
+    /// Off-path health probe of a faulted route.
+    Probe { stem: String, seed: u64 },
+    /// Fence: flush, rebuild for `design`, then ack `epoch`.
+    Switch { design: usize, epoch: u64 },
+}
+
+/// Worker → dispatcher feedback. Everything the cross-engine
+/// supervision state needs, nothing more.
+enum Feedback {
+    /// Engine constructed and preload finished (or failed).
+    Ready { result: std::result::Result<(), String> },
+    /// A request completed; `exec_ms` feeds the shed estimator.
+    Done { task: usize, exec_ms: f64 },
+    /// A request exhausted its retries.
+    Failed { task: usize },
+    ProbeResult { engine: Engine, ok: bool },
+    SwitchAck { epoch: u64 },
+}
+
+/// Everything a worker needs to know about its engine's routes, for
+/// every design, computed before the pool spawns.
+struct WorkerPlan {
+    engine: Engine,
+    /// Union of this engine's manifest indices across designs (sorted,
+    /// deduped) — the worker-local preload set.
+    preload: Vec<usize>,
+    /// `per_design[d]` = the `(task, manifest index)` routes this
+    /// engine serves under design `d`.
+    per_design: Vec<Vec<(usize, usize)>>,
+}
+
+/// What a worker thread hands back at join time. Deliberately engine-
+/// free so it is `Send` even though the engine itself is not.
+struct WorkerOutcome {
+    stats: Vec<TaskStats>,
+    tel: Telemetry,
+    /// Injector counters when the executor is a
+    /// [`crate::runtime::FaultInjector`] (the engine itself cannot
+    /// leave its thread, so its stats are extracted before drop).
+    fault_stats: Option<FaultStats>,
+}
+
+/// Health-probe bookkeeping for one faulted route (dispatcher side).
+struct ProbeState {
+    stem: String,
+    ok: usize,
+}
+
+/// The pooled serving coordinator. `F` is the engine factory, called
+/// once *inside* each worker thread — the only engine-related value
+/// that crosses the spawn boundary.
+pub struct PooledCoordinator<F> {
+    factory: F,
+    router: Router,
+    manifest: Vec<ArtifactMeta>,
+    n_tasks: usize,
+    slo_ms: Option<f64>,
+    policy: FaultPolicy,
+    monitor: Monitor,
+    rm: RuntimeManager,
+    tel: Telemetry,
+    /// Shared timestamp origin for the dispatcher and every worker
+    /// shard, so merged event times are directly comparable.
+    epoch: Instant,
+    /// Aggregated injector counters from the last run's workers.
+    engine_fault_stats: Option<FaultStats>,
+}
+
+impl<F> PooledCoordinator<F> {
+    /// Build the pool coordinator. Unlike
+    /// [`super::serve::ServingCoordinator::new`] nothing is loaded
+    /// here: each worker constructs its engine and preloads its own
+    /// route set when [`PooledCoordinator::serve`] spawns it.
+    pub fn new(
+        factory: F,
+        reg: &Registry,
+        solution: &Solution,
+        manifest: Vec<ArtifactMeta>,
+    ) -> Result<PooledCoordinator<F>> {
+        let policy = FaultPolicy::default();
+        let router = Router::new(reg, solution, &manifest)?;
+        let n_tasks = solution.designs[0].config.assignments.len();
+        let monitor = Monitor::new(solution.policy.engines.clone(), policy.hysteresis_hold);
+        let rm = RuntimeManager::new(solution.clone());
+        let epoch = Instant::now();
+        let mut coord = PooledCoordinator {
+            factory,
+            router,
+            manifest,
+            n_tasks,
+            slo_ms: None,
+            policy,
+            monitor,
+            rm,
+            tel: Telemetry::with_epoch(crate::telemetry::DEFAULT_EVENT_CAPACITY, epoch),
+            epoch,
+            engine_fault_stats: None,
+        };
+        let d0 = coord.rm.current_design();
+        coord.router.set_design(d0);
+        coord.tel.registry.set_gauge("carin_current_design", d0 as f64);
+        Ok(coord)
+    }
+
+    /// Track executions against a latency SLO (ms); misses are reported
+    /// per task.
+    pub fn set_latency_slo(&mut self, slo_ms: f64) {
+        self.slo_ms = Some(slo_ms);
+    }
+
+    /// Replace the supervision knobs. Resets the monitor — call between
+    /// runs, not mid-serve.
+    pub fn set_fault_policy(&mut self, policy: FaultPolicy) {
+        self.monitor = Monitor::new(
+            self.rm.solution.policy.engines.clone(),
+            policy.hysteresis_hold,
+        );
+        self.policy = policy;
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.n_tasks
+    }
+
+    pub fn current_design(&self) -> usize {
+        self.router.design()
+    }
+
+    pub fn runtime_manager(&self) -> &RuntimeManager {
+        &self.rm
+    }
+
+    /// The merged telemetry bundle of the last [`PooledCoordinator::serve`] run
+    /// (dispatcher shard + every worker shard).
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.tel
+    }
+
+    pub fn telemetry_mut(&mut self) -> &mut Telemetry {
+        &mut self.tel
+    }
+
+    /// Aggregated [`crate::runtime::FaultInjector`] counters across the
+    /// last run's workers, when the factory builds injecting executors.
+    pub fn fault_stats(&self) -> Option<&FaultStats> {
+        self.engine_fault_stats.as_ref()
+    }
+
+    /// One [`WorkerPlan`] per engine in the switching policy.
+    fn worker_plans(&self) -> Vec<WorkerPlan> {
+        let n_designs = self.router.n_designs();
+        self.rm
+            .solution
+            .policy
+            .engines
+            .iter()
+            .map(|&engine| {
+                let mut preload = Vec::new();
+                let mut per_design = Vec::with_capacity(n_designs);
+                for d in 0..n_designs {
+                    let mut routes = Vec::new();
+                    for t in 0..self.n_tasks {
+                        let e = self.rm.solution.designs[d].config.assignments[t]
+                            .proc
+                            .engine();
+                        if e == engine {
+                            let idx = self.router.route_index_for(d, t);
+                            routes.push((t, idx));
+                            preload.push(idx);
+                        }
+                    }
+                    per_design.push(routes);
+                }
+                preload.sort_unstable();
+                preload.dedup();
+                WorkerPlan { engine, preload, per_design }
+            })
+            .collect()
+    }
+
+    /// Serve a finite workload through the pool: spawn one worker per
+    /// policy engine, dispatch until every producer hangs up, then
+    /// drain, join and merge the shards. Engine faults never abort the
+    /// run — they are retried in-worker, shed around, or routed away
+    /// from exactly as in the single-loop coordinator.
+    pub fn serve<E>(&mut self, rx: mpsc::Receiver<ServeRequest>) -> Result<ServeReport>
+    where
+        E: Inference,
+        F: Fn(Engine) -> Result<E> + Sync,
+    {
+        let t0 = Instant::now();
+        let plans = self.worker_plans();
+        let slo_ms = self.slo_ms;
+        let n_tasks = self.n_tasks;
+        let epoch = self.epoch;
+        let policy = self.policy.clone();
+        self.tel.reset_window();
+        let switches_before = self.rm.switches.len();
+
+        let PooledCoordinator {
+            ref factory,
+            ref manifest,
+            ref mut router,
+            ref mut monitor,
+            ref mut rm,
+            ref mut tel,
+            ref mut engine_fault_stats,
+            ..
+        } = *self;
+        let manifest: &[ArtifactMeta] = manifest;
+        let policy_ref = &policy;
+
+        let engines: Vec<Engine> = plans.iter().map(|p| p.engine).collect();
+        let n_workers = engines.len();
+        let engine_worker: HashMap<Engine, usize> =
+            engines.iter().enumerate().map(|(w, &e)| (e, w)).collect();
+        // task → engine per design, so routing needs no RM access on
+        // the dispatch path
+        let assign_engine: Vec<Vec<Engine>> = (0..router.n_designs())
+            .map(|d| {
+                (0..n_tasks)
+                    .map(|t| rm.solution.designs[d].config.assignments[t].proc.engine())
+                    .collect()
+            })
+            .collect();
+        let d0 = router.design();
+
+        let depths: Vec<AtomicUsize> = (0..n_workers).map(|_| AtomicUsize::new(0)).collect();
+        let (fb_tx, fb_rx) = mpsc::channel::<Feedback>();
+        let mut txs = Vec::with_capacity(n_workers);
+        let mut work_rxs = Vec::with_capacity(n_workers);
+        for _ in 0..n_workers {
+            let (tx, wrx) = mpsc::channel::<WorkerMsg>();
+            txs.push(tx);
+            work_rxs.push(wrx);
+        }
+
+        let mut disp = Dispatcher {
+            monitor,
+            rm,
+            router,
+            tel,
+            policy: policy_ref,
+            manifest,
+            engine_worker,
+            assign_engine,
+            txs,
+            fb_rx,
+            depths: &depths,
+            peak: vec![0; n_workers],
+            exec_est: vec![(0.0, 0); n_tasks],
+            consecutive: vec![0; n_tasks],
+            faulted: HashMap::new(),
+            since_probe: 0,
+            epoch_ctr: 0,
+            shed: vec![0; n_tasks],
+            seed: 0,
+            t0,
+        };
+
+        let outcomes = std::thread::scope(|s| -> Result<Vec<WorkerOutcome>> {
+            let mut handles = Vec::with_capacity(n_workers);
+            for (w, (plan, wrx)) in plans.into_iter().zip(work_rxs).enumerate() {
+                let fb = fb_tx.clone();
+                let depth = &depths[w];
+                handles.push(s.spawn(move || {
+                    run_worker(plan, d0, factory, manifest, policy_ref, depth, epoch, n_tasks, wrx, fb)
+                }));
+            }
+            // the dispatcher's copy must go, or fb_rx never disconnects
+            drop(fb_tx);
+
+            if let Err(e) = disp.wait_ready(n_workers) {
+                // unblock the workers before joining, or the scope
+                // deadlocks on threads stuck in recv()
+                disp.shutdown();
+                for h in handles {
+                    let _ = h.join();
+                }
+                return Err(e);
+            }
+
+            for req in rx.iter() {
+                disp.admit(req);
+            }
+
+            disp.shutdown();
+            let mut outcomes = Vec::with_capacity(n_workers);
+            for h in handles {
+                match h.join() {
+                    Ok(o) => outcomes.push(o),
+                    Err(_) => return Err(anyhow!("worker thread panicked")),
+                }
+            }
+            // absorb feedback raced with the drain (late Done/Failed)
+            disp.drain_feedback();
+            Ok(outcomes)
+        })?;
+
+        // reclaim the coordinator state the dispatcher borrowed
+        let Dispatcher { router, rm, tel, peak, shed, .. } = disp;
+
+        let mut stats: Vec<TaskStats> = (0..n_tasks).map(|_| TaskStats::default()).collect();
+        let mut agg_faults: Option<FaultStats> = None;
+        let mut shards: Vec<Telemetry> = Vec::with_capacity(n_workers + 1);
+        // the dispatcher's shard leads so its admit/shed/supervision
+        // events and counters join the same merge
+        shards.push(std::mem::replace(tel, Telemetry::with_epoch(1, epoch)));
+        for o in outcomes {
+            for (t, s) in o.stats.iter().enumerate() {
+                stats[t].merge_from(s);
+            }
+            if let Some(fs) = &o.fault_stats {
+                agg_faults.get_or_insert_with(FaultStats::default).absorb(fs);
+            }
+            shards.push(o.tel);
+        }
+        for (t, s) in shed.iter().enumerate() {
+            stats[t].shed += *s;
+        }
+        let mut merged = Telemetry::merge_shards(epoch, shards);
+        for (w, e) in engines.iter().enumerate() {
+            let name = e.name();
+            merged.registry.set_gauge(
+                &format!("carin_engine_queue_depth{{engine=\"{name}\"}}"),
+                depths[w].load(Ordering::Relaxed) as f64,
+            );
+            merged.registry.set_gauge(
+                &format!("carin_engine_queue_depth_peak{{engine=\"{name}\"}}"),
+                peak[w] as f64,
+            );
+        }
+
+        let wall_s = t0.elapsed().as_secs_f64();
+        let window_s = merged.window_s().unwrap_or(wall_s).max(1e-9);
+        if let Some((a, b)) = merged.window_ns() {
+            merged.registry.set_gauge("carin_window_start_s", a as f64 / 1e9);
+            merged.registry.set_gauge("carin_window_end_s", b as f64 / 1e9);
+        }
+        merged.registry.set_gauge("carin_window_s", window_s);
+        *tel = merged;
+        *engine_fault_stats = agg_faults;
+
+        let total: usize = stats.iter().map(|s| s.completed).sum();
+        let met: usize = stats.iter().map(|s| s.deadline_met).sum();
+        let switches = &rm.switches[switches_before..];
+        let fallback_switches = switches.iter().filter(|s| !s.state.is_calm()).count();
+        let recovered_switches = switches.iter().filter(|s| s.state.is_calm()).count();
+        let tasks = (0..n_tasks)
+            .map(|t| {
+                let st = &stats[t];
+                TaskReport {
+                    task: t,
+                    artifact: manifest[router.route_index(t)].stem.clone(),
+                    completed: st.completed,
+                    retried: st.retried,
+                    failed: st.failed,
+                    shed: st.shed,
+                    deadline_met: st.deadline_met,
+                    slo_misses: match slo_ms {
+                        Some(slo) => st.lat.iter().filter(|&&x| x > slo).count(),
+                        None => 0,
+                    },
+                    latency_ms: Summary::of_or_empty(&st.lat),
+                    e2e_ms: Summary::of_or_empty(&st.e2e),
+                }
+            })
+            .collect();
+        Ok(ServeReport {
+            tasks,
+            wall_s,
+            window_s,
+            total_requests: total,
+            throughput_rps: total as f64 / window_s,
+            goodput_rps: met as f64 / window_s,
+            retried: stats.iter().map(|s| s.retried).sum(),
+            failed: stats.iter().map(|s| s.failed).sum(),
+            shed: stats.iter().map(|s| s.shed).sum(),
+            fallback_switches,
+            recovered_switches,
+        })
+    }
+}
+
+/// The dispatcher's working state: everything cross-engine, borrowed
+/// from the coordinator for the duration of one `serve` run.
+struct Dispatcher<'a> {
+    monitor: &'a mut Monitor,
+    rm: &'a mut RuntimeManager,
+    router: &'a mut Router,
+    tel: &'a mut Telemetry,
+    policy: &'a FaultPolicy,
+    manifest: &'a [ArtifactMeta],
+    engine_worker: HashMap<Engine, usize>,
+    /// `assign_engine[design][task]` — the engine serving a task.
+    assign_engine: Vec<Vec<Engine>>,
+    txs: Vec<mpsc::Sender<WorkerMsg>>,
+    fb_rx: mpsc::Receiver<Feedback>,
+    depths: &'a [AtomicUsize],
+    peak: Vec<usize>,
+    /// Running (sum, count) of per-task exec latency for shedding.
+    exec_est: Vec<(f64, u64)>,
+    /// Consecutive exhausted-retry failures per task.
+    consecutive: Vec<usize>,
+    faulted: HashMap<Engine, ProbeState>,
+    since_probe: usize,
+    epoch_ctr: u64,
+    shed: Vec<usize>,
+    seed: u64,
+    t0: Instant,
+}
+
+impl Dispatcher<'_> {
+    /// Block until every worker reports its engine built and preloaded.
+    fn wait_ready(&mut self, n_workers: usize) -> Result<()> {
+        let mut first_err: Option<String> = None;
+        let mut ready = 0usize;
+        while ready < n_workers {
+            match self.fb_rx.recv() {
+                Ok(Feedback::Ready { result }) => {
+                    ready += 1;
+                    if let Err(e) = result {
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                    }
+                }
+                Ok(other) => self.handle_feedback(other),
+                Err(_) => return Err(anyhow!("worker pool hung up during startup")),
+            }
+        }
+        match first_err {
+            Some(e) => Err(anyhow!("worker preload failed: {e}")),
+            None => Ok(()),
+        }
+    }
+
+    /// Admit one request: record it, run the supervision tick, shed if
+    /// its deadline is unreachable, else route it to its engine's queue.
+    fn admit(&mut self, req: ServeRequest) {
+        self.seed += 1;
+        let admitted_at = Instant::now();
+        self.tel.note_admit();
+        self.tel
+            .recorder
+            .record(EventKind::Admitted { task: req.task as u32, id: req.id });
+        self.tel.registry.inc("carin_requests_admitted_total");
+
+        self.drain_feedback();
+        self.observe_and_maybe_switch();
+        self.maybe_probe();
+
+        let t = req.task;
+        if let Some(dl) = req.deadline {
+            let (sum, cnt) = self.exec_est[t];
+            let est_ms = if cnt == 0 { 0.0 } else { sum / cnt as f64 };
+            let est = Duration::from_secs_f64(est_ms / 1000.0);
+            if dl.saturating_duration_since(Instant::now()) < est {
+                self.shed[t] += 1;
+                self.tel.recorder.record(EventKind::Shed { task: t as u32, id: req.id });
+                self.tel.registry.inc("carin_requests_shed_total");
+                return;
+            }
+        }
+
+        let meta_idx = self.router.route_index(t);
+        let e = self.assign_engine[self.router.design()][t];
+        let w = self.engine_worker.get(&e).copied().unwrap_or(0);
+        let depth = self.depths[w].fetch_add(1, Ordering::Relaxed) + 1;
+        if depth > self.peak[w] {
+            self.peak[w] = depth;
+        }
+        let _ = self.txs[w].send(WorkerMsg::Exec {
+            task: t,
+            id: req.id,
+            submitted: req.submitted,
+            admitted: admitted_at,
+            deadline: req.deadline,
+            meta_idx,
+            seed: self.seed,
+        });
+    }
+
+    /// Absorb every queued feedback message without blocking.
+    fn drain_feedback(&mut self) {
+        loop {
+            let fb = match self.fb_rx.try_recv() {
+                Ok(fb) => fb,
+                Err(_) => break,
+            };
+            self.handle_feedback(fb);
+        }
+    }
+
+    fn handle_feedback(&mut self, fb: Feedback) {
+        match fb {
+            Feedback::Done { task, exec_ms } => {
+                self.consecutive[task] = 0;
+                let (sum, cnt) = &mut self.exec_est[task];
+                *sum += exec_ms;
+                *cnt += 1;
+            }
+            Feedback::Failed { task } => {
+                self.consecutive[task] += 1;
+                if self.consecutive[task] >= self.policy.fault_threshold {
+                    let e = self.assign_engine[self.router.design()][task];
+                    let stem = self.manifest[self.router.route_index(task)].stem.clone();
+                    self.monitor.report_fault(e, true);
+                    if !self.faulted.contains_key(&e) {
+                        crate::log_warn!(
+                            "fault raised on {} after {} consecutive failures (task {task}, route {stem})",
+                            e.name(),
+                            self.consecutive[task]
+                        );
+                        self.faulted.insert(e, ProbeState { stem, ok: 0 });
+                        self.tel.recorder.record(EventKind::FaultRaised {
+                            engine: e.index() as u8,
+                            task: task as u32,
+                        });
+                        self.tel.registry.inc("carin_faults_raised_total");
+                    }
+                    self.tel
+                        .registry
+                        .set_gauge("carin_fault_raw_mask", self.monitor.raw_fault_mask() as f64);
+                }
+            }
+            Feedback::ProbeResult { engine, ok } => {
+                self.tel
+                    .recorder
+                    .record(EventKind::Probe { engine: engine.index() as u8, ok });
+                self.tel.registry.inc("carin_probes_total");
+                let mut healed = false;
+                if let Some(p) = self.faulted.get_mut(&engine) {
+                    if ok {
+                        p.ok += 1;
+                        healed = p.ok >= self.policy.heal_threshold;
+                    } else {
+                        p.ok = 0;
+                    }
+                }
+                if healed {
+                    crate::log_info!(
+                        "fault cleared on {} after consecutive probe successes",
+                        engine.name()
+                    );
+                    self.monitor.report_fault(engine, false);
+                    self.faulted.remove(&engine);
+                    self.tel
+                        .recorder
+                        .record(EventKind::FaultCleared { engine: engine.index() as u8 });
+                    self.tel.registry.inc("carin_faults_cleared_total");
+                    self.tel
+                        .registry
+                        .set_gauge("carin_fault_raw_mask", self.monitor.raw_fault_mask() as f64);
+                }
+            }
+            // Ready outside startup and stale acks carry no state
+            Feedback::Ready { .. } | Feedback::SwitchAck { .. } => {}
+        }
+    }
+
+    /// Advance the monitor; on an RM decision run the epoch fence.
+    fn observe_and_maybe_switch(&mut self) {
+        let state = self.monitor.tick();
+        if let Some(d) = self.rm.observe(state, self.t0.elapsed().as_secs_f64()) {
+            if let Some(rec) = self.rm.switches.last() {
+                let fallback = !rec.state.is_calm();
+                crate::log_info!(
+                    "{} switch d[{}] -> d[{}] (bad_mask {:#04b}, {} ns decision)",
+                    if fallback { "fallback" } else { "recovery" },
+                    rec.from,
+                    rec.to,
+                    rec.bad_mask,
+                    rec.decision_ns
+                );
+                self.tel.recorder.record(EventKind::Switch {
+                    from: rec.from as u32,
+                    to: rec.to as u32,
+                    troubled: rec.state.troubled,
+                    faulted: rec.state.faulted,
+                    memory: rec.state.memory,
+                    bad_mask: rec.bad_mask,
+                    decision_ns: rec.decision_ns as u64,
+                    fallback,
+                });
+                let name = if fallback {
+                    "carin_switches_fallback_total"
+                } else {
+                    "carin_switches_recovery_total"
+                };
+                let decision_ns = rec.decision_ns as f64;
+                self.tel.registry.inc(name);
+                self.tel.registry.observe("carin_switch_decision_ns", decision_ns);
+            }
+            self.fence_switch(d);
+        }
+    }
+
+    /// The coordinated switch epoch: broadcast, collect every worker's
+    /// ack (handling interleaved feedback), then repoint the router.
+    fn fence_switch(&mut self, design: usize) {
+        self.epoch_ctr += 1;
+        let ep = self.epoch_ctr;
+        for tx in &self.txs {
+            let _ = tx.send(WorkerMsg::Switch { design, epoch: ep });
+        }
+        let mut acked = 0usize;
+        while acked < self.txs.len() {
+            let fb = match self.fb_rx.recv() {
+                Ok(fb) => fb,
+                // a vanished worker cannot ack; give up on the fence
+                // rather than hang (its queue is gone anyway)
+                Err(_) => break,
+            };
+            match fb {
+                Feedback::SwitchAck { epoch } if epoch == ep => acked += 1,
+                other => self.handle_feedback(other),
+            }
+        }
+        self.router.set_design(design);
+        self.tel.registry.set_gauge("carin_current_design", design as f64);
+    }
+
+    /// Every `probe_interval` admissions, ask each faulted engine's
+    /// worker to health-probe its failing route. The result arrives as
+    /// feedback; healing happens when it is processed.
+    fn maybe_probe(&mut self) {
+        self.since_probe += 1;
+        if self.faulted.is_empty() || self.since_probe < self.policy.probe_interval {
+            return;
+        }
+        self.since_probe = 0;
+        for (e, p) in &self.faulted {
+            if let Some(&w) = self.engine_worker.get(e) {
+                let _ = self.txs[w].send(WorkerMsg::Probe {
+                    stem: p.stem.clone(),
+                    seed: self.seed,
+                });
+            }
+        }
+    }
+
+    /// Drop every work queue: workers drain what is already queued,
+    /// flush pending batches and exit.
+    fn shutdown(&mut self) {
+        self.txs.clear();
+    }
+}
+
+/// Worker thread body: build the engine locally, preload this engine's
+/// route set, then serve the queue until the dispatcher hangs up.
+#[allow(clippy::too_many_arguments)]
+fn run_worker<E, F>(
+    plan: WorkerPlan,
+    start_design: usize,
+    factory: &F,
+    manifest: &[ArtifactMeta],
+    policy: &FaultPolicy,
+    depth: &AtomicUsize,
+    epoch: Instant,
+    n_tasks: usize,
+    rx: mpsc::Receiver<WorkerMsg>,
+    fb: mpsc::Sender<Feedback>,
+) -> WorkerOutcome
+where
+    E: Inference,
+    F: Fn(Engine) -> Result<E>,
+{
+    let engine_id = plan.engine;
+    let tel = Telemetry::with_epoch(crate::telemetry::DEFAULT_EVENT_CAPACITY, epoch);
+    let stats: Vec<TaskStats> = (0..n_tasks).map(|_| TaskStats::default()).collect();
+    let mut engine = match factory(engine_id) {
+        Ok(e) => e,
+        Err(e) => {
+            let _ = fb.send(Feedback::Ready { result: Err(e.to_string()) });
+            return WorkerOutcome { stats, tel, fault_stats: None };
+        }
+    };
+    let mut preload_err: Option<String> = None;
+    for &idx in &plan.preload {
+        if let Err(e) = supervised_load(&mut engine, &manifest[idx], policy) {
+            preload_err = Some(format!("{}: {e}", manifest[idx].stem));
+            break;
+        }
+    }
+    let _ = fb.send(Feedback::Ready {
+        result: match &preload_err {
+            Some(e) => Err(e.clone()),
+            None => Ok(()),
+        },
+    });
+    if preload_err.is_some() {
+        let fault_stats = engine.fault_stats();
+        return WorkerOutcome { stats, tel, fault_stats };
+    }
+
+    let routes = plan.per_design[start_design].clone();
+    let batchers = build_batchers_for(manifest, &routes);
+    let mut worker = Worker {
+        engine,
+        engine_id,
+        plan,
+        design: start_design,
+        manifest,
+        policy,
+        batchers,
+        stats,
+        tel,
+        fb,
+        busy: Duration::ZERO,
+        jobs: 0,
+    };
+    worker.run(rx, depth);
+    worker.finish()
+}
+
+/// Retrying model load (shared by preload and switch reloads).
+fn supervised_load<E: Inference>(
+    engine: &mut E,
+    meta: &ArtifactMeta,
+    policy: &FaultPolicy,
+) -> Result<()> {
+    let mut backoff = Backoff::new(policy.backoff_base, policy.backoff_cap);
+    let mut attempt = 0usize;
+    loop {
+        attempt += 1;
+        match engine.load(meta) {
+            Ok(()) => return Ok(()),
+            Err(e) => {
+                if attempt >= policy.max_attempts {
+                    return Err(e);
+                }
+                std::thread::sleep(backoff.next_delay());
+            }
+        }
+    }
+}
+
+/// One engine-owning worker: the single-loop execution semantics
+/// (batching, supervision, span accounting), scoped to one engine's
+/// queue and recording into its own telemetry shard.
+struct Worker<'a, E: Inference> {
+    engine: E,
+    engine_id: Engine,
+    plan: WorkerPlan,
+    design: usize,
+    manifest: &'a [ArtifactMeta],
+    policy: &'a FaultPolicy,
+    batchers: HashMap<usize, Batcher>,
+    stats: Vec<TaskStats>,
+    tel: Telemetry,
+    fb: mpsc::Sender<Feedback>,
+    /// Wall time spent executing (engine calls incl. retries/backoff).
+    busy: Duration,
+    jobs: u64,
+}
+
+impl<E: Inference> Worker<'_, E> {
+    fn run(&mut self, rx: mpsc::Receiver<WorkerMsg>, depth: &AtomicUsize) {
+        loop {
+            // with a partial batch pending, poll so its 5 ms batching
+            // deadline can fire even if the queue goes quiet
+            let has_pending = self.batchers.values().any(|b| b.pending() > 0);
+            let msg = if has_pending {
+                match rx.recv_timeout(Duration::from_millis(1)) {
+                    Ok(m) => m,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        self.flush_due();
+                        continue;
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            } else {
+                match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => break,
+                }
+            };
+            match msg {
+                WorkerMsg::Exec { task, id, submitted, admitted, deadline, meta_idx, seed } => {
+                    depth.fetch_sub(1, Ordering::Relaxed);
+                    self.flush_due();
+                    let t_busy = Instant::now();
+                    self.handle_exec(task, id, submitted, admitted, deadline, meta_idx, seed);
+                    self.busy += t_busy.elapsed();
+                    self.jobs += 1;
+                }
+                WorkerMsg::Probe { stem, seed } => {
+                    let ok = match self
+                        .manifest
+                        .iter()
+                        .find(|m| m.stem == stem)
+                        .map(|m| random_input(m, seed))
+                    {
+                        Some(input) => self.engine.infer(&stem, &input).is_ok(),
+                        None => false,
+                    };
+                    let _ = self.fb.send(Feedback::ProbeResult { engine: self.engine_id, ok });
+                }
+                WorkerMsg::Switch { design, epoch } => {
+                    self.apply_switch(design);
+                    let _ = self.fb.send(Feedback::SwitchAck { epoch });
+                }
+            }
+        }
+        // queue closed: drain partial batches through current routes
+        self.flush_pending();
+    }
+
+    /// Seal the shard: per-engine busy/jobs series, then hand back the
+    /// `Send` parts (the engine drops here, on its owning thread).
+    fn finish(self) -> WorkerOutcome {
+        let Worker { engine, engine_id, mut tel, stats, busy, jobs, .. } = self;
+        let name = engine_id.name();
+        tel.registry.set_gauge(
+            &format!("carin_engine_busy_ms{{engine=\"{name}\"}}"),
+            busy.as_secs_f64() * 1000.0,
+        );
+        tel.registry
+            .add(&format!("carin_engine_jobs_total{{engine=\"{name}\"}}"), jobs);
+        let fault_stats = engine.fault_stats();
+        WorkerOutcome { stats, tel, fault_stats }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn handle_exec(
+        &mut self,
+        t: usize,
+        id: u64,
+        submitted: Instant,
+        admitted: Instant,
+        deadline: Option<Instant>,
+        meta_idx: usize,
+        seed: u64,
+    ) {
+        let stem = self.manifest[meta_idx].stem.clone();
+        if self.batchers.contains_key(&t) {
+            let sample_len = {
+                let meta = &self.manifest[meta_idx];
+                meta.input.numel() / meta.input.shape[0]
+            };
+            self.tel.recorder.record(EventKind::Batched { task: t as u32, id });
+            let maybe = self.batchers.get_mut(&t).unwrap().push(BatchRequest {
+                id,
+                payload: vec_sample(sample_len, seed),
+                enqueued: submitted,
+                admitted,
+                deadline,
+            });
+            if let Some(batch) = maybe {
+                self.execute_batch(t, &stem, batch);
+            }
+        } else {
+            let input = random_input(&self.manifest[meta_idx], seed);
+            self.execute_one(t, &stem, &input, id, submitted, admitted, deadline);
+        }
+    }
+
+    /// One supervised engine call with capped exponential backoff — the
+    /// sleep only ever delays this worker's queue.
+    fn supervised_infer(&mut self, t: usize, stem: &str, input: &Tensor) -> Result<f64> {
+        let mut backoff = Backoff::new(self.policy.backoff_base, self.policy.backoff_cap);
+        let mut attempt = 0usize;
+        loop {
+            attempt += 1;
+            let te = Instant::now();
+            match self.engine.infer(stem, input) {
+                Ok(_) => {
+                    if attempt > 1 {
+                        self.stats[t].retried += 1;
+                        self.tel.recorder.record(EventKind::Retried {
+                            task: t as u32,
+                            attempts: attempt as u32,
+                        });
+                        self.tel.registry.inc("carin_requests_retried_total");
+                    }
+                    return Ok(te.elapsed().as_secs_f64() * 1000.0);
+                }
+                Err(e) => {
+                    if attempt >= self.policy.max_attempts {
+                        return Err(e);
+                    }
+                    std::thread::sleep(backoff.next_delay());
+                }
+            }
+        }
+    }
+
+    /// Shard bookkeeping for one completed request (see
+    /// [`super::serve::ServingCoordinator`] for the span semantics).
+    fn note_completion(&mut self, span: &Span, exec_ms: f64, met: bool) {
+        span.record(&mut self.tel.recorder, met);
+        self.tel.note_done();
+        let r = &mut self.tel.registry;
+        r.inc("carin_requests_completed_total");
+        if met {
+            r.inc("carin_requests_deadline_met_total");
+        }
+        r.observe("carin_exec_latency_ms", exec_ms);
+        r.observe("carin_e2e_latency_ms", span.total_ms());
+        r.observe("carin_queue_latency_ms", span.queue_ms());
+        r.observe("carin_batch_wait_ms", span.batch_ms());
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn execute_one(
+        &mut self,
+        t: usize,
+        stem: &str,
+        input: &Tensor,
+        id: u64,
+        submitted: Instant,
+        admitted: Instant,
+        deadline: Option<Instant>,
+    ) {
+        let dispatched = Instant::now();
+        self.tel.recorder.record(EventKind::Dispatched { task: t as u32, occupancy: 1 });
+        self.tel.registry.inc("carin_engine_dispatch_total");
+        match self.supervised_infer(t, stem, input) {
+            Ok(exec_ms) => {
+                let done = Instant::now();
+                let met = match deadline {
+                    Some(dl) => done <= dl,
+                    None => true,
+                };
+                {
+                    let st = &mut self.stats[t];
+                    st.lat.push(exec_ms);
+                    st.exec_sum_ms += exec_ms;
+                    st.e2e.push(done.duration_since(submitted).as_secs_f64() * 1000.0);
+                    st.completed += 1;
+                    if met {
+                        st.deadline_met += 1;
+                    }
+                }
+                let span = Span { task: t, id, submitted, admitted, dispatched, completed: done };
+                self.note_completion(&span, exec_ms, met);
+                let _ = self.fb.send(Feedback::Done { task: t, exec_ms });
+            }
+            Err(_) => {
+                self.stats[t].failed += 1;
+                self.tel.recorder.record(EventKind::Failed { task: t as u32, id });
+                self.tel.registry.inc("carin_requests_failed_total");
+                let _ = self.fb.send(Feedback::Failed { task: t });
+            }
+        }
+    }
+
+    fn execute_batch(&mut self, t: usize, stem: &str, batch: Batch) {
+        let Batch { ids, payload, occupancy, enqueued, admitted, deadlines } = batch;
+        let input = Tensor::F32(payload);
+        let dispatched = Instant::now();
+        self.tel
+            .recorder
+            .record(EventKind::Dispatched { task: t as u32, occupancy: occupancy as u32 });
+        self.tel.registry.inc("carin_engine_dispatch_total");
+        match self.supervised_infer(t, stem, &input) {
+            Ok(exec_ms) => {
+                let done = Instant::now();
+                for i in 0..occupancy {
+                    let met = match deadlines[i] {
+                        Some(dl) => done <= dl,
+                        None => true,
+                    };
+                    {
+                        let st = &mut self.stats[t];
+                        st.lat.push(exec_ms);
+                        st.exec_sum_ms += exec_ms;
+                        st.e2e.push(done.duration_since(enqueued[i]).as_secs_f64() * 1000.0);
+                        st.completed += 1;
+                        if met {
+                            st.deadline_met += 1;
+                        }
+                    }
+                    let span = Span {
+                        task: t,
+                        id: ids[i],
+                        submitted: enqueued[i],
+                        admitted: admitted[i],
+                        dispatched,
+                        completed: done,
+                    };
+                    self.note_completion(&span, exec_ms, met);
+                }
+                let _ = self.fb.send(Feedback::Done { task: t, exec_ms });
+            }
+            Err(_) => {
+                self.stats[t].failed += occupancy;
+                for &id in ids.iter().take(occupancy) {
+                    self.tel.recorder.record(EventKind::Failed { task: t as u32, id });
+                    self.tel.registry.inc("carin_requests_failed_total");
+                }
+                // one fault-accounting signal per exhausted engine call,
+                // matching the single loop's note_failure semantics
+                let _ = self.fb.send(Feedback::Failed { task: t });
+            }
+        }
+    }
+
+    /// Fence arrival: flush through the old routes, adopt the design,
+    /// make its artifacts resident and rebuild the batchers.
+    fn apply_switch(&mut self, design: usize) {
+        self.flush_pending();
+        self.design = design;
+        let routes = self.plan.per_design[design].clone();
+        for &(_, idx) in &routes {
+            if !self.engine.is_loaded(&self.manifest[idx].stem) {
+                // a failed load leaves the route cold: its requests fail
+                // supervision and re-raise the fault signal, so the
+                // policy moves on rather than this worker dying
+                let _ = supervised_load(&mut self.engine, &self.manifest[idx], self.policy);
+            }
+        }
+        self.batchers = build_batchers_for(self.manifest, &routes);
+    }
+
+    /// Stem routed for `t` under this worker's current design.
+    fn stem_of(&self, t: usize) -> Option<String> {
+        self.plan.per_design[self.design]
+            .iter()
+            .find(|&&(task, _)| task == t)
+            .map(|&(_, idx)| self.manifest[idx].stem.clone())
+    }
+
+    fn flush_due(&mut self) {
+        let now = Instant::now();
+        let tasks: Vec<usize> = self.batchers.keys().copied().collect();
+        for t in tasks {
+            let maybe = self.batchers.get_mut(&t).and_then(|b| b.flush_due(now));
+            if let Some(batch) = maybe {
+                if let Some(stem) = self.stem_of(t) {
+                    self.execute_batch(t, &stem, batch);
+                }
+            }
+        }
+    }
+
+    fn flush_pending(&mut self) {
+        let tasks: Vec<usize> = self.batchers.keys().copied().collect();
+        for t in tasks {
+            let maybe = self.batchers.get_mut(&t).and_then(|b| b.flush());
+            if let Some(batch) = maybe {
+                if let Some(stem) = self.stem_of(t) {
+                    self.execute_batch(t, &stem, batch);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::runtime::synthetic_manifest;
+
+    #[test]
+    fn worker_plans_partition_tasks_by_engine() {
+        let reg = Registry::paper();
+        let sol = config::pinned_uc3_solution(&reg);
+        let manifest = synthetic_manifest(&reg);
+        let factory = |_: Engine| -> Result<crate::runtime::StubEngine> {
+            Ok(crate::runtime::StubEngine::new())
+        };
+        let coord = PooledCoordinator::new(factory, &reg, &sol, manifest).unwrap();
+        let plans = coord.worker_plans();
+        assert_eq!(plans.len(), 2, "one worker per policy engine");
+        assert_eq!(plans[0].engine, Engine::Cpu);
+        assert_eq!(plans[1].engine, Engine::Gpu);
+        // the pinned solution has a single design: task 0 on CPU,
+        // task 1 on GPU — each plan carries exactly its own route
+        assert_eq!(plans[0].per_design.len(), 1);
+        assert_eq!(plans[0].per_design[0].len(), 1);
+        assert_eq!(plans[0].per_design[0][0].0, 0);
+        assert_eq!(plans[1].per_design[0].len(), 1);
+        assert_eq!(plans[1].per_design[0][0].0, 1);
+        // preload sets are disjoint and singleton
+        assert_eq!(plans[0].preload.len(), 1);
+        assert_eq!(plans[1].preload.len(), 1);
+        assert_ne!(plans[0].preload[0], plans[1].preload[0]);
+    }
+
+    #[test]
+    fn preload_failure_surfaces_as_error_not_hang() {
+        let reg = Registry::paper();
+        let sol = config::pinned_uc3_solution(&reg);
+        let manifest = synthetic_manifest(&reg);
+        let factory = |_: Engine| -> Result<crate::runtime::FaultInjector<crate::runtime::StubEngine>> {
+            let mut inj = crate::runtime::FaultInjector::new(crate::runtime::StubEngine::new(), 7);
+            inj.set_default(crate::runtime::FaultSpec::transient(0.0).with_load_failures(1.0));
+            Ok(inj)
+        };
+        let mut coord = PooledCoordinator::new(factory, &reg, &sol, manifest).unwrap();
+        let (tx, rx) = mpsc::channel();
+        drop(tx);
+        let err = coord.serve(rx).expect_err("persistent load failure must propagate");
+        assert!(err.to_string().contains("preload failed"), "{err}");
+    }
+}

@@ -66,6 +66,18 @@ impl Router {
         self.routes[self.current][task]
     }
 
+    /// Manifest index serving `task` under an arbitrary design — lets the
+    /// pooled dispatcher precompute every design's routing before workers
+    /// spawn, independent of the currently selected design.
+    pub fn route_index_for(&self, design: usize, task: usize) -> usize {
+        self.routes[design][task]
+    }
+
+    /// Number of designs the routing table covers.
+    pub fn n_designs(&self) -> usize {
+        self.routes.len()
+    }
+
     /// Every manifest index any design can route to (preload set) —
     /// CARIn's storage advantage (Table 10) is that *only* these are kept.
     pub fn preload_set(&self) -> Vec<usize> {

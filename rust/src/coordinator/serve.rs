@@ -1,8 +1,50 @@
 //! Serving front-end over the inference engine: workload threads feed a
-//! request channel; the engine loop (PJRT types are not `Send`, so the
-//! engine lives on its owning thread) routes each request through the
-//! Runtime-Manager-selected design, batches where the model expects a
-//! batch, executes under supervision, and reports per-request latency.
+//! request channel; requests route through the Runtime-Manager-selected
+//! design, batch where the model expects a batch, execute under
+//! supervision, and report per-request latency.
+//!
+//! # Threading model
+//!
+//! Two coordinators share this machinery:
+//!
+//! * [`ServingCoordinator`] (this module) — the **single-loop** form:
+//!   one thread owns the engine (PJRT types are not `Send`, so the
+//!   engine lives on its owning thread) and serially interleaves every
+//!   task's requests. Simple, deterministic, and the baseline the
+//!   `parallel_serving` bench compares against — but a CPU-routed and a
+//!   GPU-routed model never truly overlap, and a retry backoff sleep
+//!   stalls the whole loop.
+//! * [`PooledCoordinator`](super::pool::PooledCoordinator) — the
+//!   **per-engine worker pool**: one OS thread per device engine, each
+//!   constructing and owning its engine locally, fed by per-engine mpsc
+//!   queues the dispatcher routes into per the active design's
+//!   task→engine mapping. Supervision, backoff and health probes run
+//!   *inside* each worker, so a backoff on one engine no longer delays
+//!   the others and multi-DNN wall-clock scales with the number of
+//!   healthy engines.
+//!
+//! # Switch epoch protocol (pooled path)
+//!
+//! A design switch must not let requests execute against a half-updated
+//! routing table. The pooled dispatcher turns each switch into an
+//! epoch: it broadcasts a `Switch{design, epoch}` message down every
+//! worker queue (FIFO — all work dispatched before the switch drains
+//! through the old design first), then blocks dispatching until every
+//! worker acknowledges the epoch. On receipt each worker flushes its
+//! pending partial batches through the old routes, loads the new
+//! design's artifacts, rebuilds its batchers and acks. Only then does
+//! the dispatcher repoint its router and resume — the same
+//! flush→repoint→reload→rebatch sequence [`ServingCoordinator`] runs
+//! inline, made coordination-safe across threads.
+//!
+//! # Telemetry sharding (pooled path)
+//!
+//! Hot-path recording stays O(1) and allocation-free by giving every
+//! worker its own [`Telemetry`] shard sharing one epoch instant;
+//! [`crate::telemetry::Telemetry::merge_shards`] reduces them at report
+//! time (events re-sort by timestamp, counters add, histograms merge
+//! bucket-wise). `ServeReport` aggregation is likewise a reduction over
+//! worker-local [`TaskStats`] via [`TaskStats::merge_from`].
 //!
 //! # Fault model & recovery semantics
 //!
@@ -172,26 +214,40 @@ pub struct ServeReport {
     pub recovered_switches: usize,
 }
 
-/// Mutable per-task accounting while a run is in flight.
+/// Mutable per-task accounting while a run is in flight. The pooled
+/// coordinator keeps one vector of these per worker and reduces them
+/// with [`TaskStats::merge_from`] at report time.
 #[derive(Debug, Default)]
-struct TaskStats {
-    lat: Vec<f64>,
-    e2e: Vec<f64>,
-    exec_sum_ms: f64,
-    completed: usize,
-    retried: usize,
-    failed: usize,
-    shed: usize,
-    deadline_met: usize,
+pub(crate) struct TaskStats {
+    pub(crate) lat: Vec<f64>,
+    pub(crate) e2e: Vec<f64>,
+    pub(crate) exec_sum_ms: f64,
+    pub(crate) completed: usize,
+    pub(crate) retried: usize,
+    pub(crate) failed: usize,
+    pub(crate) shed: usize,
+    pub(crate) deadline_met: usize,
 }
 
 impl TaskStats {
-    fn mean_exec_ms(&self) -> f64 {
+    pub(crate) fn mean_exec_ms(&self) -> f64 {
         if self.lat.is_empty() {
             0.0
         } else {
             self.exec_sum_ms / self.lat.len() as f64
         }
+    }
+
+    /// Fold another accounting shard for the same task into this one.
+    pub(crate) fn merge_from(&mut self, other: &TaskStats) {
+        self.lat.extend_from_slice(&other.lat);
+        self.e2e.extend_from_slice(&other.e2e);
+        self.exec_sum_ms += other.exec_sum_ms;
+        self.completed += other.completed;
+        self.retried += other.retried;
+        self.failed += other.failed;
+        self.shed += other.shed;
+        self.deadline_met += other.deadline_met;
     }
 }
 
@@ -808,14 +864,24 @@ impl<E: Inference> ServingCoordinator<E> {
     }
 }
 
-fn build_batchers(
+pub(crate) fn build_batchers(
     manifest: &[ArtifactMeta],
     router: &Router,
     n_tasks: usize,
 ) -> HashMap<usize, Batcher> {
+    let routes: Vec<(usize, usize)> = (0..n_tasks).map(|t| (t, router.route_index(t))).collect();
+    build_batchers_for(manifest, &routes)
+}
+
+/// Batchers for an explicit (task, manifest index) route list — the
+/// pooled workers' form, which needs no router instance.
+pub(crate) fn build_batchers_for(
+    manifest: &[ArtifactMeta],
+    routes: &[(usize, usize)],
+) -> HashMap<usize, Batcher> {
     let mut batchers = HashMap::new();
-    for t in 0..n_tasks {
-        let meta = &manifest[router.route_index(t)];
+    for &(t, idx) in routes {
+        let meta = &manifest[idx];
         // a leading batch dimension only exists on rank-4 NHWC image
         // inputs (UC4's face crops); 1-D waveforms and token sequences
         // are single-sample.
@@ -828,7 +894,7 @@ fn build_batchers(
     batchers
 }
 
-fn vec_sample(len: usize, seed: u64) -> Vec<f32> {
+pub(crate) fn vec_sample(len: usize, seed: u64) -> Vec<f32> {
     let mut rng = crate::util::Rng::new(seed);
     (0..len).map(|_| rng.normal() as f32).collect()
 }

@@ -15,7 +15,10 @@
 //!
 //! `trace --json <path>` writes the adaptation trace as JSON;
 //! `serve --telemetry <path>` dumps the event timeline as JSON-lines to
-//! `<path>` plus a Prometheus metric snapshot to `<path>.prom`.
+//! `<path>` plus a Prometheus metric snapshot to `<path>.prom`;
+//! `serve --pooled` serves through the per-engine worker pool
+//! (one engine-owning thread per policy engine) instead of the
+//! single-loop coordinator.
 //! Diagnostics go to stderr through the `CARIN_LOG` leveled logger
 //! (`--log <level>` overrides the environment).
 
@@ -24,7 +27,7 @@ use std::collections::HashMap;
 use anyhow::{anyhow, Result};
 
 use carin::config;
-use carin::coordinator::{run_trace, ServingCoordinator};
+use carin::coordinator::{run_trace, PooledCoordinator, ServingCoordinator};
 use carin::device::profiles;
 use carin::harness::{self, figures, tables};
 use carin::manager::EventSchedule;
@@ -74,7 +77,7 @@ fn main() {
 fn usage() {
     println!(
         "carin — Constraint-Aware and Responsive Inference (ACM TECS 2024 reproduction)\n\
-         usage: carin <solve|eval|trace|serve|zoo|devices|storage|solvetime> [--uc ucN] [--device p7|s20|a71] [-n N]"
+         usage: carin <solve|eval|trace|serve|zoo|devices|storage|solvetime> [--uc ucN] [--device p7|s20|a71] [-n N] [--pooled]"
     );
 }
 
@@ -214,24 +217,32 @@ fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
     let sol = rass::solve(&p);
     println!("design d0: {}", sol.designs[0].describe(&p));
     let manifest = load_manifest(std::path::Path::new("artifacts"))?;
-    let mut coord = ServingCoordinator::new(&reg, &sol, manifest)?;
-    println!("preloaded {} model variants on PJRT CPU", coord.loaded_models());
     let (tx, rx) = std::sync::mpsc::channel();
     let producers = workload::spawn_producers(workload::for_use_case(uc, n), tx, 5, 0.02);
-    let report = coord.serve(rx)?;
+    let report = if opts.contains_key("pooled") {
+        // each worker constructs its own PJRT CPU engine as the
+        // executable stand-in for its assigned processor
+        let factory = |_: carin::device::Engine| carin::runtime::InferenceEngine::cpu();
+        let mut coord = PooledCoordinator::new(factory, &reg, &sol, manifest)?;
+        let engines: Vec<&str> =
+            sol.policy.engines.iter().map(|e| e.name()).collect();
+        println!(
+            "pooled serving: {} engine workers ({})",
+            engines.len(),
+            engines.join("+")
+        );
+        let report = coord.serve(rx)?;
+        dump_telemetry(opts, coord.telemetry())?;
+        report
+    } else {
+        let mut coord = ServingCoordinator::new(&reg, &sol, manifest)?;
+        println!("preloaded {} model variants on PJRT CPU", coord.loaded_models());
+        let report = coord.serve(rx)?;
+        dump_telemetry(opts, coord.telemetry())?;
+        report
+    };
     for h in producers {
         let _ = h.join();
-    }
-    if let Some(path) = opts.get("telemetry") {
-        let tel = coord.telemetry();
-        std::fs::write(path, tel.events_jsonl())?;
-        let prom = format!("{path}.prom");
-        std::fs::write(&prom, tel.prometheus())?;
-        println!(
-            "telemetry: {} events ({} dropped) -> {path}, metrics -> {prom}",
-            tel.recorder.len(),
-            tel.recorder.dropped()
-        );
     }
     for t in &report.tasks {
         println!(
@@ -257,6 +268,23 @@ fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
         report.fallback_switches,
         report.recovered_switches
     );
+    Ok(())
+}
+
+fn dump_telemetry(
+    opts: &HashMap<String, String>,
+    tel: &carin::telemetry::Telemetry,
+) -> Result<()> {
+    if let Some(path) = opts.get("telemetry") {
+        std::fs::write(path, tel.events_jsonl())?;
+        let prom = format!("{path}.prom");
+        std::fs::write(&prom, tel.prometheus())?;
+        println!(
+            "telemetry: {} events ({} dropped) -> {path}, metrics -> {prom}",
+            tel.recorder.len(),
+            tel.recorder.dropped()
+        );
+    }
     Ok(())
 }
 

@@ -3,10 +3,12 @@
 //! the profile cache, applying the contention model for multi-DNN
 //! configurations.
 
+use std::collections::HashMap;
+
 use crate::profiler::stats::{contention_factor, scale};
 use crate::util::Summary;
 
-use super::space::Config;
+use super::space::{Assignment, Config};
 use super::{Metric, Problem, Statistic};
 
 /// All metrics of one task under a given configuration.
@@ -112,53 +114,59 @@ fn stat_of(s: &Summary, stat: Statistic) -> f64 {
     }
 }
 
-/// Evaluate a configuration against a problem's profile cache.
-pub fn evaluate(p: &Problem, x: &Config) -> ConfigMetrics {
-    // Solver-hot-path micro-optimisation: the energy *distribution* is
-    // only materialised when some objective or constraint reads E.
-    let uses_energy = p
-        .objectives
+/// Whether some objective or constraint reads the energy distribution
+/// (solver-hot-path micro-optimisation: E is only materialised if so).
+fn uses_energy(p: &Problem) -> bool {
+    p.objectives
         .iter()
         .map(|o| o.metric)
         .chain(p.constraints.iter().map(|c| c.metric))
-        .any(|m| m == Metric::Energy);
-    let mut tasks = Vec::with_capacity(x.assignments.len());
-    for (t, a) in x.assignments.iter().enumerate() {
-        let point = p.cache.get(a.variant, a.proc);
-        let entry = &p.registry.models[a.variant.model];
-        let c = contention_factor(x.co_located(t));
-        let latency = if c == 1.0 {
-            point.latency_ms.clone()
-        } else {
-            scale(&point.latency_ms, c)
-        };
-        let throughput = entry.batch as f64 / latency.mean * 1000.0;
-        let energy = if !uses_energy {
-            Summary::of(&[point.energy_mj.mean * c])
-        } else if c == 1.0 {
-            point.energy_mj.clone()
-        } else {
-            scale(&point.energy_mj, c)
-        };
-        let accuracy = a.variant.accuracy(&p.registry).unwrap_or_else(|| {
-            crate::log_trace!(
-                "eval: {} task {t} has no accuracy figure; objective sees NaN",
-                p.name
-            );
-            f64::NAN
-        });
-        tasks.push(TaskMetrics {
-            size_bytes: a.variant.size_bytes(&p.registry),
-            flops: a.variant.flops(&p.registry),
-            accuracy,
-            solo_latency_ms: point.latency_ms.mean,
-            latency_ms: latency,
-            energy_mj: energy,
-            mf_bytes: point.mf_bytes,
-            ntt: c,
-            throughput,
-        });
+        .any(|m| m == Metric::Energy)
+}
+
+/// Metrics of one assignment sharing its engine with `co_located` other
+/// tasks. Pure in `(assignment, co_located)` — which is exactly the
+/// memoisation key [`evaluate_space`] dedups identical work by.
+fn eval_task(p: &Problem, a: &Assignment, co_located: usize, uses_energy: bool) -> TaskMetrics {
+    let point = p.cache.get(a.variant, a.proc);
+    let entry = &p.registry.models[a.variant.model];
+    let c = contention_factor(co_located);
+    let latency = if c == 1.0 {
+        point.latency_ms.clone()
+    } else {
+        scale(&point.latency_ms, c)
+    };
+    let throughput = entry.batch as f64 / latency.mean * 1000.0;
+    let energy = if !uses_energy {
+        Summary::of(&[point.energy_mj.mean * c])
+    } else if c == 1.0 {
+        point.energy_mj.clone()
+    } else {
+        scale(&point.energy_mj, c)
+    };
+    let accuracy = a.variant.accuracy(&p.registry).unwrap_or_else(|| {
+        crate::log_trace!(
+            "eval: {} model {} has no accuracy figure; objective sees NaN",
+            p.name,
+            entry.artifact
+        );
+        f64::NAN
+    });
+    TaskMetrics {
+        size_bytes: a.variant.size_bytes(&p.registry),
+        flops: a.variant.flops(&p.registry),
+        accuracy,
+        solo_latency_ms: point.latency_ms.mean,
+        latency_ms: latency,
+        energy_mj: energy,
+        mf_bytes: point.mf_bytes,
+        ntt: c,
+        throughput,
     }
+}
+
+/// Derive the multi-DNN aggregates (STP, fairness) from per-task metrics.
+fn finish(tasks: Vec<TaskMetrics>) -> ConfigMetrics {
     let nps: Vec<f64> = tasks.iter().map(|t| 1.0 / t.ntt).collect();
     let stp: f64 = nps.iter().sum();
     let fairness = if nps.len() < 2 {
@@ -169,6 +177,81 @@ pub fn evaluate(p: &Problem, x: &Config) -> ConfigMetrics {
         min / max
     };
     ConfigMetrics { tasks, stp, fairness }
+}
+
+/// Evaluate a configuration against a problem's profile cache.
+pub fn evaluate(p: &Problem, x: &Config) -> ConfigMetrics {
+    let ue = uses_energy(p);
+    finish(
+        x.assignments
+            .iter()
+            .enumerate()
+            .map(|(t, a)| eval_task(p, a, x.co_located(t), ue))
+            .collect(),
+    )
+}
+
+/// Memoised variant: identical `(assignment, co-location)` pairs across
+/// configurations share one metrics computation. In a multi-DNN product
+/// space the same pair recurs |other tasks' space| times, so the memo
+/// turns the dominant cost from O(space × tasks) into O(pairs).
+fn evaluate_memo(
+    p: &Problem,
+    x: &Config,
+    uses_energy: bool,
+    memo: &mut HashMap<(Assignment, usize), TaskMetrics>,
+) -> ConfigMetrics {
+    let tasks = x
+        .assignments
+        .iter()
+        .enumerate()
+        .map(|(t, a)| {
+            let key = (*a, x.co_located(t));
+            memo.entry(key)
+                .or_insert_with(|| eval_task(p, a, key.1, uses_energy))
+                .clone()
+        })
+        .collect();
+    finish(tasks)
+}
+
+/// Threshold below which threading overhead beats the parallel win.
+const PARALLEL_EVAL_MIN: usize = 256;
+
+/// Evaluate every configuration of the problem's decision space, chunked
+/// across scoped threads with a per-thread memo. Deterministic: results
+/// are written by space index and evaluation is pure, so the output is
+/// bit-identical to the sequential loop regardless of thread count or
+/// interleaving (`solve_is_deterministic` holds).
+pub fn evaluate_space(p: &Problem) -> Vec<ConfigMetrics> {
+    let n = p.space.len();
+    let threads = std::thread::available_parallelism()
+        .map(|t| t.get())
+        .unwrap_or(1)
+        .min(8);
+    let ue = uses_energy(p);
+    if threads <= 1 || n < PARALLEL_EVAL_MIN {
+        let mut memo = HashMap::new();
+        return p
+            .space
+            .iter()
+            .map(|x| evaluate_memo(p, x, ue, &mut memo))
+            .collect();
+    }
+    let chunk = n.div_ceil(threads);
+    let mut out: Vec<Option<ConfigMetrics>> = vec![None; n];
+    std::thread::scope(|s| {
+        for (ci, cells) in out.chunks_mut(chunk).enumerate() {
+            let lo = ci * chunk;
+            s.spawn(move || {
+                let mut memo = HashMap::new();
+                for (j, cell) in cells.iter_mut().enumerate() {
+                    *cell = Some(evaluate_memo(p, &p.space[lo + j], ue, &mut memo));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|m| m.expect("chunk evaluated")).collect()
 }
 
 #[cfg(test)]
@@ -218,6 +301,23 @@ mod tests {
         assert!(ms.stp < mp.stp);
         assert!(ms.tasks[0].ntt > 1.0);
         assert!((mp.tasks[0].ntt - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn evaluate_space_matches_sequential() {
+        let p = uc3_problem();
+        let all = evaluate_space(&p);
+        assert_eq!(all.len(), p.space.len());
+        for (x, m) in p.space.iter().zip(&all).step_by(97) {
+            let seq = evaluate(&p, x);
+            assert_eq!(m.stp.to_bits(), seq.stp.to_bits());
+            assert_eq!(m.fairness.to_bits(), seq.fairness.to_bits());
+            for (a, b) in m.tasks.iter().zip(&seq.tasks) {
+                assert_eq!(a.latency_ms.mean.to_bits(), b.latency_ms.mean.to_bits());
+                assert_eq!(a.mf_bytes.to_bits(), b.mf_bytes.to_bits());
+                assert_eq!(a.throughput.to_bits(), b.throughput.to_bits());
+            }
+        }
     }
 
     #[test]

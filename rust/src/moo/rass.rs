@@ -96,6 +96,15 @@ pub struct SwitchingPolicy {
 }
 
 impl SwitchingPolicy {
+    /// A degenerate policy mapping **every** environment state to one
+    /// design. Used by tests and benches that need a fixed task→engine
+    /// mapping with no adaptive switching (e.g. measuring pure execution
+    /// parallelism across two pinned engines).
+    pub fn pinned(engines: Vec<Engine>, design: usize) -> SwitchingPolicy {
+        let n_states = 1usize << (engines.len() + 1);
+        SwitchingPolicy { engines, rules: vec![design; n_states] }
+    }
+
     fn state_code(&self, s: EnvState) -> usize {
         let mut code = 0usize;
         for (i, e) in self.engines.iter().enumerate() {
@@ -143,19 +152,20 @@ impl SwitchingPolicy {
 pub fn solve(problem: &Problem) -> Solution {
     let t0 = Instant::now();
 
-    // X' = {x | g_j(x) <= 0 ∀j} — apply constraints. Each configuration
-    // is evaluated exactly once; its metrics are reused for the objective
-    // vectors and the d_m/d_w searches below (see EXPERIMENTS.md §Perf).
+    // X' = {x | g_j(x) <= 0 ∀j} — apply constraints. The whole space is
+    // evaluated in one parallel, memoised pass (`eval::evaluate_space`);
+    // each configuration's metrics are reused for the objective vectors
+    // and the d_m/d_w searches below (see EXPERIMENTS.md §Perf).
     let mut feasible: Vec<Config> = Vec::new();
     let mut vectors: Vec<Vec<f64>> = Vec::new();
     let mut mfs: Vec<f64> = Vec::new();
     let mut ws: Vec<f64> = Vec::new();
-    for x in &problem.space {
-        let m = problem.metrics(x);
-        if !problem.feasible_metrics(&m) {
+    let all_metrics = super::eval::evaluate_space(problem);
+    for (x, m) in problem.space.iter().zip(all_metrics.iter()) {
+        if !problem.feasible_metrics(m) {
             continue;
         }
-        vectors.push(problem.objective_vector_of(&m));
+        vectors.push(problem.objective_vector_of(m));
         mfs.push(m.total_mf_bytes());
         ws.push(m.total_flops());
         feasible.push(x.clone());

@@ -40,6 +40,12 @@ pub trait Inference {
     fn is_loaded(&self, stem: &str) -> bool;
     /// Number of resident models.
     fn loaded_count(&self) -> usize;
+    /// Injection counters, if this executor (or a decorator in its stack)
+    /// injects faults. Lets pooled workers — whose engines are consumed by
+    /// their owning thread — report injector activity back to tests.
+    fn fault_stats(&self) -> Option<FaultStats> {
+        None
+    }
 }
 
 impl Inference for InferenceEngine {
@@ -161,6 +167,17 @@ pub struct FaultStats {
     pub failed_loads: u64,
 }
 
+impl FaultStats {
+    /// Accumulate another executor's counters (per-worker stats reduce
+    /// into one report-time total).
+    pub fn absorb(&mut self, other: &FaultStats) {
+        self.calls += other.calls;
+        self.injected_errors += other.injected_errors;
+        self.injected_spikes += other.injected_spikes;
+        self.failed_loads += other.failed_loads;
+    }
+}
+
 /// Deterministic fault-injecting decorator around any [`Inference`]
 /// executor. Faults are drawn from a seeded [`Rng`], so a given seed and
 /// call sequence replays the exact same fault schedule.
@@ -280,6 +297,10 @@ impl<E: Inference> Inference for FaultInjector<E> {
 
     fn loaded_count(&self) -> usize {
         self.inner.loaded_count()
+    }
+
+    fn fault_stats(&self) -> Option<FaultStats> {
+        Some(self.stats.clone())
     }
 }
 

@@ -104,9 +104,16 @@ pub struct Recorder {
 
 impl Recorder {
     pub fn new(capacity: usize) -> Recorder {
+        Recorder::with_epoch(capacity, Instant::now())
+    }
+
+    /// A recorder whose timestamps are measured from an explicit epoch.
+    /// Per-worker shard recorders of one serving run share a single epoch
+    /// so their `t_ns` values are directly comparable at merge time.
+    pub fn with_epoch(capacity: usize, epoch: Instant) -> Recorder {
         assert!(capacity > 0, "recorder capacity must be positive");
         Recorder {
-            epoch: Instant::now(),
+            epoch,
             buf: Vec::with_capacity(capacity),
             cap: capacity,
             next: 0,

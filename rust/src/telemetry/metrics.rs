@@ -110,6 +110,42 @@ impl Histogram {
         (lo, hi)
     }
 
+    /// Fold another histogram into this one. Identical bucket layouts
+    /// merge exactly (element-wise count addition); mismatched layouts
+    /// fall back to re-observing each foreign bucket at its midpoint —
+    /// accurate to one bucket width, same as any percentile query.
+    pub fn merge(&mut self, other: &Histogram) {
+        if other.count == 0 {
+            return;
+        }
+        if self.bounds == other.bounds {
+            for (c, &o) in self.counts.iter_mut().zip(other.counts.iter()) {
+                *c += o;
+            }
+            self.count += other.count;
+            self.sum += other.sum;
+            self.min = self.min.min(other.min);
+            self.max = self.max.max(other.max);
+        } else {
+            let sum_before = self.sum;
+            for (i, &c) in other.counts.iter().enumerate() {
+                if c == 0 {
+                    continue;
+                }
+                let (lo, hi) = other.bucket_bounds(i);
+                let mid = if hi.is_finite() { (lo + hi) / 2.0 } else { other.max };
+                for _ in 0..c {
+                    self.observe(mid);
+                }
+            }
+            // midpoint re-observation approximates bucket placement only;
+            // the moments are carried over exactly
+            self.sum = sum_before + other.sum;
+            self.min = self.min.min(other.min);
+            self.max = self.max.max(other.max);
+        }
+    }
+
     /// p-th percentile estimate (0..=100): the upper bound of the bucket
     /// holding the nearest-rank observation, clamped into the observed
     /// `[min, max]`. Accurate to one bucket width; 0.0 when empty.
@@ -211,6 +247,26 @@ impl Registry {
     pub fn histograms(&self) -> impl Iterator<Item = (&str, &Histogram)> {
         self.histograms.iter().map(|(k, v)| (k.as_str(), v))
     }
+
+    /// Fold another registry into this one: counters add, gauges take the
+    /// other's value (last write wins), histograms merge per name. Used to
+    /// reduce per-worker telemetry shards into one report-time registry.
+    pub fn merge_from(&mut self, other: &Registry) {
+        for (name, v) in other.counters() {
+            self.add(name, v);
+        }
+        for (name, v) in other.gauges() {
+            self.set_gauge(name, v);
+        }
+        for (name, h) in other.histograms() {
+            match self.histograms.get_mut(name) {
+                Some(mine) => mine.merge(h),
+                None => {
+                    self.histograms.insert(name.to_string(), h.clone());
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -280,6 +336,58 @@ mod tests {
                 "p{p}: hist {hp} exact {ep}"
             );
         }
+    }
+
+    #[test]
+    fn merge_identical_layouts_is_exact() {
+        let mut a = Histogram::latency_ms();
+        let mut b = Histogram::latency_ms();
+        for v in [1.0, 2.0] {
+            a.observe(v);
+        }
+        for v in [4.0, 8.0] {
+            b.observe(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 4);
+        assert!((a.sum() - 15.0).abs() < 1e-12);
+        assert_eq!(a.min(), 1.0);
+        assert_eq!(a.max(), 8.0);
+        assert_eq!(a.counts().iter().sum::<u64>(), 4);
+    }
+
+    #[test]
+    fn merge_mismatched_layouts_keeps_moments() {
+        let mut a = Histogram::latency_ms();
+        let mut b = Histogram::log_scale(1.0, 10.0, 1);
+        a.observe(1.0);
+        b.observe(3.0);
+        b.observe(5.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert!((a.sum() - 9.0).abs() < 1e-12);
+        assert_eq!(a.min(), 1.0);
+        assert_eq!(a.max(), 5.0);
+    }
+
+    #[test]
+    fn registry_merge_from_shards() {
+        let mut a = Registry::new();
+        let mut b = Registry::new();
+        a.inc("reqs");
+        b.add("reqs", 2);
+        b.inc("only_b");
+        a.set_gauge("g", 1.0);
+        b.set_gauge("g", 5.0);
+        a.observe("lat", 1.0);
+        b.observe("lat", 2.0);
+        b.observe("lat2", 3.0);
+        a.merge_from(&b);
+        assert_eq!(a.counter("reqs"), 3);
+        assert_eq!(a.counter("only_b"), 1);
+        assert_eq!(a.gauge("g"), Some(5.0));
+        assert_eq!(a.histogram("lat").unwrap().count(), 2);
+        assert_eq!(a.histogram("lat2").unwrap().count(), 1);
     }
 
     #[test]

@@ -49,6 +49,16 @@
 //! window starts at the oldest retained event and
 //! [`Recorder::dropped`] reports what was lost.
 //!
+//! # Sharding
+//!
+//! The pooled coordinator gives every worker thread its own `Telemetry`
+//! shard (so hot-path recording stays lock-free and O(1)) constructed
+//! via [`Telemetry::with_epoch`] from one shared epoch. At report time
+//! [`Telemetry::merge_shards`] reduces the shards: events re-sort by
+//! timestamp with globally monotone sequence numbers, counters add,
+//! histograms merge bucket-wise, and the serving window spans the
+//! earliest admission to the latest completion across all shards.
+//!
 //! [`EnvState`]: crate::moo::rass::EnvState
 
 pub mod event;
@@ -76,12 +86,50 @@ pub struct Telemetry {
 
 impl Telemetry {
     pub fn new(event_capacity: usize) -> Telemetry {
+        Telemetry::with_epoch(event_capacity, std::time::Instant::now())
+    }
+
+    /// A telemetry bundle measuring time from an explicit epoch. The
+    /// pooled coordinator hands every worker shard the same epoch so the
+    /// shards' event timestamps are directly comparable at merge time.
+    pub fn with_epoch(event_capacity: usize, epoch: std::time::Instant) -> Telemetry {
         Telemetry {
-            recorder: Recorder::new(event_capacity),
+            recorder: Recorder::with_epoch(event_capacity, epoch),
             registry: Registry::new(),
             first_admit_ns: None,
             last_done_ns: None,
         }
+    }
+
+    /// Reduce per-worker telemetry shards (all sharing `epoch`) into one
+    /// bundle: events are concatenated and re-recorded in timestamp order
+    /// (sequence numbers are reassigned globally monotone), registries
+    /// merge per [`Registry::merge_from`], and the serving window spans
+    /// the earliest admission to the latest completion across shards.
+    pub fn merge_shards(epoch: std::time::Instant, shards: Vec<Telemetry>) -> Telemetry {
+        let cap: usize = shards
+            .iter()
+            .map(|s| s.recorder.capacity())
+            .sum::<usize>()
+            .max(1);
+        let mut merged = Telemetry::with_epoch(cap, epoch);
+        let mut events: Vec<Event> = Vec::new();
+        for shard in &shards {
+            events.extend(shard.recorder.events());
+            merged.registry.merge_from(&shard.registry);
+            if let Some(a) = shard.first_admit_ns {
+                merged.first_admit_ns =
+                    Some(merged.first_admit_ns.map_or(a, |m: u64| m.min(a)));
+            }
+            if let Some(b) = shard.last_done_ns {
+                merged.last_done_ns = Some(merged.last_done_ns.map_or(b, |m: u64| m.max(b)));
+            }
+        }
+        events.sort_by_key(|e| e.t_ns);
+        for e in events {
+            merged.recorder.record_at(e.t_ns, e.kind);
+        }
+        merged
     }
 
     /// Forget the serving window (call at the start of a run; events and
@@ -148,6 +196,29 @@ mod tests {
         assert!(w >= 0.002, "window {w}");
         t.reset_window();
         assert!(t.window_s().is_none());
+    }
+
+    #[test]
+    fn merge_shards_orders_events_and_spans_window() {
+        let epoch = std::time::Instant::now();
+        let mut a = Telemetry::with_epoch(8, epoch);
+        let mut b = Telemetry::with_epoch(8, epoch);
+        a.recorder.record_at(10, EventKind::Admitted { task: 0, id: 0 });
+        b.recorder.record_at(5, EventKind::Admitted { task: 1, id: 1 });
+        a.registry.inc("c");
+        b.registry.add("c", 2);
+        a.first_admit_ns = Some(10);
+        a.last_done_ns = Some(20);
+        b.first_admit_ns = Some(5);
+        b.last_done_ns = Some(15);
+        let m = Telemetry::merge_shards(epoch, vec![a, b]);
+        let evs = m.recorder.events();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].t_ns, 5);
+        assert_eq!(evs[1].t_ns, 10);
+        assert_eq!((evs[0].seq, evs[1].seq), (0, 1));
+        assert_eq!(m.registry.counter("c"), 3);
+        assert_eq!(m.window_ns(), Some((5, 20)));
     }
 
     #[test]

@@ -15,7 +15,7 @@
 use std::sync::mpsc;
 
 use carin::config;
-use carin::coordinator::ServingCoordinator;
+use carin::coordinator::{PooledCoordinator, ServingCoordinator};
 use carin::device::profiles;
 use carin::moo::rass::{self, EnvState};
 use carin::runtime::{synthetic_manifest, FaultInjector, FaultSpec, StubEngine};
@@ -154,6 +154,73 @@ fn uc1_serving_survives_transient_faults_and_an_outage() {
     assert!(prom.contains("carin_e2e_latency_ms_bucket"));
     assert!(prom.contains("le=\"+Inf\""));
     assert!(prom.contains("carin_e2e_latency_ms_count"));
+}
+
+/// Backoff isolation (the pool's reason to exist): a hard outage on one
+/// engine's route must not stall the other engine's task. The pinned
+/// two-engine solution has a single design, so no fallback can rescue
+/// the faulted route — the CPU worker grinds through retries and
+/// failures for the whole run while the GPU worker must stay at full
+/// service, interleaved in time with the outage.
+#[test]
+fn outage_on_one_engine_does_not_stall_the_other() {
+    let reg = Registry::paper();
+    let sol = config::pinned_uc3_solution(&reg);
+    let manifest = synthetic_manifest(&reg);
+
+    // task 0's route on the CPU worker: dead from its 10th call onward
+    let stem0 = calm_stem(&reg, &sol, 0);
+    let factory = move |_: carin::device::Engine| -> anyhow::Result<FaultInjector<StubEngine>> {
+        let mut inj = FaultInjector::new(StubEngine::with_latency(1.0), 9);
+        inj.set_for(&stem0, FaultSpec::transient(0.0).with_outage(10, 1_000_000));
+        Ok(inj)
+    };
+    let mut coord = PooledCoordinator::new(factory, &reg, &sol, manifest).expect("preload");
+
+    let n = 120;
+    let (tx, rx) = mpsc::channel();
+    let producers =
+        workload::spawn_producers(workload::for_use_case("uc3", n), tx, 17, 0.0);
+    let report = coord.serve(rx).expect("pool must survive a one-engine outage");
+    for h in producers {
+        h.join().unwrap();
+    }
+
+    let t0 = &report.tasks[0];
+    let t1 = &report.tasks[1];
+    // the healthy engine's task is untouched by its neighbour's outage
+    assert_eq!(t1.completed, n, "GPU task lost requests to the CPU outage");
+    assert_eq!(t1.failed, 0);
+    assert_eq!(t1.shed, 0);
+    // the faulted route really did burn
+    assert!(t0.failed > 0, "outage injected but task 0 never failed");
+    assert!(
+        coord.fault_stats().map(|s| s.injected_errors).unwrap_or(0) > 0,
+        "injector counters lost across the worker boundary"
+    );
+    // supervision saw the repeated failures and raised the fault signal
+    assert!(coord.telemetry().registry.counter("carin_faults_raised_total") >= 1);
+
+    // temporal isolation: healthy-task completions land *during* the
+    // outage, not just after the faulted queue drained
+    let events = coord.telemetry().recorder.events();
+    let fail_times: Vec<u64> = events
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::Failed { task: 0, .. }))
+        .map(|e| e.t_ns)
+        .collect();
+    assert!(!fail_times.is_empty());
+    let (first_fail, last_fail) =
+        (*fail_times.first().unwrap(), *fail_times.last().unwrap());
+    let concurrent_completions = events
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::Completed { task: 1, .. }))
+        .filter(|e| e.t_ns > first_fail && e.t_ns < last_fail)
+        .count();
+    assert!(
+        concurrent_completions > 0,
+        "no GPU completion overlapped the CPU outage window [{first_fail}, {last_fail}] ns"
+    );
 }
 
 #[test]
