@@ -11,7 +11,7 @@
 
 use std::sync::mpsc;
 
-use carin::coordinator::ServingCoordinator;
+use carin::coordinator::ServeOptions;
 use carin::moo::rass;
 use carin::prelude::*;
 use carin::runtime::load_manifest;
@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
         println!("\n==== {} on {} ====", uc, device.name);
         println!("d0 = {}", sol.designs[0].describe(&p));
 
-        let mut coord = ServingCoordinator::new(&zoo, &sol, manifest.clone())?;
+        let mut coord = ServeOptions::new().build_single(&zoo, &sol, manifest.clone())?;
         println!(
             "engine: PJRT CPU, {} design-set models preloaded (vs {} in the full zoo)",
             coord.loaded_models(),

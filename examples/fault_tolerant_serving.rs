@@ -16,7 +16,7 @@
 use std::sync::mpsc;
 
 use carin::config;
-use carin::coordinator::ServingCoordinator;
+use carin::coordinator::ServeOptions;
 use carin::device::profiles;
 use carin::moo::rass::{self, EnvState};
 use carin::runtime::{synthetic_manifest, FaultInjector, FaultSpec, StubEngine};
@@ -47,7 +47,9 @@ fn main() -> anyhow::Result<()> {
     println!("injecting: 10% transients everywhere, outage on {stem} (calls 40..=60)\n");
     inj.set_for(&stem, FaultSpec::transient(0.10).with_outage(40, 60));
 
-    let mut coord = ServingCoordinator::with_engine(inj, &reg, &sol, manifest)?;
+    let options = ServeOptions::new()
+        .telemetry_path_opt(telemetry_path.map(std::path::PathBuf::from));
+    let mut coord = options.build_with_engine(inj, &reg, &sol, manifest)?;
     let (tx, rx) = mpsc::channel();
     let producers =
         workload::spawn_producers(workload::for_use_case("uc1", 300), tx, 7, 0.0);
@@ -100,14 +102,13 @@ fn main() -> anyhow::Result<()> {
             h.count()
         );
     }
-    if let Some(path) = telemetry_path {
-        std::fs::write(&path, tel.events_jsonl())?;
-        let prom = format!("{path}.prom");
-        std::fs::write(&prom, tel.prometheus())?;
+    if let Some(path) = options.dump_telemetry(tel)? {
         println!(
-            "telemetry: {} events ({} dropped) -> {path}, metrics -> {prom}",
+            "telemetry: {} events ({} dropped) -> {}, metrics -> {}.prom",
             tel.recorder.len(),
-            tel.recorder.dropped()
+            tel.recorder.dropped(),
+            path.display(),
+            path.display()
         );
     }
     Ok(())

@@ -17,7 +17,7 @@
 use std::sync::mpsc;
 
 use carin::config;
-use carin::coordinator::PooledCoordinator;
+use carin::coordinator::ServeOptions;
 use carin::device::Engine;
 use carin::runtime::{synthetic_manifest, StubEngine};
 use carin::workload;
@@ -55,7 +55,9 @@ fn main() -> anyhow::Result<()> {
     let factory = |_: Engine| -> anyhow::Result<StubEngine> {
         Ok(StubEngine::with_latency(2.0))
     };
-    let mut coord = PooledCoordinator::new(factory, &reg, &sol, manifest)?;
+    let options = ServeOptions::new()
+        .telemetry_path_opt(telemetry_path.map(std::path::PathBuf::from));
+    let mut coord = options.build_pooled(factory, &reg, &sol, manifest)?;
 
     let (tx, rx) = mpsc::channel();
     let producers =
@@ -98,14 +100,13 @@ fn main() -> anyhow::Result<()> {
             println!("  {line}");
         }
     }
-    if let Some(path) = telemetry_path {
-        std::fs::write(&path, tel.events_jsonl())?;
-        let prom = format!("{path}.prom");
-        std::fs::write(&prom, tel.prometheus())?;
+    if let Some(path) = options.dump_telemetry(tel)? {
         println!(
-            "telemetry: {} events ({} dropped) -> {path}, metrics -> {prom}",
+            "telemetry: {} events ({} dropped) -> {}, metrics -> {}.prom",
             tel.recorder.len(),
-            tel.recorder.dropped()
+            tel.recorder.dropped(),
+            path.display(),
+            path.display()
         );
     }
     Ok(())

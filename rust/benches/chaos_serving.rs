@@ -9,21 +9,40 @@
 //! timeline (fault → fallback switch → probes → recovery switch) from
 //! the telemetry recorder and writes the full event stream as JSON-lines
 //! to the temp dir for replay.
+//!
+//! A second section measures *hang* recovery: the same stack behind a
+//! [`Watchdog`] with ~1% of calls stalling far past their deadline. The
+//! goodput retained relative to a clean watchdog-supervised run is
+//! merged into `BENCH_serving.json` under `hang_recovery` (CI gates on
+//! the ratio).
 
+use std::collections::BTreeMap;
 use std::sync::mpsc;
+use std::time::Duration;
 
 use carin::config;
-use carin::coordinator::ServingCoordinator;
 use carin::coordinator::serve::ServeReport;
+use carin::coordinator::{FaultPolicy, ServeOptions};
 use carin::device::profiles;
 use carin::moo::rass::{self, EnvState};
-use carin::runtime::{synthetic_manifest, FaultInjector, FaultSpec, StubEngine};
+use carin::runtime::{synthetic_manifest, FaultInjector, FaultSpec, StubEngine, Watchdog};
 use carin::telemetry::{Event, EventKind};
+use carin::util::json::Json;
 use carin::workload;
 use carin::zoo::Registry;
 
 const N_REQUESTS: usize = 400;
 const EXEC_MS: f64 = 0.2;
+/// Per-call stall probability for the hang-recovery section.
+const HANG_P: f64 = 0.01;
+/// Requests in the hang-recovery section (more than the flooded section
+/// so ~1% stalls yield a stable handful of watchdog timeouts).
+const N_HANG: usize = 600;
+/// Arrival pacing for the hang-recovery section: 5% of real time keeps
+/// ~2 ms between arrivals, so a recovered 20 ms stall is absorbed by
+/// queue slack instead of stretching the serving window — the figure
+/// then measures recovery, not the stalls themselves.
+const HANG_TIME_SCALE: f64 = 0.05;
 
 /// What the bench keeps from a run's [`carin::telemetry::Telemetry`]
 /// after the coordinator is dropped.
@@ -53,7 +72,7 @@ fn run(
         let stem = format!("{}_{}", reg.models[a.variant.model].artifact, a.variant.scheme.name());
         inj.set_for(&stem, spec.with_outage(60, 80));
     }
-    let mut coord = ServingCoordinator::with_engine(inj, reg, sol, manifest)?;
+    let mut coord = ServeOptions::new().build_with_engine(inj, reg, sol, manifest)?;
     let (tx, rx) = mpsc::channel();
     let producers =
         workload::spawn_producers(workload::for_use_case("uc1", N_REQUESTS), tx, 17, 0.0);
@@ -72,6 +91,49 @@ fn run(
         e2e_p99_ms: e2e.map_or(0.0, |h| h.percentile(99.0)),
     };
     Ok((report, coord.engine().stats.injected_errors, snap))
+}
+
+/// One watchdog-supervised run: every call goes through a [`Watchdog`]
+/// with a 20 ms per-call deadline (SLO 10 ms x mult 2, floored at
+/// 20 ms). With `hang_p > 0` the injected stalls sleep far past that
+/// deadline, so only abandon-and-respawn supervision keeps the run
+/// moving. Returns the report plus the watchdog's timeout/respawn
+/// counters.
+fn run_supervised(
+    reg: &Registry,
+    sol: &carin::moo::Solution,
+    hang_p: f64,
+) -> anyhow::Result<(ServeReport, u64, u64)> {
+    let manifest = synthetic_manifest(reg);
+    let engine = Watchdog::new(move || {
+        let mut inj = FaultInjector::new(StubEngine::with_latency(EXEC_MS), 42);
+        if hang_p > 0.0 {
+            inj.set_default(FaultSpec::transient(0.0).with_hangs(hang_p, 5_000.0));
+        }
+        Ok(inj)
+    })?;
+    let policy = FaultPolicy {
+        timeout_mult: 2.0,
+        timeout_floor: Duration::from_millis(20),
+        ..FaultPolicy::default()
+    };
+    let mut coord = ServeOptions::new()
+        .fault_policy(policy)
+        .latency_slo_ms(10.0)
+        .build_with_engine(engine, reg, sol, manifest)?;
+    let (tx, rx) = mpsc::channel();
+    let producers = workload::spawn_producers(
+        workload::for_use_case("uc1", N_HANG),
+        tx,
+        17,
+        HANG_TIME_SCALE,
+    );
+    let report = coord.serve(rx)?;
+    for h in producers {
+        let _ = h.join();
+    }
+    let stats = coord.engine().stats;
+    Ok((report, stats.timeouts, stats.respawns))
 }
 
 /// Print the supervision-loop timeline (fault/switch/heal events; probes
@@ -163,5 +225,67 @@ fn main() -> anyhow::Result<()> {
     let path = std::env::temp_dir().join("chaos_serving.events.jsonl");
     std::fs::write(&path, &chaos_tel.jsonl)?;
     println!("replayable event stream -> {}", path.display());
+
+    // --- hang recovery: stalls that never error, survivable only via
+    // watchdog abandon-and-respawn ---
+    println!(
+        "\n=== hang recovery ({N_HANG} paced reqs, watchdog 20 ms deadline, {:.0}% of calls stall 5 s) ===",
+        100.0 * HANG_P
+    );
+    println!(
+        "{:22} {:>9} {:>9} {:>6} {:>6} {:>6} {:>6} {:>9} {:>9}",
+        "condition", "goodput", "rps", "done", "retry", "t/o", "shed", "timeouts", "respawns"
+    );
+    let (wd_clean, to0, rs0) = run_supervised(&reg, &sol, 0.0)?;
+    let (wd_hang, to1, rs1) = run_supervised(&reg, &sol, HANG_P)?;
+    for (label, r, to, rs) in
+        [("watchdog clean", &wd_clean, to0, rs0), ("watchdog 1% hangs", &wd_hang, to1, rs1)]
+    {
+        println!(
+            "{:22} {:>9.1} {:>9.1} {:>6} {:>6} {:>6} {:>6} {:>9} {:>9}",
+            label,
+            r.goodput_rps,
+            r.throughput_rps,
+            r.total_requests,
+            r.retried,
+            r.timed_out,
+            r.shed,
+            to,
+            rs
+        );
+    }
+    let ratio = wd_hang.goodput_rps / wd_clean.goodput_rps.max(1e-9);
+    println!(
+        "\ngoodput retained under hangs: {:.1}% ({:.1} -> {:.1} req/s, {} retried after a timeout)",
+        100.0 * ratio,
+        wd_clean.goodput_rps,
+        wd_hang.goodput_rps,
+        wd_hang.retried_timeout
+    );
+
+    // merge next to the parallel bench's figures so CI gates one file
+    let hr = {
+        let mut o = BTreeMap::new();
+        o.insert("clean_goodput_rps".into(), Json::Num(wd_clean.goodput_rps));
+        o.insert("hang_goodput_rps".into(), Json::Num(wd_hang.goodput_rps));
+        o.insert("goodput_ratio".into(), Json::Num(ratio));
+        o.insert("hang_p".into(), Json::Num(HANG_P));
+        o.insert("deadline_ms".into(), Json::Num(20.0));
+        o.insert("watchdog_timeouts".into(), Json::Num(to1 as f64));
+        o.insert("watchdog_respawns".into(), Json::Num(rs1 as f64));
+        o.insert("retried_timeout".into(), Json::Num(wd_hang.retried_timeout as f64));
+        o.insert("timed_out".into(), Json::Num(wd_hang.timed_out as f64));
+        Json::Obj(o)
+    };
+    let mut root = match std::fs::read_to_string("BENCH_serving.json") {
+        Ok(s) => match Json::parse(&s) {
+            Ok(Json::Obj(m)) => m,
+            _ => BTreeMap::new(),
+        },
+        Err(_) => BTreeMap::new(),
+    };
+    root.insert("hang_recovery".into(), hr);
+    std::fs::write("BENCH_serving.json", Json::Obj(root).dump())?;
+    println!("hang-recovery figures merged -> BENCH_serving.json");
     Ok(())
 }

@@ -8,7 +8,7 @@
 use std::sync::mpsc;
 
 use carin::config;
-use carin::coordinator::ServingCoordinator;
+use carin::coordinator::ServeOptions;
 use carin::device::profiles;
 use carin::moo::rass;
 use carin::runtime::engine::{zero_input, InferenceEngine};
@@ -59,7 +59,7 @@ fn main() -> anyhow::Result<()> {
         let dev = profiles::by_name("s20").unwrap();
         let p = config::use_case(uc, &reg, &dev).unwrap();
         let sol = rass::solve(&p);
-        let mut coord = ServingCoordinator::new(&reg, &sol, manifest.clone())?;
+        let mut coord = ServeOptions::new().build_single(&reg, &sol, manifest.clone())?;
         let (tx, rx) = mpsc::channel();
         let producers =
             workload::spawn_producers(workload::for_use_case(uc, 160), tx, 9, 0.0);

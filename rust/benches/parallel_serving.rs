@@ -18,7 +18,7 @@ use std::sync::mpsc;
 
 use carin::config;
 use carin::coordinator::serve::ServeReport;
-use carin::coordinator::{PooledCoordinator, ServingCoordinator};
+use carin::coordinator::ServeOptions;
 use carin::device::Engine;
 use carin::runtime::{synthetic_manifest, StubEngine};
 use carin::util::json::Json;
@@ -44,7 +44,7 @@ fn percentiles(tel: &carin::telemetry::Telemetry) -> (f64, f64) {
 fn run_single(reg: &Registry, sol: &carin::moo::Solution) -> anyhow::Result<RunResult> {
     let manifest = synthetic_manifest(reg);
     let engine = StubEngine::with_latency(EXEC_MS);
-    let mut coord = ServingCoordinator::with_engine(engine, reg, sol, manifest)?;
+    let mut coord = ServeOptions::new().build_with_engine(engine, reg, sol, manifest)?;
     let (tx, rx) = mpsc::channel();
     let producers =
         workload::spawn_producers(workload::for_use_case("uc3", N_PER_TASK), tx, 23, 0.0);
@@ -60,7 +60,7 @@ fn run_pooled(reg: &Registry, sol: &carin::moo::Solution) -> anyhow::Result<RunR
     let manifest = synthetic_manifest(reg);
     let factory =
         |_: Engine| -> anyhow::Result<StubEngine> { Ok(StubEngine::with_latency(EXEC_MS)) };
-    let mut coord = PooledCoordinator::new(factory, reg, sol, manifest)?;
+    let mut coord = ServeOptions::new().build_pooled(factory, reg, sol, manifest)?;
     let (tx, rx) = mpsc::channel();
     let producers =
         workload::spawn_producers(workload::for_use_case("uc3", N_PER_TASK), tx, 23, 0.0);

@@ -173,6 +173,46 @@ pub fn pinned_uc3_solution(reg: &Registry) -> Solution {
     }
 }
 
+/// The [`pinned_uc3_solution`] placement plus a hand-authored fallback:
+/// design 0 keeps scene on the CPU and audio on the GPU; design 1 moves
+/// both tasks to the GPU. The switching policy routes every state where
+/// the CPU is troubled or faulted to design 1 and everything else to
+/// design 0, so supervision tests can fault the CPU route and assert a
+/// real design switch (and the recovery back) without running the
+/// solver.
+pub fn pinned_uc3_fallback_solution(reg: &Registry) -> Solution {
+    let base = pinned_uc3_solution(reg);
+    let scene = base.designs[0].config.assignments[0].variant.model;
+    let audio = base.designs[0].config.assignments[1].variant.model;
+    let all_gpu = Config {
+        assignments: vec![
+            // the GPU route runs fp32: the scene model's fixed-point
+            // scheme is a CPU/XNNPACK placement in the zoo
+            Assignment {
+                variant: Variant { model: scene, scheme: Scheme::Fp32 },
+                proc: Proc::Gpu,
+            },
+            Assignment {
+                variant: Variant { model: audio, scheme: Scheme::Fp32 },
+                proc: Proc::Gpu,
+            },
+        ],
+    };
+    let engines = vec![Engine::Cpu, Engine::Gpu];
+    // state code: bit 0 = CPU bad, bit 1 = GPU bad, bit 2 = memory
+    let n_states = 1usize << (engines.len() + 1);
+    let rules = (0..n_states).map(|code| usize::from(code & 1 != 0)).collect();
+    Solution {
+        designs: vec![
+            base.designs.into_iter().next().expect("pinned solution has d0"),
+            Design { config: all_gpu, optimality: 0.8, roles: vec!["cpu-fallback"] },
+        ],
+        policy: SwitchingPolicy::from_rules(engines, rules),
+        feasible_count: 2,
+        solve_time: Duration::ZERO,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -210,6 +250,34 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn pinned_uc3_fallback_routes_cpu_bad_states_to_design_1() {
+        let reg = Registry::paper();
+        let sol = pinned_uc3_fallback_solution(&reg);
+        assert_eq!(sol.designs.len(), 2);
+        use crate::moo::rass::EnvState;
+        assert_eq!(sol.policy.design_for(EnvState::calm()), 0);
+        assert_eq!(
+            sol.policy.design_for(EnvState::calm().with_engine(Engine::Cpu)),
+            1,
+            "troubled CPU must fall back"
+        );
+        assert_eq!(
+            sol.policy.design_for(EnvState { troubled: 0, faulted: 1, memory: false }),
+            1,
+            "faulted CPU folds into the same fallback"
+        );
+        assert_eq!(sol.policy.design_for(EnvState::calm().with_engine(Engine::Gpu)), 0);
+        assert!(
+            sol.designs[1]
+                .config
+                .assignments
+                .iter()
+                .all(|a| a.proc.engine() == Engine::Gpu),
+            "the fallback design must avoid the CPU entirely"
+        );
     }
 
     #[test]

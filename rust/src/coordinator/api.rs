@@ -1,0 +1,341 @@
+//! The unified coordinator API: one object-safe trait over both serving
+//! coordinators and one builder that constructs them.
+//!
+//! # Why a trait
+//!
+//! The single-loop [`ServingCoordinator`] and the per-engine
+//! [`PooledCoordinator`] implement the same serving contract — admit a
+//! finite workload, supervise engine calls (retry, shed, watchdog
+//! timeout, fault fallback/recovery) and return a [`ServeReport`] whose
+//! taxonomy satisfies `completed + failed + shed + timed_out ==
+//! submitted`. [`Coordinator`] captures that contract so front-ends
+//! (the CLI, benches, conformance tests) can pick an implementation at
+//! runtime through `&mut dyn Coordinator` instead of duplicating every
+//! call site per coordinator.
+//!
+//! # Why a builder
+//!
+//! The positional constructors grew incompatible shapes
+//! (`ServingCoordinator::new(reg, sol, manifest)` vs
+//! `PooledCoordinator::new(factory, reg, sol, manifest)`) and every
+//! knob (fault policy, SLO, watchdog multiplier, telemetry sizing)
+//! needed post-construction setter calls in the right order.
+//! [`ServeOptions`] is the one configuration bag: chain the knobs, then
+//! call a `build_*` terminal for the coordinator flavour you want. One
+//! options value can build several coordinators (that is what the
+//! conformance test does), so the terminals take `&self`.
+//!
+//! # Migration
+//!
+//! The positional constructors are crate-private since the watchdog PR:
+//!
+//! ```text
+//! // before
+//! let mut c = ServingCoordinator::with_engine(engine, &reg, &sol, manifest)?;
+//! c.set_fault_policy(policy);
+//! c.set_latency_slo(42.0);
+//! // after
+//! let mut c = ServeOptions::new()
+//!     .fault_policy(policy)
+//!     .latency_slo_ms(42.0)
+//!     .build_with_engine(engine, &reg, &sol, manifest)?;
+//! ```
+//!
+//! `build_single` replaces `ServingCoordinator::new` (PJRT CPU engine),
+//! `build_with_engine` replaces `ServingCoordinator::with_engine`, and
+//! `build_pooled` replaces `PooledCoordinator::new`.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::pool::PooledCoordinator;
+use crate::coordinator::serve::{FaultPolicy, ServeReport, ServeRequest, ServingCoordinator};
+use crate::device::Engine;
+use crate::error::CarinError;
+use crate::moo::Solution;
+use crate::runtime::engine::InferenceEngine;
+use crate::runtime::faults::Inference;
+use crate::runtime::ArtifactMeta;
+use crate::telemetry::{Recorder, Telemetry};
+use crate::zoo::Registry;
+
+/// The serving contract shared by both coordinators. Object-safe: the
+/// CLI serves through `&mut dyn Coordinator`, chosen by `--pooled`.
+pub trait Coordinator {
+    /// Drain a finite workload from `rx` until every producer hangs up
+    /// and return the aggregated report. The report taxonomy is closed:
+    /// `completed + failed + shed + timed_out == submitted` and
+    /// `goodput_rps <= throughput_rps`.
+    fn serve(&mut self, rx: mpsc::Receiver<ServeRequest>) -> Result<ServeReport>;
+
+    /// Track executions against a latency SLO (ms) and derive the
+    /// per-call watchdog deadline from it (see
+    /// [`FaultPolicy::timeout_mult`]).
+    fn set_latency_slo(&mut self, slo_ms: f64);
+
+    /// Replace the supervision knobs. Resets the monitor — call between
+    /// runs, not mid-serve.
+    fn set_fault_policy(&mut self, policy: FaultPolicy);
+
+    /// The design the router currently serves under.
+    fn current_design(&self) -> usize;
+
+    /// The telemetry bundle of the last (or in-progress) run.
+    fn telemetry(&self) -> &Telemetry;
+}
+
+impl<E: Inference> Coordinator for ServingCoordinator<E> {
+    fn serve(&mut self, rx: mpsc::Receiver<ServeRequest>) -> Result<ServeReport> {
+        ServingCoordinator::serve(self, rx)
+    }
+
+    fn set_latency_slo(&mut self, slo_ms: f64) {
+        ServingCoordinator::set_latency_slo(self, slo_ms);
+    }
+
+    fn set_fault_policy(&mut self, policy: FaultPolicy) {
+        ServingCoordinator::set_fault_policy(self, policy);
+    }
+
+    fn current_design(&self) -> usize {
+        ServingCoordinator::current_design(self)
+    }
+
+    fn telemetry(&self) -> &Telemetry {
+        ServingCoordinator::telemetry(self)
+    }
+}
+
+impl<E, F> Coordinator for PooledCoordinator<E, F>
+where
+    E: Inference,
+    F: Fn(Engine) -> Result<E> + Sync,
+{
+    fn serve(&mut self, rx: mpsc::Receiver<ServeRequest>) -> Result<ServeReport> {
+        PooledCoordinator::serve(self, rx)
+    }
+
+    fn set_latency_slo(&mut self, slo_ms: f64) {
+        PooledCoordinator::set_latency_slo(self, slo_ms);
+    }
+
+    fn set_fault_policy(&mut self, policy: FaultPolicy) {
+        PooledCoordinator::set_fault_policy(self, policy);
+    }
+
+    fn current_design(&self) -> usize {
+        PooledCoordinator::current_design(self)
+    }
+
+    fn telemetry(&self) -> &Telemetry {
+        PooledCoordinator::telemetry(self)
+    }
+}
+
+/// Builder for both coordinator flavours: collect the serving knobs,
+/// then call one `build_*` terminal. See the module docs for the
+/// migration from the positional constructors.
+#[derive(Debug, Clone, Default)]
+pub struct ServeOptions {
+    policy: FaultPolicy,
+    slo_ms: Option<f64>,
+    event_capacity: Option<usize>,
+    telemetry_path: Option<PathBuf>,
+}
+
+impl ServeOptions {
+    pub fn new() -> ServeOptions {
+        ServeOptions::default()
+    }
+
+    /// Replace the whole supervision policy (retry, backoff, fault and
+    /// watchdog knobs). Later [`ServeOptions::timeout_mult`] /
+    /// [`ServeOptions::timeout_floor`] calls edit this policy in place.
+    pub fn fault_policy(mut self, policy: FaultPolicy) -> ServeOptions {
+        self.policy = policy;
+        self
+    }
+
+    /// Track executions against a latency SLO (ms). Also the base of
+    /// the per-call watchdog deadline:
+    /// `max(SLO × timeout_mult, timeout_floor)`.
+    pub fn latency_slo_ms(mut self, slo_ms: f64) -> ServeOptions {
+        self.slo_ms = Some(slo_ms);
+        self
+    }
+
+    /// Watchdog deadline multiplier over the SLO (non-positive disables
+    /// timeout supervision).
+    pub fn timeout_mult(mut self, mult: f64) -> ServeOptions {
+        self.policy.timeout_mult = mult;
+        self
+    }
+
+    /// Lower bound on the watchdog deadline.
+    pub fn timeout_floor(mut self, floor: Duration) -> ServeOptions {
+        self.policy.timeout_floor = floor;
+        self
+    }
+
+    /// Size of the telemetry event ring buffer (defaults to
+    /// [`crate::telemetry::DEFAULT_EVENT_CAPACITY`]).
+    pub fn event_capacity(mut self, events: usize) -> ServeOptions {
+        self.event_capacity = Some(events);
+        self
+    }
+
+    /// Dump telemetry after the run (see
+    /// [`ServeOptions::dump_telemetry`]): the event timeline as
+    /// JSON-lines to `path` and a Prometheus snapshot to `path.prom`.
+    pub fn telemetry_path(mut self, path: impl Into<PathBuf>) -> ServeOptions {
+        self.telemetry_path = Some(path.into());
+        self
+    }
+
+    /// Optional-flavoured [`ServeOptions::telemetry_path`] for CLI
+    /// plumbing (`None` leaves the destination unset).
+    pub fn telemetry_path_opt(mut self, path: Option<PathBuf>) -> ServeOptions {
+        self.telemetry_path = path;
+        self
+    }
+
+    /// Build the single-loop coordinator over the default PJRT CPU
+    /// engine (replaces `ServingCoordinator::new`).
+    pub fn build_single(
+        &self,
+        reg: &Registry,
+        solution: &Solution,
+        manifest: Vec<ArtifactMeta>,
+    ) -> Result<ServingCoordinator<InferenceEngine>> {
+        self.build_with_engine(InferenceEngine::cpu()?, reg, solution, manifest)
+    }
+
+    /// Build the single-loop coordinator over any [`Inference`] executor
+    /// (replaces `ServingCoordinator::with_engine`).
+    pub fn build_with_engine<E: Inference>(
+        &self,
+        engine: E,
+        reg: &Registry,
+        solution: &Solution,
+        manifest: Vec<ArtifactMeta>,
+    ) -> Result<ServingCoordinator<E>> {
+        let mut coord = ServingCoordinator::with_engine(engine, reg, solution, manifest)?;
+        self.apply(&mut coord);
+        if let Some(cap) = self.event_capacity {
+            let epoch = coord.telemetry().recorder.epoch();
+            coord.telemetry_mut().recorder = Recorder::with_epoch(cap, epoch);
+        }
+        Ok(coord)
+    }
+
+    /// Build the per-engine worker pool coordinator (replaces
+    /// `PooledCoordinator::new`). `factory` runs once inside each worker
+    /// thread to construct that worker's engine.
+    pub fn build_pooled<E, F>(
+        &self,
+        factory: F,
+        reg: &Registry,
+        solution: &Solution,
+        manifest: Vec<ArtifactMeta>,
+    ) -> Result<PooledCoordinator<E, F>>
+    where
+        E: Inference,
+        F: Fn(Engine) -> Result<E> + Sync,
+    {
+        let mut coord = PooledCoordinator::new(factory, reg, solution, manifest)?;
+        self.apply(&mut coord);
+        if let Some(cap) = self.event_capacity {
+            let epoch = coord.telemetry().recorder.epoch();
+            coord.telemetry_mut().recorder = Recorder::with_epoch(cap, epoch);
+        }
+        Ok(coord)
+    }
+
+    fn apply(&self, coord: &mut dyn Coordinator) {
+        coord.set_fault_policy(self.policy.clone());
+        if let Some(slo) = self.slo_ms {
+            coord.set_latency_slo(slo);
+        }
+    }
+
+    /// Write the run's telemetry to the configured destination: the
+    /// event timeline as JSON-lines to the path, the Prometheus
+    /// snapshot to `<path>.prom`. A no-op returning `Ok(None)` when no
+    /// path was set; otherwise returns the events path written.
+    pub fn dump_telemetry(&self, tel: &Telemetry) -> Result<Option<PathBuf>> {
+        let Some(path) = &self.telemetry_path else {
+            return Ok(None);
+        };
+        let write = |p: &std::path::Path, body: String| -> Result<()> {
+            std::fs::write(p, body)
+                .map_err(|e| CarinError::Io(format!("{}: {e}", p.display())))?;
+            Ok(())
+        };
+        write(path, tel.events_jsonl())?;
+        let mut prom = path.as_os_str().to_owned();
+        prom.push(".prom");
+        write(std::path::Path::new(&prom), tel.prometheus())?;
+        Ok(Some(path.clone()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::runtime::{synthetic_manifest, StubEngine};
+
+    #[test]
+    fn builder_applies_policy_slo_and_capacity() {
+        let reg = Registry::paper();
+        let sol = config::pinned_uc3_solution(&reg);
+        let manifest = synthetic_manifest(&reg);
+        let policy = FaultPolicy { max_attempts: 7, ..FaultPolicy::default() };
+        let coord = ServeOptions::new()
+            .fault_policy(policy)
+            .timeout_mult(4.0)
+            .timeout_floor(Duration::from_millis(10))
+            .latency_slo_ms(5.0)
+            .event_capacity(32)
+            .build_with_engine(StubEngine::new(), &reg, &sol, manifest)
+            .unwrap();
+        assert_eq!(coord.telemetry().recorder.capacity(), 32);
+        // the watchdog deadline knobs reached the policy: SLO 5 ms × 4
+        // is under the 10 ms floor, so the floor wins
+        assert_eq!(
+            crate::coordinator::serve::call_deadline(coord.fault_policy(), Some(5.0)),
+            Some(Duration::from_millis(10))
+        );
+        assert_eq!(coord.fault_policy().max_attempts, 7);
+    }
+
+    #[test]
+    fn both_coordinators_build_behind_the_trait() {
+        let reg = Registry::paper();
+        let sol = config::pinned_uc3_solution(&reg);
+        let manifest = synthetic_manifest(&reg);
+        let opts = ServeOptions::new();
+        let mut single = opts
+            .build_with_engine(StubEngine::new(), &reg, &sol, manifest.clone())
+            .unwrap();
+        let factory = |_: Engine| -> Result<StubEngine> { Ok(StubEngine::new()) };
+        let mut pooled = opts.build_pooled(factory, &reg, &sol, manifest).unwrap();
+        for coord in [&mut single as &mut dyn Coordinator, &mut pooled as &mut dyn Coordinator]
+        {
+            assert_eq!(coord.current_design(), 0);
+            let (tx, rx) = mpsc::channel();
+            drop(tx);
+            let report = coord.serve(rx).unwrap();
+            assert_eq!(report.total_requests, 0);
+        }
+    }
+
+    #[test]
+    fn dump_telemetry_without_destination_is_a_noop() {
+        let tel = Telemetry::new(4);
+        assert!(ServeOptions::new().dump_telemetry(&tel).unwrap().is_none());
+    }
+}

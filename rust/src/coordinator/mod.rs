@@ -2,13 +2,19 @@
 //! runtime-adaptation experiments (Figures 7/8) and the serving front-end
 //! (router + dynamic batcher + engine loop) used by the end-to-end
 //! example on real PJRT execution.
+//!
+//! Both serving front-ends are built through [`ServeOptions`] and served
+//! through the object-safe [`Coordinator`] trait (see [`api`] for the
+//! contract and the migration from the old positional constructors).
 
+pub mod api;
 pub mod batcher;
 pub mod pool;
 pub mod router;
 pub mod serve;
 pub mod trace;
 
+pub use api::{Coordinator, ServeOptions};
 pub use batcher::{Batch, Batcher};
 pub use pool::PooledCoordinator;
 pub use router::Router;

@@ -18,7 +18,12 @@
 //!   backoff, per-request span/latency accounting — all against their
 //!   own [`Telemetry`] shard and [`TaskStats`] vector, then report
 //!   completions/failures upstream as [`Feedback`]. A backoff sleep on
-//!   one engine therefore delays only that engine's queue.
+//!   one engine therefore delays only that engine's queue. Each worker
+//!   also pushes the coordinator's per-call watchdog deadline (latency
+//!   SLO × `timeout_mult`, floored at `timeout_floor`) into its engine
+//!   at spawn, so a *hung* inference is abandoned on that engine alone:
+//!   the final attempt surfaces as `timed_out` in the merged report
+//!   while every other worker's queue keeps draining.
 //! * **The dispatcher** owns the cross-engine state no worker may touch
 //!   concurrently: the [`Monitor`], the [`RuntimeManager`], the router
 //!   and the fault/probe bookkeeping. Consecutive-failure counting,
@@ -48,6 +53,7 @@
 //! co-located models observable in the Prometheus snapshot.
 
 use std::collections::HashMap;
+use std::marker::PhantomData;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -57,14 +63,15 @@ use anyhow::{anyhow, Result};
 use crate::coordinator::batcher::{Batch, Batcher, Request as BatchRequest};
 use crate::coordinator::router::Router;
 use crate::coordinator::serve::{
-    build_batchers_for, vec_sample, FaultPolicy, ServeReport, ServeRequest, TaskReport,
-    TaskStats,
+    build_batchers_for, call_deadline, vec_sample, FaultPolicy, ServeReport, ServeRequest,
+    TaskReport, TaskStats,
 };
 use crate::device::Engine;
+use crate::error::CarinError;
 use crate::manager::{Monitor, RuntimeManager};
 use crate::moo::Solution;
 use crate::runtime::engine::{random_input, Tensor};
-use crate::runtime::faults::{FaultStats, Inference};
+use crate::runtime::faults::{fault_kind_of, FaultKind, FaultStats, Inference};
 use crate::runtime::ArtifactMeta;
 use crate::telemetry::{EventKind, Span, Telemetry};
 use crate::util::{Backoff, Summary};
@@ -95,7 +102,7 @@ enum WorkerMsg {
 /// supervision state needs, nothing more.
 enum Feedback {
     /// Engine constructed and preload finished (or failed).
-    Ready { result: std::result::Result<(), String> },
+    Ready { result: std::result::Result<(), CarinError> },
     /// A request completed; `exec_ms` feeds the shed estimator.
     Done { task: usize, exec_ms: f64 },
     /// A request exhausted its retries.
@@ -135,8 +142,12 @@ struct ProbeState {
 
 /// The pooled serving coordinator. `F` is the engine factory, called
 /// once *inside* each worker thread — the only engine-related value
-/// that crosses the spawn boundary.
-pub struct PooledCoordinator<F> {
+/// that crosses the spawn boundary. `E` is the executor type every
+/// worker builds and owns; it never leaves its thread, so the
+/// coordinator only carries it as `PhantomData` (which is what lets
+/// [`PooledCoordinator::serve`] be a plain method and the type
+/// implement the object-safe [`super::Coordinator`] trait).
+pub struct PooledCoordinator<E, F> {
     factory: F,
     router: Router,
     manifest: Vec<ArtifactMeta>,
@@ -151,19 +162,27 @@ pub struct PooledCoordinator<F> {
     epoch: Instant,
     /// Aggregated injector counters from the last run's workers.
     engine_fault_stats: Option<FaultStats>,
+    _engine: PhantomData<fn() -> E>,
 }
 
-impl<F> PooledCoordinator<F> {
+impl<E, F> PooledCoordinator<E, F>
+where
+    E: Inference,
+    F: Fn(Engine) -> Result<E> + Sync,
+{
     /// Build the pool coordinator. Unlike
-    /// [`super::serve::ServingCoordinator::new`] nothing is loaded
-    /// here: each worker constructs its engine and preloads its own
-    /// route set when [`PooledCoordinator::serve`] spawns it.
-    pub fn new(
+    /// [`super::serve::ServingCoordinator::with_engine`] nothing is
+    /// loaded here: each worker constructs its engine and preloads its
+    /// own route set when [`PooledCoordinator::serve`] spawns it.
+    ///
+    /// Crate-internal: external callers build through
+    /// [`super::ServeOptions::build_pooled`].
+    pub(crate) fn new(
         factory: F,
         reg: &Registry,
         solution: &Solution,
         manifest: Vec<ArtifactMeta>,
-    ) -> Result<PooledCoordinator<F>> {
+    ) -> Result<PooledCoordinator<E, F>> {
         let policy = FaultPolicy::default();
         let router = Router::new(reg, solution, &manifest)?;
         let n_tasks = solution.designs[0].config.assignments.len();
@@ -182,6 +201,7 @@ impl<F> PooledCoordinator<F> {
             tel: Telemetry::with_epoch(crate::telemetry::DEFAULT_EVENT_CAPACITY, epoch),
             epoch,
             engine_fault_stats: None,
+            _engine: PhantomData,
         };
         let d0 = coord.rm.current_design();
         coord.router.set_design(d0);
@@ -207,6 +227,11 @@ impl<F> PooledCoordinator<F> {
 
     pub fn n_tasks(&self) -> usize {
         self.n_tasks
+    }
+
+    /// The active supervision knobs.
+    pub fn fault_policy(&self) -> &FaultPolicy {
+        &self.policy
     }
 
     pub fn current_design(&self) -> usize {
@@ -270,17 +295,14 @@ impl<F> PooledCoordinator<F> {
     /// drain, join and merge the shards. Engine faults never abort the
     /// run — they are retried in-worker, shed around, or routed away
     /// from exactly as in the single-loop coordinator.
-    pub fn serve<E>(&mut self, rx: mpsc::Receiver<ServeRequest>) -> Result<ServeReport>
-    where
-        E: Inference,
-        F: Fn(Engine) -> Result<E> + Sync,
-    {
+    pub fn serve(&mut self, rx: mpsc::Receiver<ServeRequest>) -> Result<ServeReport> {
         let t0 = Instant::now();
         let plans = self.worker_plans();
         let slo_ms = self.slo_ms;
         let n_tasks = self.n_tasks;
         let epoch = self.epoch;
         let policy = self.policy.clone();
+        let deadline = call_deadline(&policy, slo_ms);
         self.tel.reset_window();
         let switches_before = self.rm.switches.len();
 
@@ -351,7 +373,10 @@ impl<F> PooledCoordinator<F> {
                 let fb = fb_tx.clone();
                 let depth = &depths[w];
                 handles.push(s.spawn(move || {
-                    run_worker(plan, d0, factory, manifest, policy_ref, depth, epoch, n_tasks, wrx, fb)
+                    run_worker(
+                        plan, d0, factory, manifest, policy_ref, deadline, depth, epoch,
+                        n_tasks, wrx, fb,
+                    )
                 }));
             }
             // the dispatcher's copy must go, or fb_rx never disconnects
@@ -441,7 +466,9 @@ impl<F> PooledCoordinator<F> {
                     artifact: manifest[router.route_index(t)].stem.clone(),
                     completed: st.completed,
                     retried: st.retried,
+                    retried_timeout: st.retried_timeout,
                     failed: st.failed,
+                    timed_out: st.timed_out,
                     shed: st.shed,
                     deadline_met: st.deadline_met,
                     slo_misses: match slo_ms {
@@ -461,7 +488,9 @@ impl<F> PooledCoordinator<F> {
             throughput_rps: total as f64 / window_s,
             goodput_rps: met as f64 / window_s,
             retried: stats.iter().map(|s| s.retried).sum(),
+            retried_timeout: stats.iter().map(|s| s.retried_timeout).sum(),
             failed: stats.iter().map(|s| s.failed).sum(),
+            timed_out: stats.iter().map(|s| s.timed_out).sum(),
             shed: stats.iter().map(|s| s.shed).sum(),
             fallback_switches,
             recovered_switches,
@@ -500,7 +529,7 @@ struct Dispatcher<'a> {
 impl Dispatcher<'_> {
     /// Block until every worker reports its engine built and preloaded.
     fn wait_ready(&mut self, n_workers: usize) -> Result<()> {
-        let mut first_err: Option<String> = None;
+        let mut first_err: Option<CarinError> = None;
         let mut ready = 0usize;
         while ready < n_workers {
             match self.fb_rx.recv() {
@@ -743,6 +772,7 @@ fn run_worker<E, F>(
     factory: &F,
     manifest: &[ArtifactMeta],
     policy: &FaultPolicy,
+    deadline: Option<Duration>,
     depth: &AtomicUsize,
     epoch: Instant,
     n_tasks: usize,
@@ -759,14 +789,15 @@ where
     let mut engine = match factory(engine_id) {
         Ok(e) => e,
         Err(e) => {
-            let _ = fb.send(Feedback::Ready { result: Err(e.to_string()) });
+            let _ = fb.send(Feedback::Ready { result: Err(CarinError::Engine(e.to_string())) });
             return WorkerOutcome { stats, tel, fault_stats: None };
         }
     };
-    let mut preload_err: Option<String> = None;
+    engine.set_call_deadline(deadline);
+    let mut preload_err: Option<CarinError> = None;
     for &idx in &plan.preload {
         if let Err(e) = supervised_load(&mut engine, &manifest[idx], policy) {
-            preload_err = Some(format!("{}: {e}", manifest[idx].stem));
+            preload_err = Some(CarinError::Artifact(format!("{}: {e}", manifest[idx].stem)));
             break;
         }
     }
@@ -790,6 +821,7 @@ where
         design: start_design,
         manifest,
         policy,
+        deadline,
         batchers,
         stats,
         tel,
@@ -833,6 +865,9 @@ struct Worker<'a, E: Inference> {
     design: usize,
     manifest: &'a [ArtifactMeta],
     policy: &'a FaultPolicy,
+    /// Per-call watchdog deadline pushed into the engine at spawn;
+    /// kept for the `timed_out` event payload.
+    deadline: Option<Duration>,
     batchers: HashMap<usize, Batcher>,
     stats: Vec<TaskStats>,
     tel: Telemetry,
@@ -948,6 +983,7 @@ impl<E: Inference> Worker<'_, E> {
     fn supervised_infer(&mut self, t: usize, stem: &str, input: &Tensor) -> Result<f64> {
         let mut backoff = Backoff::new(self.policy.backoff_base, self.policy.backoff_cap);
         let mut attempt = 0usize;
+        let mut timed_out_attempts = 0usize;
         loop {
             attempt += 1;
             let te = Instant::now();
@@ -955,6 +991,10 @@ impl<E: Inference> Worker<'_, E> {
                 Ok(_) => {
                     if attempt > 1 {
                         self.stats[t].retried += 1;
+                        if timed_out_attempts > 0 {
+                            self.stats[t].retried_timeout += 1;
+                            self.tel.registry.inc("carin_requests_retried_timeout_total");
+                        }
                         self.tel.recorder.record(EventKind::Retried {
                             task: t as u32,
                             attempts: attempt as u32,
@@ -964,6 +1004,10 @@ impl<E: Inference> Worker<'_, E> {
                     return Ok(te.elapsed().as_secs_f64() * 1000.0);
                 }
                 Err(e) => {
+                    if fault_kind_of(&e) == Some(FaultKind::Timeout) {
+                        timed_out_attempts += 1;
+                        self.tel.registry.inc("carin_engine_timeouts_total");
+                    }
                     if attempt >= self.policy.max_attempts {
                         return Err(e);
                     }
@@ -1024,10 +1068,27 @@ impl<E: Inference> Worker<'_, E> {
                 self.note_completion(&span, exec_ms, met);
                 let _ = self.fb.send(Feedback::Done { task: t, exec_ms });
             }
-            Err(_) => {
-                self.stats[t].failed += 1;
-                self.tel.recorder.record(EventKind::Failed { task: t as u32, id });
-                self.tel.registry.inc("carin_requests_failed_total");
+            Err(e) => {
+                if fault_kind_of(&e) == Some(FaultKind::Timeout) {
+                    self.stats[t].timed_out += 1;
+                    let span = Span {
+                        task: t,
+                        id,
+                        submitted,
+                        admitted,
+                        dispatched,
+                        completed: Instant::now(),
+                    };
+                    span.record_timeout(
+                        &mut self.tel.recorder,
+                        self.deadline.unwrap_or_default(),
+                    );
+                    self.tel.registry.inc("carin_requests_timed_out_total");
+                } else {
+                    self.stats[t].failed += 1;
+                    self.tel.recorder.record(EventKind::Failed { task: t as u32, id });
+                    self.tel.registry.inc("carin_requests_failed_total");
+                }
                 let _ = self.fb.send(Feedback::Failed { task: t });
             }
         }
@@ -1071,11 +1132,29 @@ impl<E: Inference> Worker<'_, E> {
                 }
                 let _ = self.fb.send(Feedback::Done { task: t, exec_ms });
             }
-            Err(_) => {
-                self.stats[t].failed += occupancy;
-                for &id in ids.iter().take(occupancy) {
-                    self.tel.recorder.record(EventKind::Failed { task: t as u32, id });
-                    self.tel.registry.inc("carin_requests_failed_total");
+            Err(e) => {
+                if fault_kind_of(&e) == Some(FaultKind::Timeout) {
+                    self.stats[t].timed_out += occupancy;
+                    let completed = Instant::now();
+                    let d = self.deadline.unwrap_or_default();
+                    for i in 0..occupancy {
+                        let span = Span {
+                            task: t,
+                            id: ids[i],
+                            submitted: enqueued[i],
+                            admitted: admitted[i],
+                            dispatched,
+                            completed,
+                        };
+                        span.record_timeout(&mut self.tel.recorder, d);
+                        self.tel.registry.inc("carin_requests_timed_out_total");
+                    }
+                } else {
+                    self.stats[t].failed += occupancy;
+                    for &id in ids.iter().take(occupancy) {
+                        self.tel.recorder.record(EventKind::Failed { task: t as u32, id });
+                        self.tel.registry.inc("carin_requests_failed_total");
+                    }
                 }
                 // one fault-accounting signal per exhausted engine call,
                 // matching the single loop's note_failure semantics

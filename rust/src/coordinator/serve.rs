@@ -55,6 +55,18 @@
 //!   [`FaultPolicy::max_attempts`] times with capped exponential backoff
 //!   ([`crate::util::Backoff`]). A request whose retries are exhausted is
 //!   counted `failed`, never propagated as a process error.
+//! * **Timeout supervision** — a hung engine call (fail-slow, not
+//!   fail-stop) is bounded by a per-call watchdog deadline of
+//!   `max(SLO × timeout_mult, timeout_floor)` (see
+//!   [`FaultPolicy::timeout_mult`]); the coordinator pushes it into the
+//!   executor stack via [`Inference::set_call_deadline`], and a
+//!   [`crate::runtime::Watchdog`]-wrapped executor abandons the hung
+//!   thread when it fires. A timed-out attempt counts toward the same
+//!   consecutive-failure fault raising as an error, retries under the
+//!   same backoff, and — when retries are exhausted — is counted
+//!   `timed_out` (disjoint from `failed`) with a `timed_out` event and
+//!   the `carin_engine_timeouts_total` / `carin_requests_timed_out_total`
+//!   counters.
 //! * **Fault signaling** — after [`FaultPolicy::fault_threshold`]
 //!   consecutive exhausted-retry failures on a task, the engine carrying
 //!   that task's route is reported *faulted* to the [`Monitor`]; the
@@ -73,9 +85,14 @@
 //! # Report taxonomy
 //!
 //! [`TaskReport`] counts per task: `completed` (successful executions),
-//! `retried` (engine calls that needed at least one retry), `failed`
-//! (requests whose retries were exhausted), `shed` (deadline-shed at
-//! dequeue) and `deadline_met` (completed in time; equals `completed`
+//! `retried` (engine calls that needed at least one retry),
+//! `retried_timeout` (the subset of retried calls where a prior attempt
+//! hit the watchdog deadline), `failed` (requests whose retries were
+//! exhausted on an error), `timed_out` (requests whose retries were
+//! exhausted with the final attempt abandoned by the watchdog — disjoint
+//! from `failed`, so `completed + failed + shed + timed_out` accounts
+//! for every admitted request), `shed` (deadline-shed at dequeue) and
+//! `deadline_met` (completed in time; equals `completed`
 //! for deadline-free requests). [`ServeReport`] aggregates these and adds
 //! `goodput_rps` (successful-within-deadline requests per second),
 //! `fallback_switches` (design switches taken while a fault/overload
@@ -109,7 +126,7 @@ use crate::device::Engine;
 use crate::manager::{Monitor, RuntimeManager};
 use crate::moo::Solution;
 use crate::runtime::engine::{random_input, InferenceEngine, Tensor};
-use crate::runtime::faults::Inference;
+use crate::runtime::faults::{fault_kind_of, FaultKind, Inference};
 use crate::runtime::ArtifactMeta;
 use crate::telemetry::{EventKind, Span, Telemetry};
 use crate::util::{Backoff, Summary};
@@ -146,6 +163,13 @@ pub struct FaultPolicy {
     pub heal_threshold: usize,
     /// Monitor hysteresis: consecutive observations before a signal flips.
     pub hysteresis_hold: usize,
+    /// Watchdog deadline multiplier over the latency SLO: a supervised
+    /// call is abandoned after `max(SLO × timeout_mult, timeout_floor)`.
+    /// Non-positive disables timeout supervision.
+    pub timeout_mult: f64,
+    /// Lower bound on the watchdog deadline, so tight SLOs do not turn
+    /// ordinary scheduling jitter into timeouts.
+    pub timeout_floor: Duration,
 }
 
 impl Default for FaultPolicy {
@@ -158,8 +182,22 @@ impl Default for FaultPolicy {
             probe_interval: 8,
             heal_threshold: 2,
             hysteresis_hold: 2,
+            timeout_mult: 8.0,
+            timeout_floor: Duration::from_millis(50),
         }
     }
+}
+
+/// The per-call watchdog deadline for the given supervision knobs and
+/// latency SLO: `max(SLO × timeout_mult, timeout_floor)`. `None` (no
+/// bound) when no SLO is set or the multiplier is non-positive.
+pub(crate) fn call_deadline(policy: &FaultPolicy, slo_ms: Option<f64>) -> Option<Duration> {
+    let slo = slo_ms?;
+    if policy.timeout_mult <= 0.0 || !slo.is_finite() || slo <= 0.0 {
+        return None;
+    }
+    let floor_ms = policy.timeout_floor.as_secs_f64() * 1000.0;
+    Some(Duration::from_secs_f64((slo * policy.timeout_mult).max(floor_ms) / 1000.0))
 }
 
 /// Per-task serving statistics. See the module docs for the taxonomy.
@@ -171,8 +209,14 @@ pub struct TaskReport {
     pub completed: usize,
     /// Engine calls that succeeded only after at least one retry.
     pub retried: usize,
-    /// Requests whose retries were exhausted.
+    /// The subset of `retried` where a prior attempt hit the watchdog
+    /// deadline before the call eventually succeeded.
+    pub retried_timeout: usize,
+    /// Requests whose retries were exhausted on an engine error.
     pub failed: usize,
+    /// Requests whose retries were exhausted with the final attempt
+    /// abandoned by the watchdog deadline (disjoint from `failed`).
+    pub timed_out: usize,
     /// Requests shed at dequeue because their deadline was unreachable.
     pub shed: usize,
     /// Completed requests that met their deadline (== `completed` when
@@ -204,8 +248,14 @@ pub struct ServeReport {
     pub goodput_rps: f64,
     /// Total retried engine calls across tasks.
     pub retried: usize,
+    /// Total retried calls with a timed-out prior attempt across tasks.
+    pub retried_timeout: usize,
     /// Total failed requests across tasks.
     pub failed: usize,
+    /// Total watchdog-timed-out requests across tasks (disjoint from
+    /// `failed`; `total_requests + failed + shed + timed_out` covers
+    /// every admitted request).
+    pub timed_out: usize,
     /// Total shed requests across tasks.
     pub shed: usize,
     /// Design switches taken this run while a signal was raised.
@@ -224,7 +274,9 @@ pub(crate) struct TaskStats {
     pub(crate) exec_sum_ms: f64,
     pub(crate) completed: usize,
     pub(crate) retried: usize,
+    pub(crate) retried_timeout: usize,
     pub(crate) failed: usize,
+    pub(crate) timed_out: usize,
     pub(crate) shed: usize,
     pub(crate) deadline_met: usize,
 }
@@ -245,7 +297,9 @@ impl TaskStats {
         self.exec_sum_ms += other.exec_sum_ms;
         self.completed += other.completed;
         self.retried += other.retried;
+        self.retried_timeout += other.retried_timeout;
         self.failed += other.failed;
+        self.timed_out += other.timed_out;
         self.shed += other.shed;
         self.deadline_met += other.deadline_met;
     }
@@ -283,24 +337,18 @@ pub struct ServingCoordinator<E: Inference = InferenceEngine> {
     tel: Telemetry,
 }
 
-impl ServingCoordinator<InferenceEngine> {
-    /// Compile and preload every artifact any design can route to — the
-    /// RASS design set is small by construction, so this is the paper's
-    /// storage/latency advantage over keeping the full zoo resident.
-    pub fn new(
-        reg: &Registry,
-        solution: &Solution,
-        manifest: Vec<ArtifactMeta>,
-    ) -> Result<ServingCoordinator> {
-        ServingCoordinator::with_engine(InferenceEngine::cpu()?, reg, solution, manifest)
-    }
-}
-
 impl<E: Inference> ServingCoordinator<E> {
     /// Build a coordinator over any [`Inference`] executor (the real PJRT
     /// engine, a [`crate::runtime::StubEngine`], or either wrapped in a
-    /// [`crate::runtime::FaultInjector`]).
-    pub fn with_engine(
+    /// [`crate::runtime::FaultInjector`] / [`crate::runtime::Watchdog`]).
+    /// Compiles and preloads every artifact any design can route to — the
+    /// RASS design set is small by construction, so this is the paper's
+    /// storage/latency advantage over keeping the full zoo resident.
+    ///
+    /// Crate-internal: external callers build through
+    /// [`super::ServeOptions::build_single`] /
+    /// [`super::ServeOptions::build_with_engine`].
+    pub(crate) fn with_engine(
         engine: E,
         reg: &Registry,
         solution: &Solution,
@@ -338,8 +386,12 @@ impl<E: Inference> ServingCoordinator<E> {
 
     /// Track executions against a latency SLO (ms); misses are reported
     /// per task (the serving-side view of the paper's narrow SLOs).
+    /// Also derives the per-call watchdog deadline
+    /// (`max(SLO × timeout_mult, timeout_floor)`) and pushes it into the
+    /// executor stack.
     pub fn set_latency_slo(&mut self, slo_ms: f64) {
         self.slo_ms = Some(slo_ms);
+        self.engine.set_call_deadline(call_deadline(&self.policy, self.slo_ms));
     }
 
     /// Replace the supervision knobs. Resets the monitor (hysteresis
@@ -350,10 +402,16 @@ impl<E: Inference> ServingCoordinator<E> {
             policy.hysteresis_hold,
         );
         self.policy = policy;
+        self.engine.set_call_deadline(call_deadline(&self.policy, self.slo_ms));
     }
 
     pub fn n_tasks(&self) -> usize {
         self.n_tasks
+    }
+
+    /// The active supervision knobs.
+    pub fn fault_policy(&self) -> &FaultPolicy {
+        &self.policy
     }
 
     /// Manually point the router at a design (benches/ablations; the
@@ -505,7 +563,9 @@ impl<E: Inference> ServingCoordinator<E> {
                     artifact: self.manifest[self.router.route_index(t)].stem.clone(),
                     completed: st.completed,
                     retried: st.retried,
+                    retried_timeout: st.retried_timeout,
                     failed: st.failed,
+                    timed_out: st.timed_out,
                     shed: st.shed,
                     deadline_met: st.deadline_met,
                     slo_misses: match self.slo_ms {
@@ -525,7 +585,9 @@ impl<E: Inference> ServingCoordinator<E> {
             throughput_rps: total as f64 / window_s,
             goodput_rps: met as f64 / window_s,
             retried: stats.iter().map(|s| s.retried).sum(),
+            retried_timeout: stats.iter().map(|s| s.retried_timeout).sum(),
             failed: stats.iter().map(|s| s.failed).sum(),
+            timed_out: stats.iter().map(|s| s.timed_out).sum(),
             shed: stats.iter().map(|s| s.shed).sum(),
             fallback_switches,
             recovered_switches,
@@ -533,7 +595,10 @@ impl<E: Inference> ServingCoordinator<E> {
     }
 
     /// One supervised engine call: retry with capped exponential backoff.
-    /// Returns the successful attempt's execution latency (ms).
+    /// Watchdog timeouts retry like any other failure (each one counted
+    /// in `carin_engine_timeouts_total`); a success after a timed-out
+    /// attempt is additionally counted `retried_timeout`. Returns the
+    /// successful attempt's execution latency (ms).
     fn supervised_infer(
         &mut self,
         t: usize,
@@ -543,6 +608,7 @@ impl<E: Inference> ServingCoordinator<E> {
     ) -> Result<f64> {
         let mut backoff = Backoff::new(self.policy.backoff_base, self.policy.backoff_cap);
         let mut attempt = 0usize;
+        let mut timed_out_attempts = 0usize;
         loop {
             attempt += 1;
             let te = Instant::now();
@@ -550,6 +616,10 @@ impl<E: Inference> ServingCoordinator<E> {
                 Ok(_) => {
                     if attempt > 1 {
                         st.retried += 1;
+                        if timed_out_attempts > 0 {
+                            st.retried_timeout += 1;
+                            self.tel.registry.inc("carin_requests_retried_timeout_total");
+                        }
                         self.tel.recorder.record(EventKind::Retried {
                             task: t as u32,
                             attempts: attempt as u32,
@@ -560,6 +630,10 @@ impl<E: Inference> ServingCoordinator<E> {
                     return Ok(te.elapsed().as_secs_f64() * 1000.0);
                 }
                 Err(e) => {
+                    if fault_kind_of(&e) == Some(FaultKind::Timeout) {
+                        timed_out_attempts += 1;
+                        self.tel.registry.inc("carin_engine_timeouts_total");
+                    }
                     if attempt >= self.policy.max_attempts {
                         return Err(e);
                     }
@@ -641,10 +715,25 @@ impl<E: Inference> ServingCoordinator<E> {
                     Span { task: t, id, submitted, admitted, dispatched, completed: done };
                 self.note_completion(&span, exec_ms, met);
             }
-            Err(_) => {
-                stats[t].failed += 1;
-                self.tel.recorder.record(EventKind::Failed { task: t as u32, id });
-                self.tel.registry.inc("carin_requests_failed_total");
+            Err(e) => {
+                if fault_kind_of(&e) == Some(FaultKind::Timeout) {
+                    stats[t].timed_out += 1;
+                    let span = Span {
+                        task: t,
+                        id,
+                        submitted,
+                        admitted,
+                        dispatched,
+                        completed: Instant::now(),
+                    };
+                    let d = call_deadline(&self.policy, self.slo_ms).unwrap_or_default();
+                    span.record_timeout(&mut self.tel.recorder, d);
+                    self.tel.registry.inc("carin_requests_timed_out_total");
+                } else {
+                    stats[t].failed += 1;
+                    self.tel.recorder.record(EventKind::Failed { task: t as u32, id });
+                    self.tel.registry.inc("carin_requests_failed_total");
+                }
                 self.note_failure(t);
             }
         }
@@ -689,11 +778,29 @@ impl<E: Inference> ServingCoordinator<E> {
                     self.note_completion(&span, exec_ms, met);
                 }
             }
-            Err(_) => {
-                stats[t].failed += occupancy;
-                for &id in ids.iter().take(occupancy) {
-                    self.tel.recorder.record(EventKind::Failed { task: t as u32, id });
-                    self.tel.registry.inc("carin_requests_failed_total");
+            Err(e) => {
+                if fault_kind_of(&e) == Some(FaultKind::Timeout) {
+                    stats[t].timed_out += occupancy;
+                    let now = Instant::now();
+                    let d = call_deadline(&self.policy, self.slo_ms).unwrap_or_default();
+                    for i in 0..occupancy {
+                        let span = Span {
+                            task: t,
+                            id: ids[i],
+                            submitted: enqueued[i],
+                            admitted: admitted[i],
+                            dispatched,
+                            completed: now,
+                        };
+                        span.record_timeout(&mut self.tel.recorder, d);
+                        self.tel.registry.inc("carin_requests_timed_out_total");
+                    }
+                } else {
+                    stats[t].failed += occupancy;
+                    for &id in ids.iter().take(occupancy) {
+                        self.tel.recorder.record(EventKind::Failed { task: t as u32, id });
+                        self.tel.registry.inc("carin_requests_failed_total");
+                    }
                 }
                 self.note_failure(t);
             }

@@ -1,0 +1,121 @@
+//! Unified error taxonomy for the coordinator/runtime layers.
+//!
+//! Before this module, the serving stack leaked `String` payloads
+//! across thread boundaries (`Feedback::Ready`) and classified
+//! failures by substring-matching `anyhow` chains. [`CarinError`]
+//! gives each failure class a variant so supervision code can branch
+//! on *kind* (a watchdog timeout retries differently from a bad
+//! artifact) and reports can count `timed_out` separately from
+//! `failed` without string sniffing.
+//!
+//! The coordinator layers keep `anyhow::Result` at their public
+//! surface; a `CarinError` travels inside the chain and is recovered
+//! with [`CarinError::find_in`], so intermediate `context()` calls
+//! never erase the classification.
+
+use std::fmt;
+
+/// Classified failure in the serving/runtime stack.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CarinError {
+    /// Artifact problems: missing manifest entry, bad dtype/shape,
+    /// load/compile failure.
+    Artifact(String),
+    /// Executor-side failure during inference (transient or hard).
+    Engine(String),
+    /// A supervised call exceeded its watchdog deadline; the hung
+    /// executor thread was abandoned.
+    Timeout {
+        /// Model stem the call was routed to.
+        stem: String,
+        /// Deadline that fired, in milliseconds.
+        deadline_ms: f64,
+    },
+    /// Invalid configuration (policy, solution, CLI flags).
+    Config(String),
+    /// Filesystem / IO failure.
+    Io(String),
+}
+
+impl CarinError {
+    /// True if this is a watchdog [`CarinError::Timeout`].
+    pub fn is_timeout(&self) -> bool {
+        matches!(self, CarinError::Timeout { .. })
+    }
+
+    /// Short machine-readable kind name (stable; used in telemetry).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            CarinError::Artifact(_) => "artifact",
+            CarinError::Engine(_) => "engine",
+            CarinError::Timeout { .. } => "timeout",
+            CarinError::Config(_) => "config",
+            CarinError::Io(_) => "io",
+        }
+    }
+
+    /// Recover the typed error from anywhere in an `anyhow` chain.
+    ///
+    /// Supervision code wraps engine errors with `context()` while
+    /// retrying; this walks the chain so the original classification
+    /// survives the decoration.
+    pub fn find_in(err: &anyhow::Error) -> Option<&CarinError> {
+        err.chain().find_map(|c| c.downcast_ref::<CarinError>())
+    }
+}
+
+impl fmt::Display for CarinError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CarinError::Artifact(m) => write!(f, "artifact error: {m}"),
+            CarinError::Engine(m) => write!(f, "engine error: {m}"),
+            CarinError::Timeout { stem, deadline_ms } => {
+                write!(f, "inference timed out: {stem} exceeded {deadline_ms:.1} ms deadline")
+            }
+            CarinError::Config(m) => write!(f, "config error: {m}"),
+            CarinError::Io(m) => write!(f, "io error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for CarinError {}
+
+impl From<std::io::Error> for CarinError {
+    fn from(e: std::io::Error) -> Self {
+        CarinError::Io(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::Context;
+
+    #[test]
+    fn display_names_the_kind() {
+        let e = CarinError::Timeout { stem: "scene_fx8".into(), deadline_ms: 12.5 };
+        let s = e.to_string();
+        assert!(s.contains("timed out") && s.contains("scene_fx8"), "{s}");
+        assert_eq!(e.kind(), "timeout");
+        assert!(e.is_timeout());
+        assert!(!CarinError::Engine("x".into()).is_timeout());
+    }
+
+    #[test]
+    fn survives_anyhow_context_chain() {
+        let base = CarinError::Timeout { stem: "audio_fp32".into(), deadline_ms: 3.0 };
+        let err = anyhow::Error::new(base.clone())
+            .context("attempt 2 failed")
+            .context("supervised call");
+        let found = CarinError::find_in(&err).expect("typed error lost in chain");
+        assert_eq!(*found, base);
+    }
+
+    #[test]
+    fn io_errors_convert() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: CarinError = io.into();
+        assert_eq!(e.kind(), "io");
+        assert!(e.to_string().contains("gone"));
+    }
+}

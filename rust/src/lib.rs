@@ -39,6 +39,7 @@ pub mod config;
 pub mod config_spec;
 pub mod coordinator;
 pub mod device;
+pub mod error;
 pub mod harness;
 pub mod manager;
 pub mod moo;
@@ -52,7 +53,9 @@ pub mod zoo;
 pub mod prelude {
     //! Convenience re-exports for examples and tests.
     pub use crate::config;
+    pub use crate::coordinator::{Coordinator, ServeOptions};
     pub use crate::device::{profiles, Device, Engine};
+    pub use crate::error::CarinError;
     pub use crate::manager::{Event, RuntimeManager};
     pub use crate::moo::{
         baselines, rass, Metric, Objective, Problem, Solution, Statistic,

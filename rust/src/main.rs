@@ -18,7 +18,11 @@
 //! `<path>` plus a Prometheus metric snapshot to `<path>.prom`;
 //! `serve --pooled` serves through the per-engine worker pool
 //! (one engine-owning thread per policy engine) instead of the
-//! single-loop coordinator.
+//! single-loop coordinator. Both flavours are built through
+//! [`ServeOptions`] and served behind the [`Coordinator`] trait;
+//! `serve --slo <ms>` tracks a latency SLO and arms the watchdog
+//! (engine calls are abandoned after `SLO × timeout-mult`, tunable with
+//! `serve --timeout-mult <x>`, default 8).
 //! Diagnostics go to stderr through the `CARIN_LOG` leveled logger
 //! (`--log <level>` overrides the environment).
 
@@ -27,7 +31,7 @@ use std::collections::HashMap;
 use anyhow::{anyhow, Result};
 
 use carin::config;
-use carin::coordinator::{run_trace, PooledCoordinator, ServingCoordinator};
+use carin::coordinator::{run_trace, Coordinator, ServeOptions};
 use carin::device::profiles;
 use carin::harness::{self, figures, tables};
 use carin::manager::EventSchedule;
@@ -77,7 +81,7 @@ fn main() {
 fn usage() {
     println!(
         "carin — Constraint-Aware and Responsive Inference (ACM TECS 2024 reproduction)\n\
-         usage: carin <solve|eval|trace|serve|zoo|devices|storage|solvetime> [--uc ucN] [--device p7|s20|a71] [-n N] [--pooled]"
+         usage: carin <solve|eval|trace|serve|zoo|devices|storage|solvetime> [--uc ucN] [--device p7|s20|a71] [-n N] [--pooled] [--slo MS] [--timeout-mult X]"
     );
 }
 
@@ -217,41 +221,67 @@ fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
     let sol = rass::solve(&p);
     println!("design d0: {}", sol.designs[0].describe(&p));
     let manifest = load_manifest(std::path::Path::new("artifacts"))?;
+
+    let mut options = ServeOptions::new()
+        .telemetry_path_opt(opts.get("telemetry").map(std::path::PathBuf::from));
+    if let Some(slo) = opts.get("slo") {
+        options = options.latency_slo_ms(slo.parse::<f64>()?);
+    }
+    if let Some(mult) = opts.get("timeout-mult") {
+        options = options.timeout_mult(mult.parse::<f64>()?);
+    }
+
     let (tx, rx) = std::sync::mpsc::channel();
     let producers = workload::spawn_producers(workload::for_use_case(uc, n), tx, 5, 0.02);
-    let report = if opts.contains_key("pooled") {
-        // each worker constructs its own PJRT CPU engine as the
-        // executable stand-in for its assigned processor
-        let factory = |_: carin::device::Engine| carin::runtime::InferenceEngine::cpu();
-        let mut coord = PooledCoordinator::new(factory, &reg, &sol, manifest)?;
-        let engines: Vec<&str> =
-            sol.policy.engines.iter().map(|e| e.name()).collect();
+
+    // Both flavours run PJRT CPU engines behind a watchdog: when an SLO
+    // is set, a hung execute is abandoned at the per-call deadline on a
+    // sacrificial thread instead of stalling the serve loop.
+    let mut single;
+    let mut pooled;
+    let coord: &mut dyn Coordinator = if opts.contains_key("pooled") {
+        // each worker constructs its own supervised PJRT CPU engine as
+        // the executable stand-in for its assigned processor
+        let factory = |_: carin::device::Engine| {
+            carin::runtime::Watchdog::new(carin::runtime::InferenceEngine::cpu)
+        };
+        pooled = options.build_pooled(factory, &reg, &sol, manifest)?;
+        let engines: Vec<&str> = sol.policy.engines.iter().map(|e| e.name()).collect();
         println!(
             "pooled serving: {} engine workers ({})",
             engines.len(),
             engines.join("+")
         );
-        let report = coord.serve(rx)?;
-        dump_telemetry(opts, coord.telemetry())?;
-        report
+        &mut pooled
     } else {
-        let mut coord = ServingCoordinator::new(&reg, &sol, manifest)?;
-        println!("preloaded {} model variants on PJRT CPU", coord.loaded_models());
-        let report = coord.serve(rx)?;
-        dump_telemetry(opts, coord.telemetry())?;
-        report
+        let engine = carin::runtime::Watchdog::new(carin::runtime::InferenceEngine::cpu)?;
+        single = options.build_with_engine(engine, &reg, &sol, manifest)?;
+        println!("preloaded {} model variants on PJRT CPU", single.loaded_models());
+        &mut single
     };
+    let report = coord.serve(rx)?;
+    if let Some(path) = options.dump_telemetry(coord.telemetry())? {
+        let tel = coord.telemetry();
+        println!(
+            "telemetry: {} events ({} dropped) -> {}, metrics -> {}.prom",
+            tel.recorder.len(),
+            tel.recorder.dropped(),
+            path.display(),
+            path.display()
+        );
+    }
     for h in producers {
         let _ = h.join();
     }
     for t in &report.tasks {
         println!(
-            "task {} [{}]: {} done ({} retried, {} failed, {} shed), exec mean {:.2} ms p95 {:.2} ms, e2e mean {:.2} ms",
+            "task {} [{}]: {} done ({} retried, {} failed, {} timed out, {} shed), exec mean {:.2} ms p95 {:.2} ms, e2e mean {:.2} ms",
             t.task,
             t.artifact,
             t.completed,
             t.retried,
             t.failed,
+            t.timed_out,
             t.shed,
             t.latency_ms.mean,
             t.latency_ms.percentile(95.0),
@@ -268,23 +298,6 @@ fn cmd_serve(opts: &HashMap<String, String>) -> Result<()> {
         report.fallback_switches,
         report.recovered_switches
     );
-    Ok(())
-}
-
-fn dump_telemetry(
-    opts: &HashMap<String, String>,
-    tel: &carin::telemetry::Telemetry,
-) -> Result<()> {
-    if let Some(path) = opts.get("telemetry") {
-        std::fs::write(path, tel.events_jsonl())?;
-        let prom = format!("{path}.prom");
-        std::fs::write(&prom, tel.prometheus())?;
-        println!(
-            "telemetry: {} events ({} dropped) -> {path}, metrics -> {prom}",
-            tel.recorder.len(),
-            tel.recorder.dropped()
-        );
-    }
     Ok(())
 }
 

@@ -105,6 +105,22 @@ impl SwitchingPolicy {
         SwitchingPolicy { engines, rules: vec![design; n_states] }
     }
 
+    /// A policy from an explicit rule table: `rules[state_code]` is the
+    /// design for that environment state, where the code packs the
+    /// troubled/faulted bitmask in `engines` order plus the memory bit
+    /// (so `rules.len()` must be `2^(engines.len() + 1)`). Lets tests
+    /// and benches hand-author small fallback tables (e.g. "CPU bad →
+    /// design 1") without running the solver.
+    pub fn from_rules(engines: Vec<Engine>, rules: Vec<usize>) -> SwitchingPolicy {
+        let n_states = 1usize << (engines.len() + 1);
+        assert_eq!(
+            rules.len(),
+            n_states,
+            "rule table must cover every environment state"
+        );
+        SwitchingPolicy { engines, rules }
+    }
+
     fn state_code(&self, s: EnvState) -> usize {
         let mut code = 0usize;
         for (i, e) in self.engines.iter().enumerate() {

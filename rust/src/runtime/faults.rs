@@ -9,7 +9,20 @@
 //! * *latency spikes* — the call succeeds but burns extra wall-clock;
 //! * *load failures* — compiling/uploading a model fails;
 //! * *outage windows* — a per-stem call-index interval during which every
-//!   call fails (a hard engine outage, used to force fallback switches).
+//!   call fails (a hard engine outage, used to force fallback switches);
+//! * *hangs* — the call stalls for a long wall-clock interval before
+//!   proceeding (a fail-slow executor), either probabilistically
+//!   ([`FaultSpec::with_hangs`]) or for every call until an absolute
+//!   wall-clock instant ([`FaultSpec::with_hang_until`]).
+//!
+//! Hangs are only survivable with supervision: the [`Watchdog`] wrapper
+//! runs every wrapped call on a dedicated sacrificial thread with a
+//! per-call deadline ([`Inference::set_call_deadline`]). When the
+//! deadline fires the supervisor abandons the hung thread (its late
+//! result is discarded via a generation counter and a dropped reply
+//! channel) and surfaces [`crate::error::CarinError::Timeout`] /
+//! [`FaultKind::Timeout`]; the next call respawns a fresh executor via
+//! the factory and replays the resident model set.
 //!
 //! [`StubEngine`] is a PJRT-free executor (zero logits, optional fixed
 //! latency) so chaos tests and benches run without `make artifacts`;
@@ -18,12 +31,15 @@
 
 use std::collections::HashMap;
 use std::fmt;
-use std::time::Duration;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use super::artifact::{ArtifactMeta, DType, TensorSpec};
 use super::engine::{InferenceEngine, Tensor};
+use crate::error::CarinError;
 use crate::util::Rng;
 use crate::zoo::{Registry, Scheme};
 
@@ -46,6 +62,12 @@ pub trait Inference {
     fn fault_stats(&self) -> Option<FaultStats> {
         None
     }
+    /// Bound subsequent calls with a wall-clock deadline. Only
+    /// supervising executors ([`Watchdog`]) act on it; plain executors
+    /// ignore it and decorators ([`FaultInjector`]) forward it, so the
+    /// coordinators can set per-task deadlines without knowing the
+    /// executor stack. `None` removes the bound.
+    fn set_call_deadline(&mut self, _deadline: Option<Duration>) {}
 }
 
 impl Inference for InferenceEngine {
@@ -79,6 +101,8 @@ pub enum FaultKind {
     Outage,
     /// Model load/compile failure.
     Load,
+    /// A supervised call exceeded its watchdog deadline (fail-slow hang).
+    Timeout,
 }
 
 impl FaultKind {
@@ -87,8 +111,19 @@ impl FaultKind {
             FaultKind::Transient => "transient",
             FaultKind::Outage => "outage",
             FaultKind::Load => "load",
+            FaultKind::Timeout => "timeout",
         }
     }
+}
+
+/// Classify an engine error into the fault taxonomy: watchdog timeouts
+/// map to [`FaultKind::Timeout`]; injected faults report their own kind;
+/// anything else (a real executor error) is `None`.
+pub fn fault_kind_of(err: &anyhow::Error) -> Option<FaultKind> {
+    if CarinError::find_in(err).is_some_and(CarinError::is_timeout) {
+        return Some(FaultKind::Timeout);
+    }
+    err.downcast_ref::<InjectedFault>().map(|f| f.kind)
 }
 
 /// The error type injected faults surface as; supervised execution (and
@@ -130,6 +165,13 @@ pub struct FaultSpec {
     /// Inclusive per-stem call-index window `[from, to]` (1-based) during
     /// which every inference fails — a hard outage.
     pub outage: Option<(u64, u64)>,
+    /// Per-call probability of a hang (the call stalls `hang_ms` before
+    /// proceeding — a fail-slow executor, not an error).
+    pub hang_p: f64,
+    /// Stall duration per hang, ms.
+    pub hang_ms: f64,
+    /// If set, *every* call before this wall-clock instant hangs.
+    pub hang_until: Option<Instant>,
 }
 
 impl FaultSpec {
@@ -156,6 +198,26 @@ impl FaultSpec {
         self.outage = Some((from, to));
         self
     }
+
+    /// Add probabilistic hangs: with probability `p` a call stalls `ms`
+    /// of wall-clock before proceeding. The call itself still succeeds
+    /// (late), so only a [`Watchdog`] deadline turns it into a fault.
+    pub fn with_hangs(mut self, p: f64, ms: f64) -> FaultSpec {
+        self.hang_p = p;
+        self.hang_ms = ms;
+        self
+    }
+
+    /// Hang *every* call (each stalling `ms`) until the absolute
+    /// wall-clock instant `until`. Unlike a call-index outage window
+    /// this survives watchdog respawns — a freshly-built injector has
+    /// reset call counts but the wall clock keeps running — so the hang
+    /// window genuinely ends and recovery probes can heal the engine.
+    pub fn with_hang_until(mut self, until: Instant, ms: f64) -> FaultSpec {
+        self.hang_until = Some(until);
+        self.hang_ms = ms;
+        self
+    }
 }
 
 /// Running injection counters (what the harness actually did).
@@ -165,6 +227,7 @@ pub struct FaultStats {
     pub injected_errors: u64,
     pub injected_spikes: u64,
     pub failed_loads: u64,
+    pub injected_hangs: u64,
 }
 
 impl FaultStats {
@@ -175,6 +238,7 @@ impl FaultStats {
         self.injected_errors += other.injected_errors;
         self.injected_spikes += other.injected_spikes;
         self.failed_loads += other.failed_loads;
+        self.injected_hangs += other.injected_hangs;
     }
 }
 
@@ -256,6 +320,16 @@ impl<E: Inference> Inference for FaultInjector<E> {
                 .into());
             }
         }
+        let hang = spec.hang_until.is_some_and(|until| Instant::now() < until)
+            || (spec.hang_p > 0.0 && self.rng.chance(spec.hang_p));
+        if hang {
+            self.stats.injected_hangs += 1;
+            crate::log_trace!(
+                "inject hang on {stem} (call #{call}, {:.0} ms)",
+                spec.hang_ms
+            );
+            std::thread::sleep(Duration::from_secs_f64(spec.hang_ms.max(0.0) / 1000.0));
+        }
         if spec.transient_p > 0.0 && self.rng.chance(spec.transient_p) {
             self.stats.injected_errors += 1;
             crate::log_trace!("inject transient fault on {stem} (call #{call})");
@@ -300,7 +374,337 @@ impl<E: Inference> Inference for FaultInjector<E> {
     }
 
     fn fault_stats(&self) -> Option<FaultStats> {
-        Some(self.stats.clone())
+        let mut stats = self.stats.clone();
+        if let Some(inner) = self.inner.fault_stats() {
+            stats.absorb(&inner);
+        }
+        Some(stats)
+    }
+
+    fn set_call_deadline(&mut self, deadline: Option<Duration>) {
+        self.inner.set_call_deadline(deadline)
+    }
+}
+
+/// Supervision counters for a [`Watchdog`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WatchdogStats {
+    /// Calls whose deadline fired (the executor thread was abandoned).
+    pub timeouts: u64,
+    /// Fresh executor threads spawned after an abandonment.
+    pub respawns: u64,
+}
+
+/// Work shipped to the sacrificial executor thread. Replies are tagged
+/// with the generation the job was issued under, so a reply from before
+/// a respawn can never be mistaken for the current call's result.
+enum Job {
+    Infer { stem: String, input: Tensor, generation: u64 },
+    Load { meta: Box<ArtifactMeta>, generation: u64 },
+    Unload { stem: String },
+    Stats { generation: u64 },
+}
+
+enum Reply {
+    Ready { generation: u64, result: Result<()> },
+    Infer { generation: u64, result: Result<Tensor> },
+    Load { generation: u64, result: Result<()> },
+    Stats { generation: u64, stats: Option<FaultStats> },
+}
+
+impl Reply {
+    fn generation(&self) -> u64 {
+        match self {
+            Reply::Ready { generation, .. }
+            | Reply::Infer { generation, .. }
+            | Reply::Load { generation, .. }
+            | Reply::Stats { generation, .. } => *generation,
+        }
+    }
+}
+
+/// Channel pair linking the supervisor to the live executor thread.
+struct Link {
+    tx: mpsc::Sender<Job>,
+    rx: mpsc::Receiver<Reply>,
+}
+
+/// How long a handshake / model load may take before the supervisor
+/// gives up on the executor thread (loads compile artifacts, so they
+/// get far more slack than inference deadlines).
+const WATCHDOG_SETUP_WAIT: Duration = Duration::from_secs(30);
+
+/// Watchdog-based timeout supervision: runs every wrapped call on a
+/// dedicated sacrificial thread with a per-call wall-clock deadline.
+///
+/// The wrapped executor is built *inside* that thread by the factory
+/// closure (so `E` never crosses a thread boundary and needs no `Send`
+/// bound). When a call exceeds the deadline set via
+/// [`Inference::set_call_deadline`]:
+///
+/// 1. the call fails with [`CarinError::Timeout`] (classified as
+///    [`FaultKind::Timeout`] by [`fault_kind_of`]), which supervision
+///    upstream counts toward consecutive-failure fault raising;
+/// 2. the hung thread is **abandoned** — its reply channel is dropped
+///    and the generation counter advances, so a late completion can
+///    never be delivered to a newer request; the thread dies quietly
+///    once its stalled call finally returns;
+/// 3. the next call respawns a fresh executor via the factory and
+///    replays the resident model set (mirrored supervisor-side), so the
+///    replacement is route-complete before it executes anything.
+///
+/// Fault-injection counters accumulated on an abandoned thread are lost
+/// with it; [`Inference::fault_stats`] reports the live thread's view.
+pub struct Watchdog<E: Inference + 'static> {
+    factory: Arc<dyn Fn() -> Result<E> + Send + Sync>,
+    link: Option<Link>,
+    /// Bumped on every (re)spawn; replies from older generations are
+    /// discarded unread.
+    generation: u64,
+    deadline: Option<Duration>,
+    /// Supervisor-side mirror of the resident set, replayed into every
+    /// respawned executor.
+    resident: HashMap<String, ArtifactMeta>,
+    pub stats: WatchdogStats,
+}
+
+impl<E: Inference + 'static> Watchdog<E> {
+    /// Wrap the executors produced by `factory` with timeout
+    /// supervision. Spawns the first executor thread eagerly so factory
+    /// errors surface here rather than on the first call.
+    pub fn new<F>(factory: F) -> Result<Watchdog<E>>
+    where
+        F: Fn() -> Result<E> + Send + Sync + 'static,
+    {
+        let mut dog = Watchdog {
+            factory: Arc::new(factory),
+            link: None,
+            generation: 0,
+            deadline: None,
+            resident: HashMap::new(),
+            stats: WatchdogStats::default(),
+        };
+        dog.ensure_thread()?;
+        Ok(dog)
+    }
+
+    /// Builder-style deadline (same as [`Inference::set_call_deadline`]).
+    pub fn with_deadline(mut self, deadline: Duration) -> Watchdog<E> {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// The active per-call deadline, if any.
+    pub fn deadline(&self) -> Option<Duration> {
+        self.deadline
+    }
+
+    /// Spawn (or respawn) the executor thread and replay the resident
+    /// set. No-op when a live thread exists.
+    fn ensure_thread(&mut self) -> Result<()> {
+        if self.link.is_some() {
+            return Ok(());
+        }
+        if self.generation > 0 {
+            self.stats.respawns += 1;
+        }
+        self.generation += 1;
+        let generation = self.generation;
+        let (jtx, jrx) = mpsc::channel::<Job>();
+        let (rtx, rrx) = mpsc::channel::<Reply>();
+        let factory = Arc::clone(&self.factory);
+        std::thread::Builder::new()
+            .name(format!("carin-watchdog-{generation}"))
+            .spawn(move || {
+                let mut engine = match factory() {
+                    Ok(e) => {
+                        let _ = rtx.send(Reply::Ready { generation, result: Ok(()) });
+                        e
+                    }
+                    Err(e) => {
+                        let _ = rtx.send(Reply::Ready { generation, result: Err(e) });
+                        return;
+                    }
+                };
+                while let Ok(job) = jrx.recv() {
+                    let reply = match job {
+                        Job::Infer { stem, input, generation } => Reply::Infer {
+                            generation,
+                            result: engine.infer(&stem, &input),
+                        },
+                        Job::Load { meta, generation } => Reply::Load {
+                            generation,
+                            result: engine.load(&meta),
+                        },
+                        Job::Unload { stem } => {
+                            engine.unload(&stem);
+                            continue;
+                        }
+                        Job::Stats { generation } => Reply::Stats {
+                            generation,
+                            stats: engine.fault_stats(),
+                        },
+                    };
+                    if rtx.send(reply).is_err() {
+                        // abandoned: the supervisor moved on to a new
+                        // generation while this call was stalled
+                        return;
+                    }
+                }
+            })
+            .map_err(|e| anyhow!("watchdog: failed to spawn executor thread: {e}"))?;
+        let link = Link { tx: jtx, rx: rrx };
+        match link.rx.recv_timeout(WATCHDOG_SETUP_WAIT) {
+            Ok(Reply::Ready { result: Ok(()), .. }) => {}
+            Ok(Reply::Ready { result: Err(e), .. }) => {
+                return Err(e.context("watchdog: executor factory failed"));
+            }
+            Ok(_) => return Err(anyhow!("watchdog: unexpected reply during handshake")),
+            Err(_) => return Err(anyhow!("watchdog: executor thread never came up")),
+        }
+        // replay the resident set so the fresh executor is route-complete
+        for meta in self.resident.values() {
+            link.tx
+                .send(Job::Load { meta: Box::new(meta.clone()), generation })
+                .map_err(|_| anyhow!("watchdog: executor thread died during replay"))?;
+            match link.rx.recv_timeout(WATCHDOG_SETUP_WAIT) {
+                Ok(Reply::Load { result: Ok(()), .. }) => {}
+                Ok(Reply::Load { result: Err(e), .. }) => {
+                    return Err(e.context(format!("watchdog: replaying {} failed", meta.stem)));
+                }
+                Ok(_) => return Err(anyhow!("watchdog: unexpected reply during replay")),
+                Err(_) => {
+                    return Err(anyhow!("watchdog: executor hung replaying {}", meta.stem))
+                }
+            }
+        }
+        self.link = Some(link);
+        Ok(())
+    }
+
+    /// Wait for the current generation's reply, discarding stale ones.
+    /// On deadline expiry the link is dropped (abandoning the thread)
+    /// and the caller maps the timeout to an error.
+    fn await_reply(&mut self, wait: Option<Duration>) -> Result<Reply, mpsc::RecvTimeoutError> {
+        let started = Instant::now();
+        loop {
+            let link = self.link.as_ref().ok_or(mpsc::RecvTimeoutError::Disconnected)?;
+            let reply = match wait {
+                Some(d) => {
+                    let left = d.checked_sub(started.elapsed()).unwrap_or(Duration::ZERO);
+                    link.rx.recv_timeout(left)?
+                }
+                None => link.rx.recv().map_err(|_| mpsc::RecvTimeoutError::Disconnected)?,
+            };
+            if reply.generation() == self.generation {
+                return Ok(reply);
+            }
+            // stale generation: a reply raced an abandonment; drop it
+        }
+    }
+
+    /// Abandon the (presumed hung) executor thread and surface the
+    /// timeout as a typed error.
+    fn on_timeout(&mut self, stem: &str, deadline: Duration) -> anyhow::Error {
+        self.stats.timeouts += 1;
+        // dropping the link closes the reply channel: the stalled call's
+        // eventual result has nowhere to go, and the thread exits on its
+        // failed send
+        self.link = None;
+        crate::log_debug!(
+            "watchdog: {stem} exceeded {:.1} ms deadline, executor thread abandoned",
+            deadline.as_secs_f64() * 1000.0
+        );
+        anyhow::Error::new(CarinError::Timeout {
+            stem: stem.to_string(),
+            deadline_ms: deadline.as_secs_f64() * 1000.0,
+        })
+    }
+}
+
+impl<E: Inference + 'static> Inference for Watchdog<E> {
+    fn infer(&mut self, stem: &str, input: &Tensor) -> Result<Tensor> {
+        self.ensure_thread()?;
+        let generation = self.generation;
+        self.link
+            .as_ref()
+            .expect("link after ensure_thread")
+            .tx
+            .send(Job::Infer { stem: stem.to_string(), input: input.clone(), generation })
+            .map_err(|_| anyhow!("watchdog: executor thread terminated"))?;
+        match self.await_reply(self.deadline) {
+            Ok(Reply::Infer { result, .. }) => result,
+            Ok(_) => Err(anyhow!("watchdog: mismatched reply for infer")),
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                let d = self.deadline.expect("timeout implies a deadline");
+                Err(self.on_timeout(stem, d))
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                self.link = None;
+                Err(anyhow!("watchdog: executor thread died mid-call"))
+            }
+        }
+    }
+
+    fn load(&mut self, meta: &ArtifactMeta) -> Result<()> {
+        self.ensure_thread()?;
+        let generation = self.generation;
+        self.link
+            .as_ref()
+            .expect("link after ensure_thread")
+            .tx
+            .send(Job::Load { meta: Box::new(meta.clone()), generation })
+            .map_err(|_| anyhow!("watchdog: executor thread terminated"))?;
+        match self.await_reply(Some(WATCHDOG_SETUP_WAIT)) {
+            Ok(Reply::Load { result, .. }) => {
+                if result.is_ok() {
+                    self.resident.insert(meta.stem.clone(), meta.clone());
+                }
+                result
+            }
+            Ok(_) => Err(anyhow!("watchdog: mismatched reply for load")),
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                Err(self.on_timeout(&meta.stem, WATCHDOG_SETUP_WAIT))
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                self.link = None;
+                Err(anyhow!("watchdog: executor thread died mid-load"))
+            }
+        }
+    }
+
+    fn unload(&mut self, stem: &str) {
+        self.resident.remove(stem);
+        if let Some(link) = &self.link {
+            let _ = link.tx.send(Job::Unload { stem: stem.to_string() });
+        }
+    }
+
+    fn is_loaded(&self, stem: &str) -> bool {
+        self.resident.contains_key(stem)
+    }
+
+    fn loaded_count(&self) -> usize {
+        self.resident.len()
+    }
+
+    fn fault_stats(&self) -> Option<FaultStats> {
+        // counters on an abandoned thread are lost with it; query the
+        // live one (bounded, in case it is mid-stall)
+        let link = self.link.as_ref()?;
+        let generation = self.generation;
+        link.tx.send(Job::Stats { generation }).ok()?;
+        loop {
+            match link.rx.recv_timeout(WATCHDOG_SETUP_WAIT) {
+                Ok(Reply::Stats { generation: g, stats }) if g == generation => return stats,
+                Ok(_) => continue,
+                Err(_) => return None,
+            }
+        }
+    }
+
+    fn set_call_deadline(&mut self, deadline: Option<Duration>) {
+        self.deadline = deadline;
     }
 }
 
@@ -524,6 +928,107 @@ mod tests {
         inj.set_default(FaultSpec::default());
         inj.load(&meta).unwrap();
         assert!(inj.is_loaded(&meta.stem));
+    }
+
+    #[test]
+    fn hangs_stall_but_succeed() {
+        let (e, meta) = loaded_stub();
+        let mut inj = FaultInjector::new(e, 13);
+        inj.set_default(FaultSpec::default().with_hangs(1.0, 30.0));
+        let input = random_input(&meta, 1);
+        let t0 = std::time::Instant::now();
+        // without a watchdog a hang is just a very late success
+        inj.infer(&meta.stem, &input).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+        assert_eq!(inj.stats.injected_hangs, 1);
+        assert_eq!(inj.fault_stats().unwrap().injected_hangs, 1);
+    }
+
+    #[test]
+    fn watchdog_times_out_abandons_and_respawns() {
+        let reg = Registry::paper();
+        let meta = synthetic_manifest(&reg)[0].clone();
+        let stem = meta.stem.clone();
+        let hang_until = Instant::now() + Duration::from_millis(150);
+        let spec_stem = stem.clone();
+        let mut dog = Watchdog::new(move || {
+            let mut inj = FaultInjector::new(StubEngine::new(), 11);
+            inj.set_for(&spec_stem, FaultSpec::default().with_hang_until(hang_until, 5_000.0));
+            Ok(inj)
+        })
+        .unwrap();
+        dog.set_call_deadline(Some(Duration::from_millis(25)));
+        dog.load(&meta).unwrap();
+        let input = random_input(&meta, 1);
+
+        let err = dog.infer(&stem, &input).unwrap_err();
+        let typed = CarinError::find_in(&err).expect("typed timeout in chain");
+        assert!(typed.is_timeout());
+        assert_eq!(fault_kind_of(&err), Some(FaultKind::Timeout));
+        assert_eq!(dog.stats.timeouts, 1);
+        // the mirror survives the abandonment, so the respawned executor
+        // will be route-complete
+        assert!(dog.is_loaded(&stem));
+        assert_eq!(dog.loaded_count(), 1);
+
+        // after the wall-clock hang window ends, the next call respawns
+        // a fresh executor, replays the resident set and succeeds
+        std::thread::sleep(Duration::from_millis(160));
+        let out = dog.infer(&stem, &input).unwrap();
+        assert_eq!(out.len(), meta.outputs[0].numel());
+        assert_eq!(dog.stats.respawns, 1);
+    }
+
+    #[test]
+    fn watchdog_late_result_never_unblocks_newer_calls() {
+        let reg = Registry::paper();
+        let manifest = synthetic_manifest(&reg);
+        let (a, b) = (manifest[0].clone(), manifest[1].clone());
+        let hang_stem = a.stem.clone();
+        let mut dog = Watchdog::new(move || {
+            let mut inj = FaultInjector::new(StubEngine::new(), 3);
+            // stem A hangs on every call, far longer than the deadline;
+            // stem B is clean
+            inj.set_for(&hang_stem, FaultSpec::default().with_hangs(1.0, 500.0));
+            Ok(inj)
+        })
+        .unwrap();
+        dog.set_call_deadline(Some(Duration::from_millis(20)));
+        dog.load(&a).unwrap();
+        dog.load(&b).unwrap();
+        let err = dog.infer(&a.stem, &random_input(&a, 1)).unwrap_err();
+        assert_eq!(fault_kind_of(&err), Some(FaultKind::Timeout));
+        // the very next call runs on a fresh thread immediately — it is
+        // not queued behind the stalled call, and the stalled call's
+        // eventual (discarded) result can never surface here
+        let t0 = Instant::now();
+        let out = dog.infer(&b.stem, &random_input(&b, 1)).unwrap();
+        assert!(t0.elapsed() < Duration::from_millis(250), "stalled behind hung call");
+        assert_eq!(out.len(), b.outputs[0].numel());
+        assert_eq!(dog.stats.timeouts, 1);
+        assert_eq!(dog.stats.respawns, 1);
+    }
+
+    #[test]
+    fn watchdog_without_deadline_passes_through() {
+        let reg = Registry::paper();
+        let meta = synthetic_manifest(&reg)[0].clone();
+        let mut dog = Watchdog::new(|| Ok(StubEngine::new())).unwrap();
+        dog.load(&meta).unwrap();
+        let out = dog.infer(&meta.stem, &random_input(&meta, 1)).unwrap();
+        assert_eq!(out.len(), meta.outputs[0].numel());
+        assert_eq!(dog.stats.timeouts, 0);
+        assert_eq!(dog.stats.respawns, 0);
+        // fault stats forward through the sacrificial thread
+        assert!(dog.fault_stats().is_none()); // StubEngine has none
+        dog.unload(&meta.stem);
+        assert!(!dog.is_loaded(&meta.stem));
+    }
+
+    #[test]
+    fn watchdog_surfaces_factory_failure() {
+        let err = Watchdog::<StubEngine>::new(|| Err(anyhow!("no device"))).unwrap_err();
+        assert!(err.to_string().contains("factory failed"), "{err:#}");
     }
 
     #[test]

@@ -17,6 +17,6 @@ pub mod faults;
 pub use artifact::{load_manifest, ArtifactMeta, DType};
 pub use engine::{InferenceEngine, LoadedModel, Tensor};
 pub use faults::{
-    synthetic_manifest, FaultInjector, FaultKind, FaultSpec, FaultStats, Inference,
-    InjectedFault, StubEngine,
+    fault_kind_of, synthetic_manifest, FaultInjector, FaultKind, FaultSpec, FaultStats,
+    Inference, InjectedFault, StubEngine, Watchdog, WatchdogStats,
 };

@@ -26,6 +26,10 @@ pub enum EventKind {
     Shed { task: u32, id: u64 },
     /// Request failed after retries were exhausted.
     Failed { task: u32, id: u64 },
+    /// Request abandoned after retries were exhausted and the final
+    /// attempt exceeded its watchdog deadline (the hung executor thread
+    /// was abandoned; `deadline_ns` is the per-call bound that fired).
+    TimedOut { task: u32, id: u64, deadline_ns: u64 },
     /// Request finished, with its span breakdown (`queue` = channel
     /// wait, `batch` = batcher wait, `exec` = engine time incl. retries).
     Completed {
@@ -70,6 +74,7 @@ impl EventKind {
             EventKind::Retried { .. } => "retried",
             EventKind::Shed { .. } => "shed",
             EventKind::Failed { .. } => "failed",
+            EventKind::TimedOut { .. } => "timed_out",
             EventKind::Completed { .. } => "completed",
             EventKind::FaultRaised { .. } => "fault_raised",
             EventKind::FaultCleared { .. } => "fault_cleared",

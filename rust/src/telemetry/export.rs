@@ -33,6 +33,11 @@ pub fn event_to_json(ev: &Event) -> Json {
             pairs.push(("task", num(task as f64)));
             pairs.push(("id", num(id as f64)));
         }
+        EventKind::TimedOut { task, id, deadline_ns } => {
+            pairs.push(("task", num(task as f64)));
+            pairs.push(("id", num(id as f64)));
+            pairs.push(("deadline_ns", num(deadline_ns as f64)));
+        }
         EventKind::Dispatched { task, occupancy } => {
             pairs.push(("task", num(task as f64)));
             pairs.push(("occupancy", num(occupancy as f64)));

@@ -20,6 +20,7 @@
 //! | `retried` | engine call needed > 1 attempt |
 //! | `shed` | request dropped at dequeue (deadline unreachable) |
 //! | `failed` | retries exhausted |
+//! | `timed_out` | retries exhausted with the final attempt abandoned by the watchdog deadline |
 //! | `completed` | request done, with queue/batch/exec/total span ns |
 //! | `fault_raised` | consecutive failures crossed the fault threshold |
 //! | `probe` | off-path health probe of a faulted route |

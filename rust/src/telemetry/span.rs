@@ -2,7 +2,7 @@
 //! through the serving pipeline, and the queue/batch/execute/total
 //! breakdown derived from them.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::event::EventKind;
 use super::Recorder;
@@ -63,6 +63,24 @@ impl Span {
     pub fn record(&self, rec: &mut Recorder, deadline_met: bool) {
         let t = rec.ns_of(self.completed);
         rec.record_at(t, self.completed_kind(deadline_met));
+    }
+
+    /// The [`EventKind::TimedOut`] record of this span: the request's
+    /// final engine attempt was abandoned by the watchdog `deadline`
+    /// after dispatch (`completed` marks when the deadline fired, so
+    /// the queue/batch phases stay comparable with completed spans).
+    pub fn timed_out_kind(&self, deadline: Duration) -> EventKind {
+        EventKind::TimedOut {
+            task: self.task as u32,
+            id: self.id,
+            deadline_ns: deadline.as_nanos() as u64,
+        }
+    }
+
+    /// Record this span's timeout event, stamped at `completed`.
+    pub fn record_timeout(&self, rec: &mut Recorder, deadline: Duration) {
+        let t = rec.ns_of(self.completed);
+        rec.record_at(t, self.timed_out_kind(deadline));
     }
 }
 

@@ -13,12 +13,13 @@
 //! report.
 
 use std::sync::mpsc;
+use std::time::{Duration, Instant};
 
 use carin::config;
-use carin::coordinator::{PooledCoordinator, ServingCoordinator};
+use carin::coordinator::{FaultPolicy, ServeOptions};
 use carin::device::profiles;
 use carin::moo::rass::{self, EnvState};
-use carin::runtime::{synthetic_manifest, FaultInjector, FaultSpec, StubEngine};
+use carin::runtime::{synthetic_manifest, FaultInjector, FaultSpec, StubEngine, Watchdog};
 use carin::telemetry::EventKind;
 use carin::util::json::Json;
 use carin::workload;
@@ -46,8 +47,9 @@ fn uc1_serving_survives_transient_faults_and_an_outage() {
     let stem = calm_stem(&reg, &sol, 0);
     inj.set_for(&stem, FaultSpec::transient(0.10).with_outage(30, 44));
 
-    let mut coord =
-        ServingCoordinator::with_engine(inj, &reg, &sol, manifest).expect("preload");
+    let mut coord = ServeOptions::new()
+        .build_with_engine(inj, &reg, &sol, manifest)
+        .expect("preload");
 
     let n = 240;
     let (tx, rx) = mpsc::channel();
@@ -59,7 +61,7 @@ fn uc1_serving_survives_transient_faults_and_an_outage() {
         h.join().unwrap();
     }
 
-    let admitted = report.total_requests + report.failed;
+    let admitted = report.total_requests + report.failed + report.timed_out;
     assert_eq!(admitted + report.shed, n, "every request accounted for");
     assert!(report.total_requests > 0, "nothing completed");
     // >= 95% of admitted (non-shed) requests succeed despite 10%
@@ -175,7 +177,9 @@ fn outage_on_one_engine_does_not_stall_the_other() {
         inj.set_for(&stem0, FaultSpec::transient(0.0).with_outage(10, 1_000_000));
         Ok(inj)
     };
-    let mut coord = PooledCoordinator::new(factory, &reg, &sol, manifest).expect("preload");
+    let mut coord = ServeOptions::new()
+        .build_pooled(factory, &reg, &sol, manifest)
+        .expect("preload");
 
     let n = 120;
     let (tx, rx) = mpsc::channel();
@@ -223,6 +227,129 @@ fn outage_on_one_engine_does_not_stall_the_other() {
     );
 }
 
+/// Watchdog supervision end to end (the tentpole acceptance test): one
+/// engine's route hangs — calls stall, they do not error — so only the
+/// per-call deadline can turn the stall into a signal. The pooled
+/// coordinator must classify the stalls as timeouts, raise the fault
+/// within the debounce window, take the hand-authored fallback design,
+/// keep the healthy engine draining throughout, and switch back to the
+/// calm design once probes pass after the hang window ends.
+#[test]
+fn hung_engine_times_out_faults_over_and_recovers() {
+    let reg = Registry::paper();
+    let sol = config::pinned_uc3_fallback_solution(&reg);
+    let manifest = synthetic_manifest(&reg);
+
+    // task 0's CPU route hangs every call for 10 s of wall clock — far
+    // past any deadline — until `hang_until`. The wall-clock window (not
+    // a call-index one) survives watchdog respawns: a fresh injector has
+    // reset call counts, but the clock keeps running, so probes really
+    // do start succeeding once the window closes.
+    let stem0 = calm_stem(&reg, &sol, 0);
+    let hang_until = Instant::now() + Duration::from_millis(400);
+    let factory = move |_: carin::device::Engine| {
+        let stem = stem0.clone();
+        Watchdog::new(move || {
+            let mut inj = FaultInjector::new(StubEngine::with_latency(1.0), 23);
+            inj.set_for(&stem, FaultSpec::transient(0.0).with_hang_until(hang_until, 10_000.0));
+            Ok(inj)
+        })
+    };
+    // tight supervision so the test stays fast: 20 ms deadlines, one
+    // attempt per call, fault after 2 consecutive terminal timeouts
+    let policy = FaultPolicy {
+        max_attempts: 1,
+        fault_threshold: 2,
+        probe_interval: 4,
+        timeout_mult: 2.0,
+        timeout_floor: Duration::from_millis(20),
+        ..FaultPolicy::default()
+    };
+    let mut coord = ServeOptions::new()
+        .fault_policy(policy)
+        .latency_slo_ms(10.0)
+        .build_pooled(factory, &reg, &sol, manifest)
+        .expect("preload");
+
+    // paced arrivals (5% of real time) so admissions — and with them
+    // probes and monitor ticks — keep flowing well past the hang window
+    let n = 60;
+    let (tx, rx) = mpsc::channel();
+    let producers =
+        workload::spawn_producers(workload::for_use_case("uc3", n), tx, 29, 0.05);
+    let report = coord.serve(rx).expect("pool must survive a hung engine");
+    for h in producers {
+        h.join().unwrap();
+    }
+
+    // timeouts are their own terminal bucket, disjoint from failures
+    assert!(report.timed_out > 0, "hung route never produced a timeout: {report:?}");
+    assert_eq!(
+        report.total_requests + report.failed + report.timed_out + report.shed,
+        2 * n,
+        "every request accounted for"
+    );
+    let t1 = &report.tasks[1];
+    assert_eq!(t1.failed, 0, "healthy GPU task failed");
+    assert_eq!(t1.timed_out, 0, "healthy GPU task timed out");
+
+    // supervision story, in causal order: a timeout classified, the
+    // fault raised, the fallback design taken, a probe answered, the
+    // fault cleared, the calm design restored
+    let events = coord.telemetry().recorder.events();
+    let after = |from: usize, what: &str, pred: fn(&EventKind) -> bool| -> usize {
+        events[from..]
+            .iter()
+            .position(|e| pred(&e.kind))
+            .map(|i| i + from)
+            .unwrap_or_else(|| panic!("no {what} event at/after index {from}"))
+    };
+    let i_to = after(0, "timed_out", |k| matches!(k, EventKind::TimedOut { task: 0, .. }));
+    let i_fault = after(i_to, "fault_raised", |k| matches!(k, EventKind::FaultRaised { .. }));
+    let i_fall = after(i_fault, "fallback switch", |k| {
+        matches!(k, EventKind::Switch { fallback: true, .. })
+    });
+    let i_probe = after(i_fall, "probe", |k| matches!(k, EventKind::Probe { .. }));
+    let i_clear = after(i_probe, "fault_cleared", |k| {
+        matches!(k, EventKind::FaultCleared { .. })
+    });
+    let i_recov = after(i_clear, "recovery switch", |k| {
+        matches!(k, EventKind::Switch { fallback: false, .. })
+    });
+    assert!(report.fallback_switches >= 1 && report.recovered_switches >= 1);
+    // the run ends back on the calm design: probes healed the hang
+    assert_eq!(coord.current_design(), 0, "did not recover to the calm design");
+    // the fallback switch targeted the hand-authored all-GPU design
+    if let EventKind::Switch { to, .. } = events[i_fall].kind {
+        assert_eq!(to, 1, "fallback switch did not target the cpu-fallback design");
+    }
+
+    // cross-engine isolation: the GPU queue kept draining between the
+    // first timeout and the fault clearing — the hung CPU route never
+    // stalled its neighbour
+    let (t_first, t_clear) = (events[i_to].t_ns, events[i_clear].t_ns);
+    let concurrent = events
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::Completed { task: 1, .. }))
+        .filter(|e| e.t_ns > t_first && e.t_ns < t_clear)
+        .count();
+    assert!(
+        concurrent > 0,
+        "no GPU completion overlapped the CPU hang window [{t_first}, {t_clear}] ns"
+    );
+    assert!(i_clear < i_recov, "recovery switch preceded the fault clearing");
+
+    // counters: per-attempt engine timeouts cover the per-request
+    // terminal ones, and both survive the worker-shard merge into the
+    // Prometheus export
+    let m = &coord.telemetry().registry;
+    assert_eq!(m.counter("carin_requests_timed_out_total"), report.timed_out as u64);
+    assert!(m.counter("carin_engine_timeouts_total") >= report.timed_out as u64);
+    let prom = coord.telemetry().prometheus();
+    assert!(prom.contains("carin_engine_timeouts_total"));
+    assert!(prom.contains("carin_requests_timed_out_total"));
+}
+
 #[test]
 fn clean_run_sheds_and_fails_nothing() {
     let reg = Registry::paper();
@@ -231,9 +358,9 @@ fn clean_run_sheds_and_fails_nothing() {
     let sol = rass::solve(&p);
     let manifest = synthetic_manifest(&reg);
 
-    let mut coord =
-        ServingCoordinator::with_engine(StubEngine::new(), &reg, &sol, manifest)
-            .expect("preload");
+    let mut coord = ServeOptions::new()
+        .build_with_engine(StubEngine::new(), &reg, &sol, manifest)
+        .expect("preload");
     let (tx, rx) = mpsc::channel();
     let producers =
         workload::spawn_producers(workload::for_use_case("uc1", 80), tx, 3, 0.0);
@@ -243,6 +370,7 @@ fn clean_run_sheds_and_fails_nothing() {
     }
     assert_eq!(report.total_requests, 80);
     assert_eq!(report.failed, 0);
+    assert_eq!(report.timed_out, 0);
     assert_eq!(report.shed, 0);
     assert_eq!(report.retried, 0);
     assert_eq!(report.fallback_switches, 0);

@@ -1,0 +1,93 @@
+//! Trait-level conformance: both serving front-ends — the single-engine
+//! [`carin::coordinator::ServingCoordinator`] and the per-engine
+//! [`carin::coordinator::PooledCoordinator`] — are driven through the
+//! object-safe [`Coordinator`] trait with identical options and an
+//! identical seeded workload, and must both uphold the report contract:
+//!
+//! * conservation — `completed + failed + timed_out + shed` covers every
+//!   submitted request exactly once;
+//! * `goodput_rps <= throughput_rps` (deadline-met completions are a
+//!   subset of completions);
+//! * the telemetry registry agrees with the report on the terminal
+//!   taxonomy.
+
+use std::sync::mpsc;
+
+use carin::config;
+use carin::coordinator::{Coordinator, FaultPolicy, ServeOptions, ServeReport};
+use carin::device::Engine;
+use carin::runtime::{synthetic_manifest, StubEngine};
+use carin::workload;
+use carin::zoo::Registry;
+
+const N_PER_TASK: usize = 40;
+const SEED: u64 = 77;
+
+/// Drive one coordinator — whichever concrete type hides behind the
+/// trait object — through the shared seeded UC3 workload.
+fn drive(coord: &mut dyn Coordinator) -> ServeReport {
+    coord.set_latency_slo(50.0);
+    coord.set_fault_policy(FaultPolicy::default());
+    let (tx, rx) = mpsc::channel();
+    let producers =
+        workload::spawn_producers(workload::for_use_case("uc3", N_PER_TASK), tx, SEED, 0.0);
+    let report = coord.serve(rx).expect("serve through the trait object");
+    for h in producers {
+        h.join().unwrap();
+    }
+    report
+}
+
+/// The contract every implementation must uphold, checked through the
+/// same trait object that produced the report.
+fn check_contract(name: &str, coord: &mut dyn Coordinator, report: &ServeReport) {
+    let submitted = 2 * N_PER_TASK;
+    assert_eq!(
+        report.total_requests + report.failed + report.timed_out + report.shed,
+        submitted,
+        "{name}: request taxonomy does not cover the workload"
+    );
+    assert!(
+        report.goodput_rps <= report.throughput_rps + 1e-9,
+        "{name}: goodput {} exceeds throughput {}",
+        report.goodput_rps,
+        report.throughput_rps
+    );
+    assert_eq!(coord.current_design(), 0, "{name}: clean run left the calm design");
+    let m = &coord.telemetry().registry;
+    assert_eq!(m.counter("carin_requests_admitted_total"), submitted as u64);
+    assert_eq!(m.counter("carin_requests_completed_total"), report.total_requests as u64);
+    assert_eq!(m.counter("carin_requests_failed_total"), report.failed as u64);
+    assert_eq!(m.counter("carin_requests_timed_out_total"), report.timed_out as u64);
+    assert_eq!(m.counter("carin_requests_shed_total"), report.shed as u64);
+}
+
+#[test]
+fn both_coordinators_uphold_the_report_contract_behind_the_trait() {
+    let reg = Registry::paper();
+    let sol = config::pinned_uc3_solution(&reg);
+    let options = ServeOptions::new();
+
+    let mut single = options
+        .build_with_engine(StubEngine::new(), &reg, &sol, synthetic_manifest(&reg))
+        .expect("single preload");
+    let factory = |_: Engine| -> anyhow::Result<StubEngine> { Ok(StubEngine::new()) };
+    let mut pooled = options
+        .build_pooled(factory, &reg, &sol, synthetic_manifest(&reg))
+        .expect("pooled preload");
+
+    let impls: [(&str, &mut dyn Coordinator); 2] =
+        [("single", &mut single), ("pooled", &mut pooled)];
+    for (name, coord) in impls {
+        let report = drive(&mut *coord);
+        check_contract(name, &mut *coord, &report);
+        // a flooded clean stub run completes everything it admits
+        assert_eq!(report.failed, 0, "{name}: stub engine cannot fail");
+        assert_eq!(report.timed_out, 0, "{name}: nothing should time out cleanly");
+        assert_eq!(
+            report.total_requests + report.shed,
+            2 * N_PER_TASK,
+            "{name}: completions plus sheds must cover the workload"
+        );
+    }
+}

@@ -5,7 +5,7 @@
 use std::sync::mpsc;
 
 use carin::config;
-use carin::coordinator::PooledCoordinator;
+use carin::coordinator::ServeOptions;
 use carin::device::Engine;
 use carin::runtime::{synthetic_manifest, StubEngine};
 use carin::telemetry::EventKind;
@@ -21,7 +21,9 @@ fn run_pooled(
     let manifest = synthetic_manifest(&reg);
     let factory =
         move |_: Engine| -> anyhow::Result<StubEngine> { Ok(StubEngine::with_latency(exec_ms)) };
-    let mut coord = PooledCoordinator::new(factory, &reg, &sol, manifest).unwrap();
+    let mut coord = ServeOptions::new()
+        .build_pooled(factory, &reg, &sol, manifest)
+        .unwrap();
     let (tx, rx) = mpsc::channel();
     // time_scale 0.0 floods the queues: arrival pacing off, so the run
     // is bounded by execution, not the workload clock
@@ -44,9 +46,9 @@ fn report_invariants_hold_across_the_pool() {
     let (report, tel) = run_pooled(1.0, submitted / 2);
 
     // conservation: every submitted request is exactly one of
-    // completed, failed or shed
+    // completed, failed, timed out or shed
     assert_eq!(
-        report.total_requests + report.failed + report.shed,
+        report.total_requests + report.failed + report.timed_out + report.shed,
         submitted,
         "request taxonomy does not cover the workload"
     );
