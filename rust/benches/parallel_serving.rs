@@ -13,11 +13,14 @@
 //! Writes the comparison to `BENCH_serving.json` in the working
 //! directory (CI uploads it as an artifact and gates on the speedup).
 
+use std::alloc::{GlobalAlloc, Layout, System};
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
+use std::time::Instant;
 
 use carin::config;
-use carin::coordinator::serve::ServeReport;
+use carin::coordinator::serve::{ServeReport, ServeRequest};
 use carin::coordinator::ServeOptions;
 use carin::device::Engine;
 use carin::runtime::{synthetic_manifest, StubEngine};
@@ -27,6 +30,44 @@ use carin::zoo::Registry;
 
 const N_PER_TASK: usize = 150;
 const EXEC_MS: f64 = 2.0;
+/// Requests per task for the memory-path A/B runs (instant stub calls,
+/// pre-loaded queues: framework overhead is all that is measured).
+const MEM_N: usize = 300;
+const SCHEMA_VERSION: f64 = 2.0;
+
+/// Counts heap allocation calls so the bench can report
+/// `allocs_per_request` on the serving hot path.
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOC_CALLS.load(Ordering::Relaxed)
+}
 
 struct RunResult {
     report: ServeReport,
@@ -87,6 +128,72 @@ fn print_row(label: &str, r: &RunResult) {
     );
 }
 
+/// `per_task` requests per uc3 task, all enqueued up front with the
+/// sender already closed: the serve loop drains flat out and the
+/// channel-node allocations stay outside any measured window.
+fn preloaded(per_task: usize) -> mpsc::Receiver<ServeRequest> {
+    let (tx, rx) = mpsc::channel();
+    let now = Instant::now();
+    for task in 0..2 {
+        for i in 0..per_task {
+            let _ = tx.send(ServeRequest {
+                task,
+                id: (task as u64) << 48 | i as u64,
+                submitted: now,
+                deadline: None,
+            });
+        }
+    }
+    rx
+}
+
+struct MemoryPath {
+    copy_p50_ms: f64,
+    copy_p99_ms: f64,
+    zero_copy_p50_ms: f64,
+    zero_copy_p99_ms: f64,
+    pool_hit_rate: f64,
+    allocs_per_request: f64,
+}
+
+/// A/B the copying baseline (`pool_slots(0)`) against the pooled
+/// zero-copy path on instant stub calls, and measure steady-state
+/// allocations per request differentially (a small run vs a 4x run on
+/// the warm coordinator — per-run setup cancels out).
+fn run_memory_path(reg: &Registry, sol: &carin::moo::Solution) -> anyhow::Result<MemoryPath> {
+    let manifest = synthetic_manifest(reg);
+
+    let mut copy = ServeOptions::new()
+        .pool_slots(0)
+        .expected_requests(4 * MEM_N)
+        .build_with_engine(StubEngine::new(), reg, sol, manifest.clone())?;
+    copy.serve(preloaded(MEM_N))?; // warmup
+    copy.serve(preloaded(4 * MEM_N))?;
+    let (copy_p50_ms, copy_p99_ms) = percentiles(copy.telemetry());
+
+    let mut zc = ServeOptions::new()
+        .expected_requests(4 * MEM_N)
+        .build_with_engine(StubEngine::new(), reg, sol, manifest)?;
+    zc.serve(preloaded(MEM_N))?; // warmup
+    let a0 = allocs();
+    zc.serve(preloaded(MEM_N))?;
+    let small = allocs() - a0;
+    let a0 = allocs();
+    zc.serve(preloaded(4 * MEM_N))?;
+    let large = allocs() - a0;
+    let (zero_copy_p50_ms, zero_copy_p99_ms) = percentiles(zc.telemetry());
+
+    let extra_requests = (3 * MEM_N * 2) as f64;
+    Ok(MemoryPath {
+        copy_p50_ms,
+        copy_p99_ms,
+        zero_copy_p50_ms,
+        zero_copy_p99_ms,
+        pool_hit_rate: zc.buffer_pool_stats().hit_rate(),
+        allocs_per_request: large.saturating_sub(small) as f64 / extra_requests,
+    })
+}
+
 fn side(r: &RunResult) -> Json {
     let mut o = BTreeMap::new();
     o.insert("goodput_rps".into(), Json::Num(r.report.goodput_rps));
@@ -126,14 +233,34 @@ fn main() -> anyhow::Result<()> {
         single.report.goodput_rps, pooled.report.goodput_rps
     );
 
+    let mem = run_memory_path(&reg, &sol)?;
+    println!(
+        "memory path: copy p50 {:.4} ms, zero-copy p50 {:.4} ms, pool hit rate {:.3}, \
+         {:.4} allocs/request",
+        mem.copy_p50_ms, mem.zero_copy_p50_ms, mem.pool_hit_rate, mem.allocs_per_request
+    );
+
     let mut o = BTreeMap::new();
     o.insert("bench".into(), Json::Str("parallel_serving".into()));
+    o.insert("schema_version".into(), Json::Num(SCHEMA_VERSION));
     o.insert("workload".into(), Json::Str("uc3-pinned-2-engine".into()));
     o.insert("n_requests_per_task".into(), Json::Num(N_PER_TASK as f64));
     o.insert("exec_ms".into(), Json::Num(EXEC_MS));
     o.insert("single".into(), side(&single));
     o.insert("pooled".into(), side(&pooled));
     o.insert("speedup_goodput".into(), Json::Num(speedup));
+    o.insert("allocs_per_request".into(), Json::Num(mem.allocs_per_request));
+    let side_obj = |p50: f64, p99: f64| {
+        let mut m = BTreeMap::new();
+        m.insert("p50_ms".to_string(), Json::Num(p50));
+        m.insert("p99_ms".to_string(), Json::Num(p99));
+        Json::Obj(m)
+    };
+    let mut mp = BTreeMap::new();
+    mp.insert("copy".into(), side_obj(mem.copy_p50_ms, mem.copy_p99_ms));
+    mp.insert("zero_copy".into(), side_obj(mem.zero_copy_p50_ms, mem.zero_copy_p99_ms));
+    mp.insert("pool_hit_rate".into(), Json::Num(mem.pool_hit_rate));
+    o.insert("memory_path".into(), Json::Obj(mp));
     std::fs::write("BENCH_serving.json", Json::Obj(o).dump())?;
     println!("comparison -> BENCH_serving.json");
     Ok(())

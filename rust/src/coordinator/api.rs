@@ -144,6 +144,12 @@ pub struct ServeOptions {
     slo_ms: Option<f64>,
     event_capacity: Option<usize>,
     telemetry_path: Option<PathBuf>,
+    /// Buffer-pool slot cap for the single-loop coordinator (`Some(0)`
+    /// disables pooling — the copying baseline for A/B benches).
+    pool_slots: Option<usize>,
+    /// Per-task request-count hint: pre-sizes stat vectors so the
+    /// steady-state path never grows them.
+    expected_requests: Option<usize>,
 }
 
 impl ServeOptions {
@@ -202,6 +208,24 @@ impl ServeOptions {
         self
     }
 
+    /// Cap the single-loop coordinator's [`crate::util::BufferPool`] at
+    /// `slots` recycled buffers. `0` disables pooling entirely — every
+    /// lease allocates, reproducing the copying baseline for A/B
+    /// benches. Unset = the pool default
+    /// ([`crate::util::bufpool::DEFAULT_POOL_SLOTS`]).
+    pub fn pool_slots(mut self, slots: usize) -> ServeOptions {
+        self.pool_slots = Some(slots);
+        self
+    }
+
+    /// Hint how many requests each task will see, so per-task stat
+    /// vectors are sized once up front instead of growing mid-run (part
+    /// of the zero-allocation steady state, see ROADMAP "Memory path").
+    pub fn expected_requests(mut self, per_task: usize) -> ServeOptions {
+        self.expected_requests = Some(per_task);
+        self
+    }
+
     /// Build the single-loop coordinator over the default PJRT CPU
     /// engine (replaces `ServingCoordinator::new`).
     pub fn build_single(
@@ -227,6 +251,12 @@ impl ServeOptions {
         if let Some(cap) = self.event_capacity {
             let epoch = coord.telemetry().recorder.epoch();
             coord.telemetry_mut().recorder = Recorder::with_epoch(cap, epoch);
+        }
+        if let Some(slots) = self.pool_slots {
+            coord.set_buffer_pool(crate::util::BufferPool::new(slots));
+        }
+        if let Some(n) = self.expected_requests {
+            coord.set_expected_requests(n);
         }
         Ok(coord)
     }

@@ -3,15 +3,26 @@
 //! requests are not starved. Formed batches keep every member's enqueue
 //! timestamp and completion deadline, so the serving report can account
 //! e2e latency and deadline hits per request rather than per batch.
+//!
+//! Memory path: payloads are [`TensorBuf`]s (`Arc`-backed), so enqueue
+//! never copies sample data; capacity-1 batchers pass the request buffer
+//! straight through, and multi-member batches concatenate into a buffer
+//! leased from a shared [`BufferPool`] instead of a fresh `Vec`. Members
+//! whose completion deadline has already expired are shed at formation
+//! time ([`Formed::shed`]) rather than wasting a batch slot and engine
+//! time on a guaranteed miss.
 
 use std::time::{Duration, Instant};
+
+use crate::error::CarinError;
+use crate::util::{BufferPool, TensorBuf};
 
 /// One enqueued request.
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
-    /// Flat input payload for one sample.
-    pub payload: Vec<f32>,
+    /// Flat input payload for one sample (shared, never deep-copied).
+    pub payload: TensorBuf,
     pub enqueued: Instant,
     /// When the serve loop dequeued the request from the arrival channel
     /// (span boundary: queue wait ends, batch wait starts).
@@ -25,7 +36,8 @@ pub struct Request {
 pub struct Batch {
     pub ids: Vec<u64>,
     /// Concatenated payloads, padded with zero samples to `capacity`.
-    pub payload: Vec<f32>,
+    /// Capacity-1 batchers alias the member's own buffer.
+    pub payload: TensorBuf,
     /// Number of real (non-padding) samples.
     pub occupancy: usize,
     /// Per-member enqueue timestamps, aligned with `ids`.
@@ -36,6 +48,23 @@ pub struct Batch {
     pub deadlines: Vec<Option<Instant>>,
 }
 
+/// Outcome of a formation attempt: at most one batch, plus any members
+/// shed because their deadline expired while they waited. The empty
+/// `shed` vector does not allocate.
+#[derive(Debug, Default)]
+pub struct Formed {
+    pub batch: Option<Batch>,
+    /// Members dropped at formation time (already past their deadline);
+    /// the caller counts them `shed` and emits the events.
+    pub shed: Vec<Request>,
+}
+
+impl Formed {
+    fn none() -> Formed {
+        Formed { batch: None, shed: Vec::new() }
+    }
+}
+
 /// Deadline-bounded fixed-capacity batcher.
 #[derive(Debug)]
 pub struct Batcher {
@@ -43,65 +72,112 @@ pub struct Batcher {
     sample_len: usize,
     deadline: Duration,
     pending: Vec<Request>,
+    pool: BufferPool,
 }
 
 impl Batcher {
     pub fn new(capacity: usize, sample_len: usize, deadline: Duration) -> Self {
+        Batcher::with_pool(capacity, sample_len, deadline, BufferPool::default())
+    }
+
+    /// Like [`Batcher::new`] but forming batches out of a shared pool,
+    /// so every batcher of a serving loop recycles the same slots.
+    pub fn with_pool(
+        capacity: usize,
+        sample_len: usize,
+        deadline: Duration,
+        pool: BufferPool,
+    ) -> Self {
         assert!(capacity > 0 && sample_len > 0);
-        Batcher { capacity, sample_len, deadline, pending: Vec::new() }
+        Batcher { capacity, sample_len, deadline, pending: Vec::new(), pool }
     }
 
     pub fn pending(&self) -> usize {
         self.pending.len()
     }
 
-    /// Enqueue; returns a full batch when capacity is reached.
-    pub fn push(&mut self, r: Request) -> Option<Batch> {
-        assert_eq!(r.payload.len(), self.sample_len, "sample length mismatch");
+    /// Enqueue; forms a batch when capacity is reached. A payload whose
+    /// length does not match the batcher's sample length is rejected
+    /// with [`CarinError::ShapeMismatch`] (the caller counts the request
+    /// `failed`) instead of panicking the serve loop.
+    pub fn push(&mut self, r: Request) -> Result<Formed, CarinError> {
+        if r.payload.len() != self.sample_len {
+            return Err(CarinError::ShapeMismatch {
+                expected: self.sample_len,
+                got: r.payload.len(),
+            });
+        }
+        // formation-time "now": the admission timestamp of the request
+        // that just arrived — fresh, and free of a clock read
+        let now = r.admitted;
         self.pending.push(r);
         if self.pending.len() >= self.capacity {
-            Some(self.form())
+            Ok(self.form(now, false))
         } else {
-            None
+            Ok(Formed::none())
         }
     }
 
     /// Flush a partial batch whose oldest request exceeded the deadline.
-    pub fn flush_due(&mut self, now: Instant) -> Option<Batch> {
+    pub fn flush_due(&mut self, now: Instant) -> Formed {
         if self.pending.is_empty() {
-            return None;
+            return Formed::none();
         }
         if now.duration_since(self.pending[0].enqueued) >= self.deadline {
-            Some(self.form())
+            self.form(now, true)
         } else {
-            None
+            Formed::none()
         }
     }
 
     /// Unconditional flush (shutdown path).
-    pub fn flush(&mut self) -> Option<Batch> {
+    pub fn flush(&mut self) -> Formed {
         if self.pending.is_empty() {
-            None
+            Formed::none()
         } else {
-            Some(self.form())
+            self.form(Instant::now(), true)
         }
     }
 
-    fn form(&mut self) -> Batch {
+    fn form(&mut self, now: Instant, force: bool) -> Formed {
+        // shed members already past their deadline: executing them can
+        // only produce a counted miss, and they'd occupy a batch slot
+        let mut shed = Vec::new();
+        let mut i = 0;
+        while i < self.pending.len() {
+            if self.pending[i].deadline.is_some_and(|d| d <= now) {
+                shed.push(self.pending.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        // shedding may have left a push-triggered batch under capacity;
+        // keep waiting unless this is a deadline/shutdown flush
+        if self.pending.is_empty() || (!force && self.pending.len() < self.capacity) {
+            return Formed { batch: None, shed };
+        }
         let take = self.pending.len().min(self.capacity);
         let reqs: Vec<Request> = self.pending.drain(..take).collect();
-        let mut payload = Vec::with_capacity(self.capacity * self.sample_len);
-        for r in &reqs {
-            payload.extend_from_slice(&r.payload);
-        }
-        payload.resize(self.capacity * self.sample_len, 0.0);
-        Batch {
-            ids: reqs.iter().map(|r| r.id).collect(),
-            payload,
-            occupancy: reqs.len(),
-            enqueued: reqs.iter().map(|r| r.enqueued).collect(),
-            admitted: reqs.iter().map(|r| r.admitted).collect(),
-            deadlines: reqs.iter().map(|r| r.deadline).collect(),
+        let payload = if self.capacity == 1 {
+            // pass the request's own buffer through: no concatenation
+            reqs[0].payload.clone()
+        } else {
+            self.pool.lease_with(self.capacity * self.sample_len, |buf| {
+                for r in &reqs {
+                    buf.extend_from_slice(&r.payload);
+                }
+            })
+        };
+        Formed {
+            batch: Some(Batch {
+                ids: reqs.iter().map(|r| r.id).collect(),
+                payload,
+                occupancy: reqs.len(),
+                enqueued: reqs.iter().map(|r| r.enqueued).collect(),
+                admitted: reqs.iter().map(|r| r.admitted).collect(),
+                deadlines: reqs.iter().map(|r| r.deadline).collect(),
+            }),
+            shed,
         }
     }
 }
@@ -114,20 +190,27 @@ mod tests {
         let now = Instant::now();
         Request {
             id,
-            payload: vec![id as f32; len],
+            payload: vec![id as f32; len].into(),
             enqueued: now,
             admitted: now,
             deadline: None,
         }
     }
 
+    /// push() for tests that only care about the formed batch.
+    fn push_ok(b: &mut Batcher, r: Request) -> Option<Batch> {
+        let formed = b.push(r).expect("shape ok");
+        assert!(formed.shed.is_empty());
+        formed.batch
+    }
+
     #[test]
     fn batches_at_capacity() {
         let mut b = Batcher::new(4, 3, Duration::from_millis(5));
-        assert!(b.push(req(0, 3)).is_none());
-        assert!(b.push(req(1, 3)).is_none());
-        assert!(b.push(req(2, 3)).is_none());
-        let batch = b.push(req(3, 3)).expect("full batch");
+        assert!(push_ok(&mut b, req(0, 3)).is_none());
+        assert!(push_ok(&mut b, req(1, 3)).is_none());
+        assert!(push_ok(&mut b, req(2, 3)).is_none());
+        let batch = push_ok(&mut b, req(3, 3)).expect("full batch");
         assert_eq!(batch.ids, vec![0, 1, 2, 3]);
         assert_eq!(batch.occupancy, 4);
         assert_eq!(batch.payload.len(), 12);
@@ -137,8 +220,8 @@ mod tests {
     #[test]
     fn never_exceeds_capacity_and_fifo() {
         let mut b = Batcher::new(2, 1, Duration::from_secs(1));
-        b.push(req(5, 1));
-        let batch = b.push(req(6, 1)).unwrap();
+        push_ok(&mut b, req(5, 1));
+        let batch = push_ok(&mut b, req(6, 1)).unwrap();
         assert_eq!(batch.ids, vec![5, 6]); // FIFO within the model
         assert!(batch.ids.len() <= 2);
     }
@@ -146,8 +229,8 @@ mod tests {
     #[test]
     fn deadline_flushes_partial_batch_padded() {
         let mut b = Batcher::new(4, 2, Duration::from_millis(0));
-        b.push(req(9, 2));
-        let batch = b.flush_due(Instant::now()).expect("deadline flush");
+        push_ok(&mut b, req(9, 2));
+        let batch = b.flush_due(Instant::now()).batch.expect("deadline flush");
         assert_eq!(batch.occupancy, 1);
         assert_eq!(batch.payload.len(), 8); // padded to capacity
         assert_eq!(&batch.payload[2..], &[0.0; 6]);
@@ -156,17 +239,17 @@ mod tests {
     #[test]
     fn no_flush_before_deadline() {
         let mut b = Batcher::new(4, 1, Duration::from_secs(60));
-        b.push(req(1, 1));
-        assert!(b.flush_due(Instant::now()).is_none());
+        push_ok(&mut b, req(1, 1));
+        assert!(b.flush_due(Instant::now()).batch.is_none());
         assert_eq!(b.pending(), 1);
     }
 
     #[test]
     fn unconditional_flush() {
         let mut b = Batcher::new(3, 1, Duration::from_secs(60));
-        assert!(b.flush().is_none());
-        b.push(req(1, 1));
-        assert_eq!(b.flush().unwrap().occupancy, 1);
+        assert!(b.flush().batch.is_none());
+        push_ok(&mut b, req(1, 1));
+        assert_eq!(b.flush().batch.unwrap().occupancy, 1);
     }
 
     #[test]
@@ -175,22 +258,27 @@ mod tests {
         let t0 = Instant::now();
         let t1 = t0 + Duration::from_millis(1);
         let dl = t0 + Duration::from_millis(50);
-        b.push(Request {
-            id: 1,
-            payload: vec![1.0],
-            enqueued: t0,
-            admitted: t1,
-            deadline: Some(dl),
-        });
-        let batch = b
-            .push(Request {
+        push_ok(
+            &mut b,
+            Request {
+                id: 1,
+                payload: vec![1.0].into(),
+                enqueued: t0,
+                admitted: t1,
+                deadline: Some(dl),
+            },
+        );
+        let batch = push_ok(
+            &mut b,
+            Request {
                 id: 2,
-                payload: vec![2.0],
+                payload: vec![2.0].into(),
                 enqueued: t0,
                 admitted: t1,
                 deadline: None,
-            })
-            .unwrap();
+            },
+        )
+        .unwrap();
         assert_eq!(batch.enqueued.len(), 2);
         assert_eq!(batch.admitted, vec![t1, t1]);
         assert_eq!(batch.deadlines, vec![Some(dl), None]);
@@ -198,5 +286,96 @@ mod tests {
         assert_eq!(batch.ids.len(), batch.occupancy);
         assert_eq!(batch.enqueued.len(), batch.occupancy);
         assert_eq!(batch.admitted.len(), batch.occupancy);
+    }
+
+    #[test]
+    fn shape_mismatch_is_a_typed_error_not_a_panic() {
+        let mut b = Batcher::new(4, 3, Duration::from_millis(5));
+        let err = b.push(req(7, 2)).unwrap_err();
+        assert_eq!(err, CarinError::ShapeMismatch { expected: 3, got: 2 });
+        assert_eq!(err.kind(), "shape");
+        assert_eq!(b.pending(), 0, "bad request must not be enqueued");
+        // the batcher still works afterwards
+        for i in 0..4 {
+            let _ = b.push(req(i, 3)).unwrap();
+        }
+    }
+
+    #[test]
+    fn expired_members_are_shed_at_formation() {
+        let mut b = Batcher::new(4, 1, Duration::from_millis(10));
+        let t0 = Instant::now();
+        let mk = |id: u64, deadline: Option<Instant>| Request {
+            id,
+            payload: vec![id as f32].into(),
+            enqueued: t0,
+            admitted: t0,
+            deadline,
+        };
+        // member 1's deadline expires before formation; 2 and 3 are live
+        push_ok(&mut b, mk(1, Some(t0 + Duration::from_millis(1))));
+        push_ok(&mut b, mk(2, Some(t0 + Duration::from_secs(30))));
+        b.push(mk(3, None)).unwrap();
+        let formed = b.flush_due(t0 + Duration::from_secs(1));
+        assert_eq!(formed.shed.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+        let batch = formed.batch.expect("live members still form a batch");
+        assert_eq!(batch.ids, vec![2, 3]);
+        assert_eq!(batch.occupancy, 2);
+    }
+
+    #[test]
+    fn shedding_below_capacity_defers_push_triggered_batch() {
+        let mut b = Batcher::new(2, 1, Duration::from_secs(60));
+        let t0 = Instant::now();
+        let expired = Request {
+            id: 1,
+            payload: vec![1.0].into(),
+            enqueued: t0,
+            admitted: t0,
+            deadline: Some(t0),
+        };
+        b.push(expired).unwrap();
+        // this push reaches capacity, but the expired member is shed and
+        // the survivor waits for a peer instead of forming a half batch
+        let late = Instant::now() + Duration::from_millis(10);
+        let formed = b
+            .push(Request {
+                id: 2,
+                payload: vec![2.0].into(),
+                enqueued: late,
+                admitted: late,
+                deadline: None,
+            })
+            .unwrap();
+        assert_eq!(formed.shed.len(), 1);
+        assert!(formed.batch.is_none());
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn capacity_one_passes_request_buffer_through() {
+        let mut b = Batcher::new(1, 4, Duration::from_millis(5));
+        let r = req(3, 4);
+        let ptr = r.payload.as_slice().as_ptr();
+        let batch = push_ok(&mut b, r).expect("capacity-1 forms immediately");
+        assert!(std::ptr::eq(ptr, batch.payload.as_slice().as_ptr()), "no copy");
+        assert_eq!(batch.occupancy, 1);
+    }
+
+    #[test]
+    fn multi_member_batches_reuse_pooled_buffers() {
+        let pool = BufferPool::new(4);
+        let mut b = Batcher::with_pool(2, 1, Duration::from_secs(60), pool.clone());
+        let first = {
+            push_ok(&mut b, req(1, 1));
+            push_ok(&mut b, req(2, 1)).unwrap()
+        };
+        let ptr = first.payload.as_slice().as_ptr();
+        drop(first);
+        push_ok(&mut b, req(3, 1));
+        let second = push_ok(&mut b, req(4, 1)).unwrap();
+        assert!(std::ptr::eq(ptr, second.payload.as_slice().as_ptr()), "slot recycled");
+        assert_eq!(second.payload.as_slice(), &[3.0, 4.0]);
+        assert_eq!(pool.stats().hits, 1);
     }
 }

@@ -15,8 +15,8 @@ pub mod serve;
 pub mod trace;
 
 pub use api::{Coordinator, ServeOptions};
-pub use batcher::{Batch, Batcher};
+pub use batcher::{Batch, Batcher, Formed};
 pub use pool::PooledCoordinator;
-pub use router::Router;
+pub use router::{RouteTable, Router};
 pub use serve::{FaultPolicy, ServeReport, ServeRequest, ServingCoordinator, TaskReport};
 pub use trace::{run_trace, TraceLog, TracePoint};

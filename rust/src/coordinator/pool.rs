@@ -60,26 +60,27 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::batcher::{Batch, Batcher, Request as BatchRequest};
+use crate::coordinator::batcher::{Batch, Batcher, Formed, Request as BatchRequest};
 use crate::coordinator::router::Router;
 use crate::coordinator::serve::{
-    build_batchers_for, call_deadline, vec_sample, FaultPolicy, ServeReport, ServeRequest,
+    build_batchers_for, call_deadline, sample_pooled, FaultPolicy, ServeReport, ServeRequest,
     TaskReport, TaskStats,
 };
 use crate::device::Engine;
 use crate::error::CarinError;
 use crate::manager::{Monitor, RuntimeManager};
 use crate::moo::Solution;
-use crate::runtime::engine::{random_input, Tensor};
+use crate::runtime::engine::{random_input_pooled, Tensor};
 use crate::runtime::faults::{fault_kind_of, FaultKind, FaultStats, Inference};
-use crate::runtime::ArtifactMeta;
+use crate::runtime::{ArtifactId, ArtifactMeta};
 use crate::telemetry::{EventKind, Span, Telemetry};
-use crate::util::{Backoff, Summary};
+use crate::util::{Backoff, BufferPool, Summary};
 use crate::zoo::Registry;
 
 /// Work sent down a per-engine queue. FIFO ordering is what makes the
 /// switch fence correct: every `Exec` sent before a `Switch` executes
-/// under the old design.
+/// under the old design. Every variant is all-`Copy` payload — nothing
+/// allocates to cross the queue (see ROADMAP "Memory path").
 enum WorkerMsg {
     Exec {
         task: usize,
@@ -93,7 +94,7 @@ enum WorkerMsg {
         seed: u64,
     },
     /// Off-path health probe of a faulted route.
-    Probe { stem: String, seed: u64 },
+    Probe { route: ArtifactId, seed: u64 },
     /// Fence: flush, rebuild for `design`, then ack `epoch`.
     Switch { design: usize, epoch: u64 },
 }
@@ -136,7 +137,7 @@ struct WorkerOutcome {
 
 /// Health-probe bookkeeping for one faulted route (dispatcher side).
 struct ProbeState {
-    stem: String,
+    route: ArtifactId,
     ok: usize,
 }
 
@@ -620,15 +621,16 @@ impl Dispatcher<'_> {
                 self.consecutive[task] += 1;
                 if self.consecutive[task] >= self.policy.fault_threshold {
                     let e = self.assign_engine[self.router.design()][task];
-                    let stem = self.manifest[self.router.route_index(task)].stem.clone();
+                    let route = self.router.route(task);
                     self.monitor.report_fault(e, true);
                     if !self.faulted.contains_key(&e) {
                         crate::log_warn!(
-                            "fault raised on {} after {} consecutive failures (task {task}, route {stem})",
+                            "fault raised on {} after {} consecutive failures (task {task}, route {})",
                             e.name(),
-                            self.consecutive[task]
+                            self.consecutive[task],
+                            self.router.table().name(route)
                         );
-                        self.faulted.insert(e, ProbeState { stem, ok: 0 });
+                        self.faulted.insert(e, ProbeState { route, ok: 0 });
                         self.tel.recorder.record(EventKind::FaultRaised {
                             engine: e.index() as u8,
                             task: task as u32,
@@ -748,10 +750,7 @@ impl Dispatcher<'_> {
         self.since_probe = 0;
         for (e, p) in &self.faulted {
             if let Some(&w) = self.engine_worker.get(e) {
-                let _ = self.txs[w].send(WorkerMsg::Probe {
-                    stem: p.stem.clone(),
-                    seed: self.seed,
-                });
+                let _ = self.txs[w].send(WorkerMsg::Probe { route: p.route, seed: self.seed });
             }
         }
     }
@@ -796,7 +795,9 @@ where
     engine.set_call_deadline(deadline);
     let mut preload_err: Option<CarinError> = None;
     for &idx in &plan.preload {
-        if let Err(e) = supervised_load(&mut engine, &manifest[idx], policy) {
+        // interned ids are manifest indices by construction (RouteTable)
+        let route = ArtifactId(idx as u32);
+        if let Err(e) = supervised_load(&mut engine, route, &manifest[idx], policy) {
             preload_err = Some(CarinError::Artifact(format!("{}: {e}", manifest[idx].stem)));
             break;
         }
@@ -813,7 +814,8 @@ where
     }
 
     let routes = plan.per_design[start_design].clone();
-    let batchers = build_batchers_for(manifest, &routes);
+    let pool = BufferPool::default();
+    let batchers = build_batchers_for(manifest, &routes, &pool);
     let mut worker = Worker {
         engine,
         engine_id,
@@ -826,6 +828,7 @@ where
         stats,
         tel,
         fb,
+        pool,
         busy: Duration::ZERO,
         jobs: 0,
     };
@@ -836,6 +839,7 @@ where
 /// Retrying model load (shared by preload and switch reloads).
 fn supervised_load<E: Inference>(
     engine: &mut E,
+    route: ArtifactId,
     meta: &ArtifactMeta,
     policy: &FaultPolicy,
 ) -> Result<()> {
@@ -843,7 +847,7 @@ fn supervised_load<E: Inference>(
     let mut attempt = 0usize;
     loop {
         attempt += 1;
-        match engine.load(meta) {
+        match engine.load(route, meta) {
             Ok(()) => return Ok(()),
             Err(e) => {
                 if attempt >= policy.max_attempts {
@@ -872,6 +876,9 @@ struct Worker<'a, E: Inference> {
     stats: Vec<TaskStats>,
     tel: Telemetry,
     fb: mpsc::Sender<Feedback>,
+    /// Worker-local lease pool for input payloads and batch formation;
+    /// its traffic is published into the shard registry at finish.
+    pool: BufferPool,
     /// Wall time spent executing (engine calls incl. retries/backoff).
     busy: Duration,
     jobs: u64,
@@ -907,14 +914,12 @@ impl<E: Inference> Worker<'_, E> {
                     self.busy += t_busy.elapsed();
                     self.jobs += 1;
                 }
-                WorkerMsg::Probe { stem, seed } => {
-                    let ok = match self
-                        .manifest
-                        .iter()
-                        .find(|m| m.stem == stem)
-                        .map(|m| random_input(m, seed))
-                    {
-                        Some(input) => self.engine.infer(&stem, &input).is_ok(),
+                WorkerMsg::Probe { route, seed } => {
+                    let ok = match self.manifest.get(route.index()) {
+                        Some(meta) => {
+                            let input = random_input_pooled(meta, seed, &self.pool);
+                            self.engine.infer(route, &input).is_ok()
+                        }
                         None => false,
                     };
                     let _ = self.fb.send(Feedback::ProbeResult { engine: self.engine_id, ok });
@@ -929,10 +934,11 @@ impl<E: Inference> Worker<'_, E> {
         self.flush_pending();
     }
 
-    /// Seal the shard: per-engine busy/jobs series, then hand back the
-    /// `Send` parts (the engine drops here, on its owning thread).
+    /// Seal the shard: per-engine busy/jobs series and the worker pool's
+    /// lease traffic, then hand back the `Send` parts (the engine drops
+    /// here, on its owning thread).
     fn finish(self) -> WorkerOutcome {
-        let Worker { engine, engine_id, mut tel, stats, busy, jobs, .. } = self;
+        let Worker { engine, engine_id, mut tel, stats, busy, jobs, pool, .. } = self;
         let name = engine_id.name();
         tel.registry.set_gauge(
             &format!("carin_engine_busy_ms{{engine=\"{name}\"}}"),
@@ -940,6 +946,11 @@ impl<E: Inference> Worker<'_, E> {
         );
         tel.registry
             .add(&format!("carin_engine_jobs_total{{engine=\"{name}\"}}"), jobs);
+        pool.sweep_returns();
+        let ps = pool.stats();
+        tel.registry.add("carin_bufpool_hits", ps.hits);
+        tel.registry.add("carin_bufpool_misses", ps.misses);
+        tel.registry.add("carin_bufpool_returns", ps.returns);
         let fault_stats = engine.fault_stats();
         WorkerOutcome { stats, tel, fault_stats }
     }
@@ -955,39 +966,59 @@ impl<E: Inference> Worker<'_, E> {
         meta_idx: usize,
         seed: u64,
     ) {
-        let stem = self.manifest[meta_idx].stem.clone();
+        let route = ArtifactId(meta_idx as u32);
         if self.batchers.contains_key(&t) {
             let sample_len = {
                 let meta = &self.manifest[meta_idx];
                 meta.input.numel() / meta.input.shape[0]
             };
             self.tel.recorder.record(EventKind::Batched { task: t as u32, id });
-            let maybe = self.batchers.get_mut(&t).unwrap().push(BatchRequest {
+            let pushed = self.batchers.get_mut(&t).unwrap().push(BatchRequest {
                 id,
-                payload: vec_sample(sample_len, seed),
+                payload: sample_pooled(sample_len, seed, &self.pool),
                 enqueued: submitted,
                 admitted,
                 deadline,
             });
-            if let Some(batch) = maybe {
-                self.execute_batch(t, &stem, batch);
+            match pushed {
+                Ok(formed) => self.finish_formed(t, route, formed),
+                Err(e) => {
+                    // a rejected payload (shape mismatch) fails the
+                    // request without feeding the engine-fault counter
+                    self.stats[t].failed += 1;
+                    self.tel.recorder.record(EventKind::Failed { task: t as u32, id });
+                    self.tel.registry.inc("carin_requests_failed_total");
+                    crate::log_warn!("task {t} request {id} rejected: {e}");
+                }
             }
         } else {
-            let input = random_input(&self.manifest[meta_idx], seed);
-            self.execute_one(t, &stem, &input, id, submitted, admitted, deadline);
+            let input = random_input_pooled(&self.manifest[meta_idx], seed, &self.pool);
+            self.execute_one(t, route, &input, id, submitted, admitted, deadline);
+        }
+    }
+
+    /// Shed + execute the outcome of one batch-formation attempt.
+    fn finish_formed(&mut self, t: usize, route: ArtifactId, formed: Formed) {
+        for r in &formed.shed {
+            self.stats[t].shed += 1;
+            self.tel.recorder.record(EventKind::Shed { task: t as u32, id: r.id });
+            self.tel.registry.inc("carin_requests_shed_total");
+        }
+        if let Some(batch) = formed.batch {
+            self.execute_batch(t, route, batch);
         }
     }
 
     /// One supervised engine call with capped exponential backoff — the
     /// sleep only ever delays this worker's queue.
-    fn supervised_infer(&mut self, t: usize, stem: &str, input: &Tensor) -> Result<f64> {
+    fn supervised_infer(&mut self, t: usize, route: ArtifactId, input: &Tensor) -> Result<f64> {
         let mut backoff = Backoff::new(self.policy.backoff_base, self.policy.backoff_cap);
         let mut attempt = 0usize;
         let mut timed_out_attempts = 0usize;
         loop {
             attempt += 1;
             let te = Instant::now();
-            match self.engine.infer(stem, input) {
+            match self.engine.infer(route, input) {
                 Ok(_) => {
                     if attempt > 1 {
                         self.stats[t].retried += 1;
@@ -1037,7 +1068,7 @@ impl<E: Inference> Worker<'_, E> {
     fn execute_one(
         &mut self,
         t: usize,
-        stem: &str,
+        route: ArtifactId,
         input: &Tensor,
         id: u64,
         submitted: Instant,
@@ -1045,9 +1076,13 @@ impl<E: Inference> Worker<'_, E> {
         deadline: Option<Instant>,
     ) {
         let dispatched = Instant::now();
-        self.tel.recorder.record(EventKind::Dispatched { task: t as u32, occupancy: 1 });
+        self.tel.recorder.record(EventKind::Dispatched {
+            task: t as u32,
+            route: route.0,
+            occupancy: 1,
+        });
         self.tel.registry.inc("carin_engine_dispatch_total");
-        match self.supervised_infer(t, stem, input) {
+        match self.supervised_infer(t, route, input) {
             Ok(exec_ms) => {
                 let done = Instant::now();
                 let met = match deadline {
@@ -1094,15 +1129,17 @@ impl<E: Inference> Worker<'_, E> {
         }
     }
 
-    fn execute_batch(&mut self, t: usize, stem: &str, batch: Batch) {
+    fn execute_batch(&mut self, t: usize, route: ArtifactId, batch: Batch) {
         let Batch { ids, payload, occupancy, enqueued, admitted, deadlines } = batch;
         let input = Tensor::F32(payload);
         let dispatched = Instant::now();
-        self.tel
-            .recorder
-            .record(EventKind::Dispatched { task: t as u32, occupancy: occupancy as u32 });
+        self.tel.recorder.record(EventKind::Dispatched {
+            task: t as u32,
+            route: route.0,
+            occupancy: occupancy as u32,
+        });
         self.tel.registry.inc("carin_engine_dispatch_total");
-        match self.supervised_infer(t, stem, &input) {
+        match self.supervised_infer(t, route, &input) {
             Ok(exec_ms) => {
                 let done = Instant::now();
                 for i in 0..occupancy {
@@ -1170,32 +1207,34 @@ impl<E: Inference> Worker<'_, E> {
         self.design = design;
         let routes = self.plan.per_design[design].clone();
         for &(_, idx) in &routes {
-            if !self.engine.is_loaded(&self.manifest[idx].stem) {
+            let route = ArtifactId(idx as u32);
+            if !self.engine.is_loaded(route) {
                 // a failed load leaves the route cold: its requests fail
                 // supervision and re-raise the fault signal, so the
                 // policy moves on rather than this worker dying
-                let _ = supervised_load(&mut self.engine, &self.manifest[idx], self.policy);
+                let _ =
+                    supervised_load(&mut self.engine, route, &self.manifest[idx], self.policy);
             }
         }
-        self.batchers = build_batchers_for(self.manifest, &routes);
+        self.batchers = build_batchers_for(self.manifest, &routes, &self.pool);
     }
 
-    /// Stem routed for `t` under this worker's current design.
-    fn stem_of(&self, t: usize) -> Option<String> {
+    /// Interned route serving `t` under this worker's current design.
+    fn route_of(&self, t: usize) -> Option<ArtifactId> {
         self.plan.per_design[self.design]
             .iter()
             .find(|&&(task, _)| task == t)
-            .map(|&(_, idx)| self.manifest[idx].stem.clone())
+            .map(|&(_, idx)| ArtifactId(idx as u32))
     }
 
     fn flush_due(&mut self) {
         let now = Instant::now();
         let tasks: Vec<usize> = self.batchers.keys().copied().collect();
         for t in tasks {
-            let maybe = self.batchers.get_mut(&t).and_then(|b| b.flush_due(now));
-            if let Some(batch) = maybe {
-                if let Some(stem) = self.stem_of(t) {
-                    self.execute_batch(t, &stem, batch);
+            let maybe = self.batchers.get_mut(&t).map(|b| b.flush_due(now));
+            if let Some(formed) = maybe {
+                if let Some(route) = self.route_of(t) {
+                    self.finish_formed(t, route, formed);
                 }
             }
         }
@@ -1204,10 +1243,10 @@ impl<E: Inference> Worker<'_, E> {
     fn flush_pending(&mut self) {
         let tasks: Vec<usize> = self.batchers.keys().copied().collect();
         for t in tasks {
-            let maybe = self.batchers.get_mut(&t).and_then(|b| b.flush());
-            if let Some(batch) = maybe {
-                if let Some(stem) = self.stem_of(t) {
-                    self.execute_batch(t, &stem, batch);
+            let maybe = self.batchers.get_mut(&t).map(|b| b.flush());
+            if let Some(formed) = maybe {
+                if let Some(route) = self.route_of(t) {
+                    self.finish_formed(t, route, formed);
                 }
             }
         }

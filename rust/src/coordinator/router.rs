@@ -3,14 +3,55 @@
 //! allocation-free on the hot path.
 
 use crate::moo::Solution;
-use crate::runtime::artifact::{self, ArtifactMeta};
+use crate::runtime::artifact::{self, ArtifactId, ArtifactMeta};
 use crate::zoo::Registry;
 
-/// Routes (task, current design) -> artifact stem.
+/// Interned artifact names, built once from the manifest at coordinator
+/// build time. [`ArtifactId`] is the manifest index; the table resolves
+/// it back to the display stem at export/report time, so the hot path
+/// only ever moves `Copy` ids (see ROADMAP "Memory path").
+#[derive(Debug, Clone)]
+pub struct RouteTable {
+    names: Vec<String>,
+}
+
+impl RouteTable {
+    /// Intern every manifest stem; ids are assigned in manifest order.
+    pub fn from_manifest(manifest: &[ArtifactMeta]) -> RouteTable {
+        RouteTable { names: manifest.iter().map(|m| m.stem.clone()).collect() }
+    }
+
+    /// Display stem of an interned artifact (export-time resolution).
+    pub fn name(&self, id: ArtifactId) -> &str {
+        &self.names[id.index()]
+    }
+
+    /// Reverse lookup, for string-keyed public APIs (`FaultInjector::
+    /// set_for`) and tests. O(n); never on the request path.
+    pub fn id_of(&self, stem: &str) -> Option<ArtifactId> {
+        self.names.iter().position(|n| n == stem).map(|i| ArtifactId(i as u32))
+    }
+
+    /// Id of the `index`-th manifest entry.
+    pub fn id(&self, index: usize) -> ArtifactId {
+        debug_assert!(index < self.names.len());
+        ArtifactId(index as u32)
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+}
+
+/// Routes (task, current design) -> interned artifact id.
 pub struct Router {
     /// `routes[design][task]` = index into the manifest.
     routes: Vec<Vec<usize>>,
-    stems: Vec<String>,
+    table: RouteTable,
     current: usize,
 }
 
@@ -23,7 +64,7 @@ impl Router {
         solution: &Solution,
         manifest: &[ArtifactMeta],
     ) -> anyhow::Result<Router> {
-        let stems: Vec<String> = manifest.iter().map(|m| m.stem.clone()).collect();
+        let table = RouteTable::from_manifest(manifest);
         let mut routes = Vec::with_capacity(solution.designs.len());
         for d in &solution.designs {
             let mut per_task = Vec::with_capacity(d.config.assignments.len());
@@ -43,7 +84,7 @@ impl Router {
             }
             routes.push(per_task);
         }
-        Ok(Router { routes, stems, current: 0 })
+        Ok(Router { routes, table, current: 0 })
     }
 
     /// Point the router at a new design (called by the RM on switch).
@@ -56,9 +97,20 @@ impl Router {
         self.current
     }
 
-    /// Artifact stem serving `task` right now.
-    pub fn route(&self, task: usize) -> &str {
-        &self.stems[self.routes[self.current][task]]
+    /// Interned artifact id serving `task` right now. `Copy`, so the
+    /// hot path never clones a stem `String`.
+    pub fn route(&self, task: usize) -> ArtifactId {
+        self.table.id(self.routes[self.current][task])
+    }
+
+    /// Display stem serving `task` right now (export-time resolution).
+    pub fn route_stem(&self, task: usize) -> &str {
+        self.table.name(self.route(task))
+    }
+
+    /// The interning table (id <-> stem) behind this router.
+    pub fn table(&self) -> &RouteTable {
+        &self.table
     }
 
     /// Manifest index serving `task` right now.
@@ -120,7 +172,8 @@ mod tests {
                     let mut r = Router::new(&reg, &sol, &manifest).unwrap();
                     r.set_design(di);
                     for t in 0..d.config.assignments.len() {
-                        assert!(!r.route(t).is_empty());
+                        assert!(!r.route_stem(t).is_empty());
+                        assert_eq!(r.table().id_of(r.route_stem(t)), Some(r.route(t)));
                     }
                 }
                 assert!(!router.preload_set().is_empty());

@@ -113,6 +113,20 @@
 //! included), while the `carin_exec_latency_ms` histogram and the
 //! report's `latency_ms` record the successful attempt only. Export via
 //! [`Telemetry::events_jsonl`] / [`Telemetry::prometheus`].
+//!
+//! # Memory path
+//!
+//! The steady-state request path is allocation-free (see ROADMAP
+//! "Memory path"): routing moves interned `Copy`
+//! [`ArtifactId`](crate::runtime::ArtifactId) handles instead of cloned
+//! stem `String`s (display names resolve through
+//! [`Router::table`](crate::coordinator::router::RouteTable) only at
+//! report/export time), request payloads are `Arc`-backed
+//! [`TensorBuf`]s leased from the coordinator's [`BufferPool`] (shared
+//! with its batchers), and batch formation concatenates into recycled
+//! pool slots. The run's pool traffic is published as the
+//! `carin_bufpool_{hits,misses,returns}` counters at the end of each
+//! serve.
 
 use std::collections::HashMap;
 use std::sync::mpsc;
@@ -120,16 +134,16 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coordinator::batcher::{Batch, Batcher, Request as BatchRequest};
+use crate::coordinator::batcher::{Batch, Batcher, Formed, Request as BatchRequest};
 use crate::coordinator::router::Router;
 use crate::device::Engine;
 use crate::manager::{Monitor, RuntimeManager};
 use crate::moo::Solution;
-use crate::runtime::engine::{random_input, InferenceEngine, Tensor};
+use crate::runtime::engine::{random_input_pooled, InferenceEngine, Tensor};
 use crate::runtime::faults::{fault_kind_of, FaultKind, Inference};
-use crate::runtime::ArtifactMeta;
+use crate::runtime::{ArtifactId, ArtifactMeta};
 use crate::telemetry::{EventKind, Span, Telemetry};
-use crate::util::{Backoff, Summary};
+use crate::util::{Backoff, BufPoolStats, BufferPool, Summary, TensorBuf};
 use crate::zoo::Registry;
 
 /// One serving request (the synthetic workload generates payloads from
@@ -282,6 +296,16 @@ pub(crate) struct TaskStats {
 }
 
 impl TaskStats {
+    /// Pre-size the latency vectors for an expected request count so the
+    /// steady-state push never reallocates (see ROADMAP "Memory path").
+    pub(crate) fn with_capacity(n: usize) -> TaskStats {
+        TaskStats {
+            lat: Vec::with_capacity(n),
+            e2e: Vec::with_capacity(n),
+            ..TaskStats::default()
+        }
+    }
+
     pub(crate) fn mean_exec_ms(&self) -> f64 {
         if self.lat.is_empty() {
             0.0
@@ -308,8 +332,8 @@ impl TaskStats {
 /// Health-probe bookkeeping for one faulted route.
 #[derive(Debug)]
 struct ProbeState {
-    /// The artifact stem that was failing when the fault was raised.
-    stem: String,
+    /// The interned route that was failing when the fault was raised.
+    route: ArtifactId,
     /// Consecutive successful probes so far.
     ok: usize,
 }
@@ -335,6 +359,12 @@ pub struct ServingCoordinator<E: Inference = InferenceEngine> {
     faulted: HashMap<Engine, ProbeState>,
     /// Event recorder + metric registry (see the module docs).
     tel: Telemetry,
+    /// Lease pool backing input payloads and batch formation (shared
+    /// with the batchers; see the module "Memory path" docs).
+    pool: BufferPool,
+    /// Capacity hint for per-task stat vectors, so steady-state pushes
+    /// never grow them. 0 = no hint.
+    expected_requests: usize,
 }
 
 impl<E: Inference> ServingCoordinator<E> {
@@ -372,15 +402,19 @@ impl<E: Inference> ServingCoordinator<E> {
             consecutive_failures: vec![0; n_tasks],
             faulted: HashMap::new(),
             tel: Telemetry::new(crate::telemetry::DEFAULT_EVENT_CAPACITY),
+            pool: BufferPool::default(),
+            expected_requests: 0,
         };
         let d0 = coord.rm.current_design();
         coord.router.set_design(d0);
         coord.tel.registry.set_gauge("carin_current_design", d0 as f64);
         for idx in coord.router.preload_set() {
+            let route = coord.router.table().id(idx);
             let meta = coord.manifest[idx].clone();
-            coord.supervised_load(&meta)?;
+            coord.supervised_load(route, &meta)?;
         }
-        coord.batchers = build_batchers(&coord.manifest, &coord.router, coord.n_tasks);
+        coord.batchers =
+            build_batchers(&coord.manifest, &coord.router, coord.n_tasks, &coord.pool);
         Ok(coord)
     }
 
@@ -418,7 +452,28 @@ impl<E: Inference> ServingCoordinator<E> {
     /// supervision loop normally drives this through the RM).
     pub fn set_design(&mut self, design: usize) {
         self.router.set_design(design);
-        self.batchers = build_batchers(&self.manifest, &self.router, self.n_tasks);
+        self.batchers = build_batchers(&self.manifest, &self.router, self.n_tasks, &self.pool);
+    }
+
+    /// Replace the lease pool backing inputs and batch formation and
+    /// rebuild the batchers over it. [`BufferPool::disabled`] reproduces
+    /// the copying baseline for A/B benches — call between runs.
+    pub fn set_buffer_pool(&mut self, pool: BufferPool) {
+        self.pool = pool;
+        self.batchers = build_batchers(&self.manifest, &self.router, self.n_tasks, &self.pool);
+    }
+
+    /// Cumulative lease statistics of the coordinator's buffer pool
+    /// (sweeps pending returns first so the snapshot is current).
+    pub fn buffer_pool_stats(&self) -> BufPoolStats {
+        self.pool.sweep_returns();
+        self.pool.stats()
+    }
+
+    /// Hint how many requests each task will see, so per-task stat
+    /// vectors are sized once up front instead of growing mid-run.
+    pub fn set_expected_requests(&mut self, per_task: usize) {
+        self.expected_requests = per_task;
     }
 
     pub fn current_design(&self) -> usize {
@@ -461,9 +516,12 @@ impl<E: Inference> ServingCoordinator<E> {
     /// the loop — they are retried, shed around, or routed away from.
     pub fn serve(&mut self, rx: mpsc::Receiver<ServeRequest>) -> Result<ServeReport> {
         let t0 = Instant::now();
-        let mut stats: Vec<TaskStats> = (0..self.n_tasks).map(|_| TaskStats::default()).collect();
+        let mut stats: Vec<TaskStats> = (0..self.n_tasks)
+            .map(|_| TaskStats::with_capacity(self.expected_requests))
+            .collect();
         self.consecutive_failures = vec![0; self.n_tasks];
         self.tel.reset_window();
+        let pool0 = self.pool.stats();
         let switches_before = self.rm.switches.len();
         let mut seed = 0u64;
         let mut since_probe = 0usize;
@@ -505,7 +563,7 @@ impl<E: Inference> ServingCoordinator<E> {
             }
 
             let meta_idx = self.router.route_index(t);
-            let stem = self.manifest[meta_idx].stem.clone();
+            let route = self.router.route(t);
             if self.batchers.contains_key(&t) {
                 // batched path: one engine call per formed batch
                 let sample_len = {
@@ -513,21 +571,31 @@ impl<E: Inference> ServingCoordinator<E> {
                     meta.input.numel() / meta.input.shape[0]
                 };
                 self.tel.recorder.record(EventKind::Batched { task: t as u32, id: req.id });
-                let maybe = self.batchers.get_mut(&t).unwrap().push(BatchRequest {
+                let pushed = self.batchers.get_mut(&t).unwrap().push(BatchRequest {
                     id: req.id,
-                    payload: vec_sample(sample_len, seed),
+                    payload: sample_pooled(sample_len, seed, &self.pool),
                     enqueued: req.submitted,
                     admitted: admitted_at,
                     deadline: req.deadline,
                 });
-                if let Some(batch) = maybe {
-                    self.execute_batch(t, &stem, batch, &mut stats);
+                match pushed {
+                    Ok(formed) => self.finish_formed(t, route, formed, &mut stats),
+                    Err(e) => {
+                        // a payload the batcher rejects (shape mismatch)
+                        // is a failed request, not a crashed serve loop
+                        stats[t].failed += 1;
+                        self.tel
+                            .recorder
+                            .record(EventKind::Failed { task: t as u32, id: req.id });
+                        self.tel.registry.inc("carin_requests_failed_total");
+                        crate::log_warn!("task {t} request {} rejected: {e}", req.id);
+                    }
                 }
             } else {
-                let input = random_input(&self.manifest[meta_idx], seed);
+                let input = random_input_pooled(&self.manifest[meta_idx], seed, &self.pool);
                 self.execute_one(
                     t,
-                    &stem,
+                    route,
                     &input,
                     req.id,
                     req.submitted,
@@ -539,6 +607,15 @@ impl<E: Inference> ServingCoordinator<E> {
         }
         // drain partial batches (their members' e2e is accounted normally)
         self.flush_pending(&mut stats);
+
+        // publish the run's pool traffic (returns are observed lazily on
+        // lease sweeps, so force one before the snapshot)
+        self.pool.sweep_returns();
+        let ps = self.pool.stats();
+        let r = &mut self.tel.registry;
+        r.add("carin_bufpool_hits", ps.hits - pool0.hits);
+        r.add("carin_bufpool_misses", ps.misses - pool0.misses);
+        r.add("carin_bufpool_returns", ps.returns - pool0.returns);
 
         let wall_s = t0.elapsed().as_secs_f64();
         // throughput/goodput are over the serving window, not the loop's
@@ -602,7 +679,7 @@ impl<E: Inference> ServingCoordinator<E> {
     fn supervised_infer(
         &mut self,
         t: usize,
-        stem: &str,
+        route: ArtifactId,
         input: &Tensor,
         st: &mut TaskStats,
     ) -> Result<f64> {
@@ -612,7 +689,7 @@ impl<E: Inference> ServingCoordinator<E> {
         loop {
             attempt += 1;
             let te = Instant::now();
-            match self.engine.infer(stem, input) {
+            match self.engine.infer(route, input) {
                 Ok(_) => {
                     if attempt > 1 {
                         st.retried += 1;
@@ -645,12 +722,12 @@ impl<E: Inference> ServingCoordinator<E> {
 
     /// Retrying model load (transient load faults are part of the fault
     /// model; a persistent failure propagates).
-    fn supervised_load(&mut self, meta: &ArtifactMeta) -> Result<()> {
+    fn supervised_load(&mut self, route: ArtifactId, meta: &ArtifactMeta) -> Result<()> {
         let mut backoff = Backoff::new(self.policy.backoff_base, self.policy.backoff_cap);
         let mut attempt = 0usize;
         loop {
             attempt += 1;
-            match self.engine.load(meta) {
+            match self.engine.load(route, meta) {
                 Ok(()) => return Ok(()),
                 Err(e) => {
                     if attempt >= self.policy.max_attempts {
@@ -679,11 +756,29 @@ impl<E: Inference> ServingCoordinator<E> {
         r.observe("carin_batch_wait_ms", span.batch_ms());
     }
 
+    /// Shed + execute the outcome of one batch-formation attempt.
+    fn finish_formed(
+        &mut self,
+        t: usize,
+        route: ArtifactId,
+        formed: Formed,
+        stats: &mut [TaskStats],
+    ) {
+        for r in &formed.shed {
+            stats[t].shed += 1;
+            self.tel.recorder.record(EventKind::Shed { task: t as u32, id: r.id });
+            self.tel.registry.inc("carin_requests_shed_total");
+        }
+        if let Some(batch) = formed.batch {
+            self.execute_batch(t, route, batch, stats);
+        }
+    }
+
     #[allow(clippy::too_many_arguments)]
     fn execute_one(
         &mut self,
         t: usize,
-        stem: &str,
+        route: ArtifactId,
         input: &Tensor,
         id: u64,
         submitted: Instant,
@@ -692,9 +787,13 @@ impl<E: Inference> ServingCoordinator<E> {
         stats: &mut [TaskStats],
     ) {
         let dispatched = Instant::now();
-        self.tel.recorder.record(EventKind::Dispatched { task: t as u32, occupancy: 1 });
+        self.tel.recorder.record(EventKind::Dispatched {
+            task: t as u32,
+            route: route.0,
+            occupancy: 1,
+        });
         self.tel.registry.inc("carin_engine_dispatch_total");
-        match self.supervised_infer(t, stem, input, &mut stats[t]) {
+        match self.supervised_infer(t, route, input, &mut stats[t]) {
             Ok(exec_ms) => {
                 let done = Instant::now();
                 let met = match deadline {
@@ -739,15 +838,17 @@ impl<E: Inference> ServingCoordinator<E> {
         }
     }
 
-    fn execute_batch(&mut self, t: usize, stem: &str, batch: Batch, stats: &mut [TaskStats]) {
+    fn execute_batch(&mut self, t: usize, route: ArtifactId, batch: Batch, stats: &mut [TaskStats]) {
         let Batch { ids, payload, occupancy, enqueued, admitted, deadlines } = batch;
         let input = Tensor::F32(payload);
         let dispatched = Instant::now();
-        self.tel
-            .recorder
-            .record(EventKind::Dispatched { task: t as u32, occupancy: occupancy as u32 });
+        self.tel.recorder.record(EventKind::Dispatched {
+            task: t as u32,
+            route: route.0,
+            occupancy: occupancy as u32,
+        });
         self.tel.registry.inc("carin_engine_dispatch_total");
-        match self.supervised_infer(t, stem, &input, &mut stats[t]) {
+        match self.supervised_infer(t, route, &input, &mut stats[t]) {
             Ok(exec_ms) => {
                 let done = Instant::now();
                 for i in 0..occupancy {
@@ -813,15 +914,16 @@ impl<E: Inference> ServingCoordinator<E> {
         self.consecutive_failures[t] += 1;
         if self.consecutive_failures[t] >= self.policy.fault_threshold {
             let e = self.engine_of(t);
-            let stem = self.manifest[self.router.route_index(t)].stem.clone();
+            let route = self.router.route(t);
             self.monitor.report_fault(e, true);
             if !self.faulted.contains_key(&e) {
                 crate::log_warn!(
-                    "fault raised on {} after {} consecutive failures (task {t}, route {stem})",
+                    "fault raised on {} after {} consecutive failures (task {t}, route {})",
                     e.name(),
-                    self.consecutive_failures[t]
+                    self.consecutive_failures[t],
+                    self.router.table().name(route)
                 );
-                self.faulted.insert(e, ProbeState { stem, ok: 0 });
+                self.faulted.insert(e, ProbeState { route, ok: 0 });
                 self.tel.recorder.record(EventKind::FaultRaised {
                     engine: e.index() as u8,
                     task: t as u32,
@@ -889,26 +991,28 @@ impl<E: Inference> ServingCoordinator<E> {
         self.router.set_design(design);
         for t in 0..self.n_tasks {
             let idx = self.router.route_index(t);
-            if !self.engine.is_loaded(&self.manifest[idx].stem) {
+            let route = self.router.table().id(idx);
+            if !self.engine.is_loaded(route) {
                 let meta = self.manifest[idx].clone();
                 // a failed load leaves the route cold: requests on it will
                 // fail supervision and re-raise the fault signal, so the
                 // policy moves on rather than the process dying here.
-                let _ = self.supervised_load(&meta);
+                let _ = self.supervised_load(route, &meta);
             }
         }
-        self.batchers = build_batchers(&self.manifest, &self.router, self.n_tasks);
+        self.batchers = build_batchers(&self.manifest, &self.router, self.n_tasks, &self.pool);
     }
 
     /// Flush partial batches whose oldest member exceeded the batching
-    /// deadline; flushed members get full latency/e2e accounting.
+    /// deadline; flushed members get full latency/e2e accounting (and
+    /// expired members are shed, see [`Formed::shed`]).
     fn flush_due_batches(&mut self, stats: &mut [TaskStats]) {
         let now = Instant::now();
         for t in 0..self.n_tasks {
-            let maybe = self.batchers.get_mut(&t).and_then(|b| b.flush_due(now));
-            if let Some(batch) = maybe {
-                let stem = self.manifest[self.router.route_index(t)].stem.clone();
-                self.execute_batch(t, &stem, batch, stats);
+            let maybe = self.batchers.get_mut(&t).map(|b| b.flush_due(now));
+            if let Some(formed) = maybe {
+                let route = self.router.route(t);
+                self.finish_formed(t, route, formed, stats);
             }
         }
     }
@@ -916,10 +1020,10 @@ impl<E: Inference> ServingCoordinator<E> {
     /// Execute every pending partial batch through its current route.
     fn flush_pending(&mut self, stats: &mut [TaskStats]) {
         for t in 0..self.n_tasks {
-            let maybe = self.batchers.get_mut(&t).and_then(|b| b.flush());
-            if let Some(batch) = maybe {
-                let stem = self.manifest[self.router.route_index(t)].stem.clone();
-                self.execute_batch(t, &stem, batch, stats);
+            let maybe = self.batchers.get_mut(&t).map(|b| b.flush());
+            if let Some(formed) = maybe {
+                let route = self.router.route(t);
+                self.finish_formed(t, route, formed, stats);
             }
         }
     }
@@ -927,21 +1031,11 @@ impl<E: Inference> ServingCoordinator<E> {
     /// Health-probe every faulted route off the request path; clear the
     /// fault signal after `heal_threshold` consecutive successes.
     fn probe_faulted(&mut self, seed: u64) {
-        let targets: Vec<(Engine, String)> = self
-            .faulted
-            .iter()
-            .map(|(e, p)| (*e, p.stem.clone()))
-            .collect();
-        for (e, stem) in targets {
-            let Some(input) = self
-                .manifest
-                .iter()
-                .find(|m| m.stem == stem)
-                .map(|meta| random_input(meta, seed))
-            else {
-                continue;
-            };
-            let healthy = self.engine.infer(&stem, &input).is_ok();
+        let targets: Vec<(Engine, ArtifactId)> =
+            self.faulted.iter().map(|(e, p)| (*e, p.route)).collect();
+        for (e, route) in targets {
+            let input = random_input_pooled(&self.manifest[route.index()], seed, &self.pool);
+            let healthy = self.engine.infer(route, &input).is_ok();
             self.tel
                 .recorder
                 .record(EventKind::Probe { engine: e.index() as u8, ok: healthy });
@@ -975,16 +1069,19 @@ pub(crate) fn build_batchers(
     manifest: &[ArtifactMeta],
     router: &Router,
     n_tasks: usize,
+    pool: &BufferPool,
 ) -> HashMap<usize, Batcher> {
     let routes: Vec<(usize, usize)> = (0..n_tasks).map(|t| (t, router.route_index(t))).collect();
-    build_batchers_for(manifest, &routes)
+    build_batchers_for(manifest, &routes, pool)
 }
 
 /// Batchers for an explicit (task, manifest index) route list — the
-/// pooled workers' form, which needs no router instance.
+/// pooled workers' form, which needs no router instance. All batchers
+/// form their batches out of the given shared lease pool.
 pub(crate) fn build_batchers_for(
     manifest: &[ArtifactMeta],
     routes: &[(usize, usize)],
+    pool: &BufferPool,
 ) -> HashMap<usize, Batcher> {
     let mut batchers = HashMap::new();
     for &(t, idx) in routes {
@@ -995,13 +1092,18 @@ pub(crate) fn build_batchers_for(
         let batch = if meta.input.shape.len() == 4 { meta.input.shape[0] } else { 1 };
         if meta.input.dtype == crate::runtime::DType::F32 && batch > 1 {
             let sample_len = meta.input.numel() / batch;
-            batchers.insert(t, Batcher::new(batch, sample_len, Duration::from_millis(5)));
+            batchers.insert(
+                t,
+                Batcher::with_pool(batch, sample_len, Duration::from_millis(5), pool.clone()),
+            );
         }
     }
     batchers
 }
 
-pub(crate) fn vec_sample(len: usize, seed: u64) -> Vec<f32> {
+/// One flat f32 sample drawn into a pooled lease (the zero-copy
+/// counterpart of collecting into a fresh `Vec`).
+pub(crate) fn sample_pooled(len: usize, seed: u64, pool: &BufferPool) -> TensorBuf {
     let mut rng = crate::util::Rng::new(seed);
-    (0..len).map(|_| rng.normal() as f32).collect()
+    pool.lease_with(len, |v| v.extend((0..len).map(|_| rng.normal() as f32)))
 }

@@ -31,6 +31,14 @@ pub enum CarinError {
         /// Deadline that fired, in milliseconds.
         deadline_ms: f64,
     },
+    /// A request payload does not match the route's expected sample
+    /// length; the request is counted `failed`, never panics the loop.
+    ShapeMismatch {
+        /// Sample length the batcher was built for.
+        expected: usize,
+        /// Length of the offending payload.
+        got: usize,
+    },
     /// Invalid configuration (policy, solution, CLI flags).
     Config(String),
     /// Filesystem / IO failure.
@@ -49,6 +57,7 @@ impl CarinError {
             CarinError::Artifact(_) => "artifact",
             CarinError::Engine(_) => "engine",
             CarinError::Timeout { .. } => "timeout",
+            CarinError::ShapeMismatch { .. } => "shape",
             CarinError::Config(_) => "config",
             CarinError::Io(_) => "io",
         }
@@ -71,6 +80,9 @@ impl fmt::Display for CarinError {
             CarinError::Engine(m) => write!(f, "engine error: {m}"),
             CarinError::Timeout { stem, deadline_ms } => {
                 write!(f, "inference timed out: {stem} exceeded {deadline_ms:.1} ms deadline")
+            }
+            CarinError::ShapeMismatch { expected, got } => {
+                write!(f, "shape mismatch: expected sample length {expected}, got {got}")
             }
             CarinError::Config(m) => write!(f, "config error: {m}"),
             CarinError::Io(m) => write!(f, "io error: {m}"),

@@ -33,6 +33,30 @@ impl DType {
     }
 }
 
+/// Interned handle for one artifact: the manifest index of a compiled
+/// (model, scheme) variant, assigned once at coordinator build time by
+/// `coordinator::router::RouteTable`.
+///
+/// The serving hot path passes these `Copy` ids instead of cloning stem
+/// `String`s — routing, telemetry events, fault bookkeeping and the
+/// watchdog channel all move a `u32`; display names are resolved back
+/// through the route table only at export/report time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ArtifactId(pub u32);
+
+impl ArtifactId {
+    /// Index into the manifest / route table this id was interned from.
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl std::fmt::Display for ArtifactId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "route#{}", self.0)
+    }
+}
+
 /// Shape + dtype of one I/O tensor.
 #[derive(Debug, Clone)]
 pub struct TensorSpec {

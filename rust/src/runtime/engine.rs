@@ -4,6 +4,7 @@
 //! device→host readback.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use std::time::Instant;
 
@@ -11,13 +12,22 @@ use anyhow::{anyhow, Context, Result};
 use xla::FromRawBytes;
 
 use super::artifact::{ArtifactMeta, DType};
+use crate::util::{BufferPool, TensorBuf};
 
 /// A host-side tensor crossing the engine boundary.
+///
+/// Every variant is reference-counted: `clone()` bumps an `Arc` instead
+/// of deep-copying the payload, so a tensor can cross the watchdog
+/// channel, sit in a batch and reach the engine as the same buffer (see
+/// ROADMAP "Memory path"). `F32` — the serving-path dtype — is a
+/// [`TensorBuf`], which additionally recycles through a
+/// [`BufferPool`]. Construct from plain vectors with
+/// `Tensor::F32(v.into())`.
 #[derive(Debug, Clone)]
 pub enum Tensor {
-    F32(Vec<f32>),
-    I32(Vec<i32>),
-    I8(Vec<i8>),
+    F32(TensorBuf),
+    I32(Arc<Vec<i32>>),
+    I8(Arc<Vec<i8>>),
 }
 
 impl Tensor {
@@ -44,7 +54,7 @@ impl Tensor {
     /// View as f32 (dequantising int8 logits with `scale` when given).
     pub fn to_f32(&self, scale: Option<f64>) -> Vec<f32> {
         match self {
-            Tensor::F32(v) => v.clone(),
+            Tensor::F32(v) => v.to_vec(),
             Tensor::I32(v) => v.iter().map(|&x| x as f32).collect(),
             Tensor::I8(v) => {
                 let s = scale.unwrap_or(1.0) as f32;
@@ -87,13 +97,30 @@ pub struct LoadedModel {
 pub struct InferenceEngine {
     client: xla::PjRtClient,
     models: HashMap<String, LoadedModel>,
+    /// Interned-route → stem associations learned through the
+    /// [`crate::runtime::Inference`] trait's id-addressed `load`.
+    route_names: HashMap<super::artifact::ArtifactId, String>,
 }
 
 impl InferenceEngine {
     /// Create a CPU-backed engine.
     pub fn cpu() -> Result<Self> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("{e:?}"))?;
-        Ok(InferenceEngine { client, models: HashMap::new() })
+        Ok(InferenceEngine { client, models: HashMap::new(), route_names: HashMap::new() })
+    }
+
+    /// Associate an interned route id with a stem (id-addressed trait
+    /// calls resolve through this; the stem-addressed inherent API is
+    /// unaffected).
+    pub fn note_route(&mut self, route: super::artifact::ArtifactId, stem: &str) {
+        if self.route_names.get(&route).map(String::as_str) != Some(stem) {
+            self.route_names.insert(route, stem.to_string());
+        }
+    }
+
+    /// Stem a route id was loaded under, if any.
+    pub fn route_stem(&self, route: super::artifact::ArtifactId) -> Option<&str> {
+        self.route_names.get(&route).map(String::as_str)
     }
 
     pub fn platform(&self) -> String {
@@ -177,9 +204,9 @@ impl InferenceEngine {
         }
         let dims = &meta.input.shape;
         let in_buf = match input {
-            Tensor::F32(v) => self.client.buffer_from_host_buffer(v, dims, None),
-            Tensor::I32(v) => self.client.buffer_from_host_buffer(v, dims, None),
-            Tensor::I8(v) => self.client.buffer_from_host_buffer(v, dims, None),
+            Tensor::F32(v) => self.client.buffer_from_host_buffer(v.as_slice(), dims, None),
+            Tensor::I32(v) => self.client.buffer_from_host_buffer(v.as_slice(), dims, None),
+            Tensor::I8(v) => self.client.buffer_from_host_buffer(v.as_slice(), dims, None),
         }
         .map_err(|e| anyhow!("input upload: {e:?}"))?;
 
@@ -194,9 +221,9 @@ impl InferenceEngine {
         let out = literal.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
         let spec = &meta.outputs[0];
         let tensor = match spec.dtype {
-            DType::F32 => Tensor::F32(out.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?),
-            DType::I32 => Tensor::I32(out.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?),
-            DType::I8 => Tensor::I8(out.to_vec::<i8>().map_err(|e| anyhow!("{e:?}"))?),
+            DType::F32 => Tensor::F32(out.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?.into()),
+            DType::I32 => Tensor::I32(out.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?.into()),
+            DType::I8 => Tensor::I8(out.to_vec::<i8>().map_err(|e| anyhow!("{e:?}"))?.into()),
         };
         Ok(tensor)
     }
@@ -221,9 +248,9 @@ impl InferenceEngine {
 pub fn zero_input(meta: &ArtifactMeta) -> Tensor {
     let n = meta.input.numel();
     match meta.input.dtype {
-        DType::F32 => Tensor::F32(vec![0.0; n]),
-        DType::I32 => Tensor::I32(vec![0; n]),
-        DType::I8 => Tensor::I8(vec![0; n]),
+        DType::F32 => Tensor::F32(vec![0.0; n].into()),
+        DType::I32 => Tensor::I32(vec![0; n].into()),
+        DType::I8 => Tensor::I8(vec![0; n].into()),
     }
 }
 
@@ -232,10 +259,28 @@ pub fn random_input(meta: &ArtifactMeta, seed: u64) -> Tensor {
     let mut rng = crate::util::Rng::new(seed);
     let n = meta.input.numel();
     match meta.input.dtype {
-        DType::F32 => Tensor::F32((0..n).map(|_| rng.normal() as f32).collect()),
-        DType::I32 => Tensor::I32((0..n).map(|_| rng.below(1024) as i32).collect()),
-        DType::I8 => Tensor::I8((0..n).map(|_| (rng.below(200) as i32 - 100) as i8).collect()),
+        DType::F32 => Tensor::F32((0..n).map(|_| rng.normal() as f32).collect::<Vec<_>>().into()),
+        DType::I32 => Tensor::I32((0..n).map(|_| rng.below(1024) as i32).collect::<Vec<_>>().into()),
+        DType::I8 => Tensor::I8(
+            (0..n).map(|_| (rng.below(200) as i32 - 100) as i8).collect::<Vec<_>>().into(),
+        ),
     }
+}
+
+/// Like [`random_input`], but F32 inputs — the serving-path dtype — fill
+/// a buffer leased from `pool` instead of allocating, so the hot path
+/// stays allocation-free. Non-F32 inputs fall back to [`random_input`].
+pub fn random_input_pooled(meta: &ArtifactMeta, seed: u64, pool: &BufferPool) -> Tensor {
+    if meta.input.dtype != DType::F32 {
+        return random_input(meta, seed);
+    }
+    let mut rng = crate::util::Rng::new(seed);
+    let n = meta.input.numel();
+    Tensor::F32(pool.lease_with(n, |v| {
+        for _ in 0..n {
+            v.push(rng.normal() as f32);
+        }
+    }))
 }
 
 #[cfg(test)]
@@ -244,19 +289,27 @@ mod tests {
 
     #[test]
     fn argmax_basic() {
-        assert_eq!(Tensor::F32(vec![0.1, 0.9, 0.5]).argmax(), 1);
-        assert_eq!(Tensor::I8(vec![-3, 7, 2]).argmax(), 1);
-        assert_eq!(Tensor::F32(Vec::new()).argmax(), 0);
+        assert_eq!(Tensor::F32(vec![0.1, 0.9, 0.5].into()).argmax(), 1);
+        assert_eq!(Tensor::I8(vec![-3, 7, 2].into()).argmax(), 1);
+        assert_eq!(Tensor::F32(Vec::new().into()).argmax(), 0);
     }
 
     #[test]
     fn argmax_survives_nan_logits() {
         // NaN compares below every real under total_cmp: a bad output
         // yields some class, never a panic mid-serve.
-        let t = Tensor::F32(vec![f32::NAN, 1.0, f32::NAN, 3.0, 2.0]);
+        let t = Tensor::F32(vec![f32::NAN, 1.0, f32::NAN, 3.0, 2.0].into());
         assert_eq!(t.argmax(), 3);
         // all-NaN still returns an index without panicking
-        let all = Tensor::F32(vec![f32::NAN, f32::NAN]);
+        let all = Tensor::F32(vec![f32::NAN, f32::NAN].into());
         assert!(all.argmax() < 2);
+    }
+
+    #[test]
+    fn tensor_clone_shares_the_buffer() {
+        let t = Tensor::F32(vec![1.0, 2.0].into());
+        let u = t.clone();
+        let (Tensor::F32(a), Tensor::F32(b)) = (&t, &u) else { unreachable!() };
+        assert!(std::ptr::eq(a.as_slice().as_ptr(), b.as_slice().as_ptr()));
     }
 }

@@ -37,23 +37,30 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use super::artifact::{ArtifactMeta, DType, TensorSpec};
+use super::artifact::{ArtifactId, ArtifactMeta, DType, TensorSpec};
 use super::engine::{InferenceEngine, Tensor};
 use crate::error::CarinError;
-use crate::util::Rng;
+use crate::util::{BufferPool, Rng};
 use crate::zoo::{Registry, Scheme};
 
 /// The executor abstraction the serving coordinator supervises. The real
 /// PJRT engine, the stub engine and the fault injector all implement it,
 /// so supervision and injection compose with any backend.
+///
+/// Models are addressed by interned [`ArtifactId`] handles (`Copy`, one
+/// `u32`): the hot path never clones a stem `String`, and the id→stem
+/// association is learned once at [`Inference::load`] time from the
+/// `ArtifactMeta` (display names are only resolved back on cold error/
+/// export paths).
 pub trait Inference {
     /// Run one inference on a loaded model.
-    fn infer(&mut self, stem: &str, input: &Tensor) -> Result<Tensor>;
-    /// Compile an artifact and make it resident. Idempotent per stem.
-    fn load(&mut self, meta: &ArtifactMeta) -> Result<()>;
+    fn infer(&mut self, route: ArtifactId, input: &Tensor) -> Result<Tensor>;
+    /// Compile an artifact and make it resident under `route`.
+    /// Idempotent per route.
+    fn load(&mut self, route: ArtifactId, meta: &ArtifactMeta) -> Result<()>;
     /// Drop a resident model.
-    fn unload(&mut self, stem: &str);
-    fn is_loaded(&self, stem: &str) -> bool;
+    fn unload(&mut self, route: ArtifactId);
+    fn is_loaded(&self, route: ArtifactId) -> bool;
     /// Number of resident models.
     fn loaded_count(&self) -> usize;
     /// Injection counters, if this executor (or a decorator in its stack)
@@ -71,20 +78,27 @@ pub trait Inference {
 }
 
 impl Inference for InferenceEngine {
-    fn infer(&mut self, stem: &str, input: &Tensor) -> Result<Tensor> {
+    fn infer(&mut self, route: ArtifactId, input: &Tensor) -> Result<Tensor> {
+        let stem = self
+            .route_stem(route)
+            .ok_or_else(|| anyhow!("{route} never loaded through this engine"))?;
         InferenceEngine::infer(self, stem, input)
     }
 
-    fn load(&mut self, meta: &ArtifactMeta) -> Result<()> {
+    fn load(&mut self, route: ArtifactId, meta: &ArtifactMeta) -> Result<()> {
+        self.note_route(route, &meta.stem);
         InferenceEngine::load(self, meta)
     }
 
-    fn unload(&mut self, stem: &str) {
-        InferenceEngine::unload(self, stem)
+    fn unload(&mut self, route: ArtifactId) {
+        if let Some(stem) = self.route_stem(route) {
+            let stem = stem.to_string();
+            InferenceEngine::unload(self, &stem)
+        }
     }
 
-    fn is_loaded(&self, stem: &str) -> bool {
-        InferenceEngine::is_loaded(self, stem)
+    fn is_loaded(&self, route: ArtifactId) -> bool {
+        self.route_stem(route).is_some_and(|s| InferenceEngine::is_loaded(self, s))
     }
 
     fn loaded_count(&self) -> usize {
@@ -151,8 +165,9 @@ impl fmt::Display for InjectedFault {
 impl std::error::Error for InjectedFault {}
 
 /// Per-model fault probabilities and schedules. All fields default to
-/// "no fault"; combine with the builder methods.
-#[derive(Debug, Clone, Default)]
+/// "no fault"; combine with the builder methods. `Copy`, so the per-call
+/// spec lookup never allocates.
+#[derive(Debug, Clone, Copy, Default)]
 pub struct FaultSpec {
     /// Per-call probability of a transient execution error.
     pub transient_p: f64,
@@ -249,9 +264,14 @@ pub struct FaultInjector<E: Inference> {
     inner: E,
     rng: Rng,
     default_spec: FaultSpec,
+    /// Specs stay keyed by stem so tests/benches can target a model by
+    /// name before any route ids exist; resolved per call through
+    /// `names` without allocating.
     per_stem: HashMap<String, FaultSpec>,
-    /// Per-stem inference call counts (1-based after increment).
-    calls: HashMap<String, u64>,
+    /// Route → stem associations learned at `load` time.
+    names: HashMap<ArtifactId, String>,
+    /// Per-route inference call counts (1-based after increment).
+    calls: HashMap<ArtifactId, u64>,
     pub stats: FaultStats,
 }
 
@@ -262,6 +282,7 @@ impl<E: Inference> FaultInjector<E> {
             rng: Rng::new(seed ^ 0xFA17_FA17_FA17_FA17),
             default_spec: FaultSpec::default(),
             per_stem: HashMap::new(),
+            names: HashMap::new(),
             calls: HashMap::new(),
             stats: FaultStats::default(),
         }
@@ -289,35 +310,41 @@ impl<E: Inference> FaultInjector<E> {
         self.inner
     }
 
-    /// Inference calls observed for a stem so far.
-    pub fn calls_for(&self, stem: &str) -> u64 {
-        self.calls.get(stem).copied().unwrap_or(0)
+    /// Inference calls observed for a route so far.
+    pub fn calls_for(&self, route: ArtifactId) -> u64 {
+        self.calls.get(&route).copied().unwrap_or(0)
     }
 
-    fn spec_for(&self, stem: &str) -> FaultSpec {
-        self.per_stem.get(stem).unwrap_or(&self.default_spec).clone()
+    /// Stem for error payloads/logs; falls back to the `route#N` display
+    /// form for routes that never loaded. Cold path only.
+    fn display_name(&self, route: ArtifactId) -> String {
+        self.names.get(&route).cloned().unwrap_or_else(|| route.to_string())
+    }
+
+    fn spec_for(&self, route: ArtifactId) -> FaultSpec {
+        self.names
+            .get(&route)
+            .and_then(|stem| self.per_stem.get(stem))
+            .copied()
+            .unwrap_or(self.default_spec)
     }
 }
 
 impl<E: Inference> Inference for FaultInjector<E> {
-    fn infer(&mut self, stem: &str, input: &Tensor) -> Result<Tensor> {
+    fn infer(&mut self, route: ArtifactId, input: &Tensor) -> Result<Tensor> {
         let call = {
-            let c = self.calls.entry(stem.to_string()).or_insert(0);
+            let c = self.calls.entry(route).or_insert(0);
             *c += 1;
             *c
         };
         self.stats.calls += 1;
-        let spec = self.spec_for(stem);
+        let spec = self.spec_for(route);
         if let Some((from, to)) = spec.outage {
             if call >= from && call <= to {
                 self.stats.injected_errors += 1;
+                let stem = self.display_name(route);
                 crate::log_trace!("inject outage fault on {stem} (call #{call})");
-                return Err(InjectedFault {
-                    kind: FaultKind::Outage,
-                    stem: stem.to_string(),
-                    call,
-                }
-                .into());
+                return Err(InjectedFault { kind: FaultKind::Outage, stem, call }.into());
             }
         }
         let hang = spec.hang_until.is_some_and(|until| Instant::now() < until)
@@ -325,48 +352,50 @@ impl<E: Inference> Inference for FaultInjector<E> {
         if hang {
             self.stats.injected_hangs += 1;
             crate::log_trace!(
-                "inject hang on {stem} (call #{call}, {:.0} ms)",
+                "inject hang on {} (call #{call}, {:.0} ms)",
+                self.display_name(route),
                 spec.hang_ms
             );
             std::thread::sleep(Duration::from_secs_f64(spec.hang_ms.max(0.0) / 1000.0));
         }
         if spec.transient_p > 0.0 && self.rng.chance(spec.transient_p) {
             self.stats.injected_errors += 1;
+            let stem = self.display_name(route);
             crate::log_trace!("inject transient fault on {stem} (call #{call})");
-            return Err(InjectedFault {
-                kind: FaultKind::Transient,
-                stem: stem.to_string(),
-                call,
-            }
-            .into());
+            return Err(InjectedFault { kind: FaultKind::Transient, stem, call }.into());
         }
         if spec.spike_p > 0.0 && self.rng.chance(spec.spike_p) {
             self.stats.injected_spikes += 1;
             std::thread::sleep(Duration::from_secs_f64(spec.spike_ms.max(0.0) / 1000.0));
         }
-        self.inner.infer(stem, input)
+        self.inner.infer(route, input)
     }
 
-    fn load(&mut self, meta: &ArtifactMeta) -> Result<()> {
-        let spec = self.spec_for(&meta.stem);
+    fn load(&mut self, route: ArtifactId, meta: &ArtifactMeta) -> Result<()> {
+        // learn the association before attempting the load, so faults on
+        // a route that never loaded still carry the stem name
+        if self.names.get(&route).map(String::as_str) != Some(meta.stem.as_str()) {
+            self.names.insert(route, meta.stem.clone());
+        }
+        let spec = self.per_stem.get(&meta.stem).copied().unwrap_or(self.default_spec);
         if spec.load_fail_p > 0.0 && self.rng.chance(spec.load_fail_p) {
             self.stats.failed_loads += 1;
             return Err(InjectedFault {
                 kind: FaultKind::Load,
                 stem: meta.stem.clone(),
-                call: self.calls_for(&meta.stem),
+                call: self.calls_for(route),
             }
             .into());
         }
-        self.inner.load(meta)
+        self.inner.load(route, meta)
     }
 
-    fn unload(&mut self, stem: &str) {
-        self.inner.unload(stem)
+    fn unload(&mut self, route: ArtifactId) {
+        self.inner.unload(route)
     }
 
-    fn is_loaded(&self, stem: &str) -> bool {
-        self.inner.is_loaded(stem)
+    fn is_loaded(&self, route: ArtifactId) -> bool {
+        self.inner.is_loaded(route)
     }
 
     fn loaded_count(&self) -> usize {
@@ -399,9 +428,11 @@ pub struct WatchdogStats {
 /// with the generation the job was issued under, so a reply from before
 /// a respawn can never be mistaken for the current call's result.
 enum Job {
-    Infer { stem: String, input: Tensor, generation: u64 },
-    Load { meta: Box<ArtifactMeta>, generation: u64 },
-    Unload { stem: String },
+    /// `input` is `Arc`-backed, so shipping it across the channel bumps
+    /// a refcount instead of deep-copying the payload.
+    Infer { route: ArtifactId, input: Tensor, generation: u64 },
+    Load { route: ArtifactId, meta: Box<ArtifactMeta>, generation: u64 },
+    Unload { route: ArtifactId },
     Stats { generation: u64 },
 }
 
@@ -464,7 +495,7 @@ pub struct Watchdog<E: Inference + 'static> {
     deadline: Option<Duration>,
     /// Supervisor-side mirror of the resident set, replayed into every
     /// respawned executor.
-    resident: HashMap<String, ArtifactMeta>,
+    resident: HashMap<ArtifactId, ArtifactMeta>,
     pub stats: WatchdogStats,
 }
 
@@ -528,16 +559,16 @@ impl<E: Inference + 'static> Watchdog<E> {
                 };
                 while let Ok(job) = jrx.recv() {
                     let reply = match job {
-                        Job::Infer { stem, input, generation } => Reply::Infer {
+                        Job::Infer { route, input, generation } => Reply::Infer {
                             generation,
-                            result: engine.infer(&stem, &input),
+                            result: engine.infer(route, &input),
                         },
-                        Job::Load { meta, generation } => Reply::Load {
+                        Job::Load { route, meta, generation } => Reply::Load {
                             generation,
-                            result: engine.load(&meta),
+                            result: engine.load(route, &meta),
                         },
-                        Job::Unload { stem } => {
-                            engine.unload(&stem);
+                        Job::Unload { route } => {
+                            engine.unload(route);
                             continue;
                         }
                         Job::Stats { generation } => Reply::Stats {
@@ -563,9 +594,9 @@ impl<E: Inference + 'static> Watchdog<E> {
             Err(_) => return Err(anyhow!("watchdog: executor thread never came up")),
         }
         // replay the resident set so the fresh executor is route-complete
-        for meta in self.resident.values() {
+        for (&route, meta) in self.resident.iter() {
             link.tx
-                .send(Job::Load { meta: Box::new(meta.clone()), generation })
+                .send(Job::Load { route, meta: Box::new(meta.clone()), generation })
                 .map_err(|_| anyhow!("watchdog: executor thread died during replay"))?;
             match link.rx.recv_timeout(WATCHDOG_SETUP_WAIT) {
                 Ok(Reply::Load { result: Ok(()), .. }) => {}
@@ -604,40 +635,48 @@ impl<E: Inference + 'static> Watchdog<E> {
     }
 
     /// Abandon the (presumed hung) executor thread and surface the
-    /// timeout as a typed error.
-    fn on_timeout(&mut self, stem: &str, deadline: Duration) -> anyhow::Error {
+    /// timeout as a typed error. Display names resolve through the
+    /// resident mirror — this is a cold path; the hot path only ever
+    /// moved the `Copy` route id.
+    fn on_timeout(&mut self, route: ArtifactId, deadline: Duration) -> anyhow::Error {
         self.stats.timeouts += 1;
         // dropping the link closes the reply channel: the stalled call's
         // eventual result has nowhere to go, and the thread exits on its
         // failed send
         self.link = None;
+        let stem = self
+            .resident
+            .get(&route)
+            .map(|m| m.stem.clone())
+            .unwrap_or_else(|| route.to_string());
         crate::log_debug!(
             "watchdog: {stem} exceeded {:.1} ms deadline, executor thread abandoned",
             deadline.as_secs_f64() * 1000.0
         );
         anyhow::Error::new(CarinError::Timeout {
-            stem: stem.to_string(),
+            stem,
             deadline_ms: deadline.as_secs_f64() * 1000.0,
         })
     }
 }
 
 impl<E: Inference + 'static> Inference for Watchdog<E> {
-    fn infer(&mut self, stem: &str, input: &Tensor) -> Result<Tensor> {
+    fn infer(&mut self, route: ArtifactId, input: &Tensor) -> Result<Tensor> {
         self.ensure_thread()?;
         let generation = self.generation;
         self.link
             .as_ref()
             .expect("link after ensure_thread")
             .tx
-            .send(Job::Infer { stem: stem.to_string(), input: input.clone(), generation })
+            // the tensor clone is an Arc bump, not a payload copy
+            .send(Job::Infer { route, input: input.clone(), generation })
             .map_err(|_| anyhow!("watchdog: executor thread terminated"))?;
         match self.await_reply(self.deadline) {
             Ok(Reply::Infer { result, .. }) => result,
             Ok(_) => Err(anyhow!("watchdog: mismatched reply for infer")),
             Err(mpsc::RecvTimeoutError::Timeout) => {
                 let d = self.deadline.expect("timeout implies a deadline");
-                Err(self.on_timeout(stem, d))
+                Err(self.on_timeout(route, d))
             }
             Err(mpsc::RecvTimeoutError::Disconnected) => {
                 self.link = None;
@@ -646,25 +685,25 @@ impl<E: Inference + 'static> Inference for Watchdog<E> {
         }
     }
 
-    fn load(&mut self, meta: &ArtifactMeta) -> Result<()> {
+    fn load(&mut self, route: ArtifactId, meta: &ArtifactMeta) -> Result<()> {
         self.ensure_thread()?;
         let generation = self.generation;
         self.link
             .as_ref()
             .expect("link after ensure_thread")
             .tx
-            .send(Job::Load { meta: Box::new(meta.clone()), generation })
+            .send(Job::Load { route, meta: Box::new(meta.clone()), generation })
             .map_err(|_| anyhow!("watchdog: executor thread terminated"))?;
         match self.await_reply(Some(WATCHDOG_SETUP_WAIT)) {
             Ok(Reply::Load { result, .. }) => {
                 if result.is_ok() {
-                    self.resident.insert(meta.stem.clone(), meta.clone());
+                    self.resident.insert(route, meta.clone());
                 }
                 result
             }
             Ok(_) => Err(anyhow!("watchdog: mismatched reply for load")),
             Err(mpsc::RecvTimeoutError::Timeout) => {
-                Err(self.on_timeout(&meta.stem, WATCHDOG_SETUP_WAIT))
+                Err(self.on_timeout(route, WATCHDOG_SETUP_WAIT))
             }
             Err(mpsc::RecvTimeoutError::Disconnected) => {
                 self.link = None;
@@ -673,15 +712,15 @@ impl<E: Inference + 'static> Inference for Watchdog<E> {
         }
     }
 
-    fn unload(&mut self, stem: &str) {
-        self.resident.remove(stem);
+    fn unload(&mut self, route: ArtifactId) {
+        self.resident.remove(&route);
         if let Some(link) = &self.link {
-            let _ = link.tx.send(Job::Unload { stem: stem.to_string() });
+            let _ = link.tx.send(Job::Unload { route });
         }
     }
 
-    fn is_loaded(&self, stem: &str) -> bool {
-        self.resident.contains_key(stem)
+    fn is_loaded(&self, route: ArtifactId) -> bool {
+        self.resident.contains_key(&route)
     }
 
     fn loaded_count(&self) -> usize {
@@ -712,39 +751,52 @@ impl<E: Inference + 'static> Inference for Watchdog<E> {
 /// and returns an all-zero logits tensor, optionally burning `exec_ms`
 /// of wall-clock per call. Lets chaos tests, examples and benches run
 /// the full coordinator stack without `make artifacts`.
+///
+/// Output tensors lease recycled buffers from an internal
+/// [`BufferPool`], so steady-state stub serving allocates nothing per
+/// call (the property the counting-allocator test pins down).
 #[derive(Debug, Default)]
 pub struct StubEngine {
-    models: HashMap<String, ArtifactMeta>,
+    models: HashMap<ArtifactId, ArtifactMeta>,
     /// Simulated execution latency per call, ms (0 = instant).
     pub exec_ms: f64,
+    out_pool: BufferPool,
 }
 
 impl StubEngine {
     pub fn new() -> StubEngine {
-        StubEngine { models: HashMap::new(), exec_ms: 0.0 }
+        StubEngine::default()
     }
 
     pub fn with_latency(exec_ms: f64) -> StubEngine {
-        StubEngine { models: HashMap::new(), exec_ms }
+        StubEngine { exec_ms, ..StubEngine::default() }
+    }
+
+    /// Output buffer-pool counters (for the memory-path telemetry).
+    pub fn out_pool_stats(&self) -> crate::util::BufPoolStats {
+        self.out_pool.sweep_returns();
+        self.out_pool.stats()
     }
 }
 
 impl Inference for StubEngine {
-    fn infer(&mut self, stem: &str, input: &Tensor) -> Result<Tensor> {
+    fn infer(&mut self, route: ArtifactId, input: &Tensor) -> Result<Tensor> {
         let meta = self
             .models
-            .get(stem)
-            .ok_or_else(|| anyhow!("model {stem} not loaded"))?;
+            .get(&route)
+            .ok_or_else(|| anyhow!("model {route} not loaded"))?;
         if input.dtype() != meta.input.dtype {
             return Err(anyhow!(
-                "{stem}: input dtype {:?} != manifest {:?}",
+                "{}: input dtype {:?} != manifest {:?}",
+                meta.stem,
                 input.dtype(),
                 meta.input.dtype
             ));
         }
         if input.len() != meta.input.numel() {
             return Err(anyhow!(
-                "{stem}: input numel {} != manifest {}",
+                "{}: input numel {} != manifest {}",
+                meta.stem,
                 input.len(),
                 meta.input.numel()
             ));
@@ -753,20 +805,20 @@ impl Inference for StubEngine {
         if self.exec_ms > 0.0 {
             std::thread::sleep(Duration::from_secs_f64(self.exec_ms / 1000.0));
         }
-        Ok(Tensor::F32(vec![0.0; n]))
+        Ok(Tensor::F32(self.out_pool.lease_zeroed(n)))
     }
 
-    fn load(&mut self, meta: &ArtifactMeta) -> Result<()> {
-        self.models.entry(meta.stem.clone()).or_insert_with(|| meta.clone());
+    fn load(&mut self, route: ArtifactId, meta: &ArtifactMeta) -> Result<()> {
+        self.models.entry(route).or_insert_with(|| meta.clone());
         Ok(())
     }
 
-    fn unload(&mut self, stem: &str) {
-        self.models.remove(stem);
+    fn unload(&mut self, route: ArtifactId) {
+        self.models.remove(&route);
     }
 
-    fn is_loaded(&self, stem: &str) -> bool {
-        self.models.contains_key(stem)
+    fn is_loaded(&self, route: ArtifactId) -> bool {
+        self.models.contains_key(&route)
     }
 
     fn loaded_count(&self) -> usize {
@@ -811,27 +863,47 @@ mod tests {
     use super::*;
     use crate::runtime::engine::random_input;
 
+    /// Route id of the first synthetic-manifest entry (ids are manifest
+    /// indices).
+    const R0: ArtifactId = ArtifactId(0);
+    const R1: ArtifactId = ArtifactId(1);
+
     fn loaded_stub() -> (StubEngine, ArtifactMeta) {
         let reg = Registry::paper();
         let manifest = synthetic_manifest(&reg);
         let meta = manifest[0].clone();
         let mut e = StubEngine::new();
-        e.load(&meta).unwrap();
+        e.load(R0, &meta).unwrap();
         (e, meta)
     }
 
     #[test]
     fn stub_engine_round_trip() {
         let (mut e, meta) = loaded_stub();
-        assert!(e.is_loaded(&meta.stem));
+        assert!(e.is_loaded(R0));
         assert_eq!(e.loaded_count(), 1);
-        let out = e.infer(&meta.stem, &random_input(&meta, 1)).unwrap();
+        let out = e.infer(R0, &random_input(&meta, 1)).unwrap();
         assert_eq!(out.len(), meta.outputs[0].numel());
         // validation mirrors the real engine's
-        assert!(e.infer(&meta.stem, &Tensor::F32(vec![0.0; 3])).is_err());
-        assert!(e.infer("nope", &random_input(&meta, 1)).is_err());
-        e.unload(&meta.stem);
-        assert!(!e.is_loaded(&meta.stem));
+        assert!(e.infer(R0, &Tensor::F32(vec![0.0; 3].into())).is_err());
+        assert!(e.infer(ArtifactId(999), &random_input(&meta, 1)).is_err());
+        e.unload(R0);
+        assert!(!e.is_loaded(R0));
+    }
+
+    #[test]
+    fn stub_outputs_recycle_pooled_buffers() {
+        let (mut e, meta) = loaded_stub();
+        let input = random_input(&meta, 1);
+        let first = e.infer(R0, &input).unwrap();
+        let Tensor::F32(buf) = &first else { unreachable!() };
+        let ptr = buf.as_slice().as_ptr();
+        drop(first);
+        let second = e.infer(R0, &input).unwrap();
+        let Tensor::F32(buf) = &second else { unreachable!() };
+        assert!(std::ptr::eq(ptr, buf.as_slice().as_ptr()), "output slot recycled");
+        let stats = e.out_pool_stats();
+        assert_eq!((stats.hits, stats.misses), (1, 1));
     }
 
     #[test]
@@ -858,7 +930,7 @@ mod tests {
         let input = random_input(&meta, 1);
         let mut errors = 0usize;
         for _ in 0..2000 {
-            if inj.infer(&meta.stem, &input).is_err() {
+            if inj.infer(R0, &input).is_err() {
                 errors += 1;
             }
         }
@@ -866,6 +938,7 @@ mod tests {
         assert!((rate - 0.10).abs() < 0.03, "rate {rate}");
         assert_eq!(inj.stats.injected_errors as usize, errors);
         assert_eq!(inj.stats.calls, 2000);
+        assert_eq!(inj.calls_for(R0), 2000);
     }
 
     #[test]
@@ -875,7 +948,7 @@ mod tests {
             let mut inj = FaultInjector::new(e, seed);
             inj.set_default(FaultSpec::transient(0.25));
             let input = random_input(&meta, 1);
-            (0..200).map(|_| inj.infer(&meta.stem, &input).is_err()).collect()
+            (0..200).map(|_| inj.infer(R0, &input).is_err()).collect()
         };
         assert_eq!(run(42), run(42));
         assert_ne!(run(42), run(43));
@@ -885,15 +958,19 @@ mod tests {
     fn outage_window_is_exact() {
         let (e, meta) = loaded_stub();
         let mut inj = FaultInjector::new(e, 1);
+        // the stem-keyed spec resolves through the route association
+        // learned when the injector sees the load
+        inj.load(R0, &meta).unwrap();
         inj.set_for(&meta.stem, FaultSpec::default().with_outage(3, 5));
         let input = random_input(&meta, 1);
         for call in 1u64..=8 {
-            let r = inj.infer(&meta.stem, &input);
+            let r = inj.infer(R0, &input);
             if (3..=5).contains(&call) {
                 let err = r.unwrap_err();
                 let f = err.downcast_ref::<InjectedFault>().expect("typed fault");
                 assert_eq!(f.kind, FaultKind::Outage);
                 assert_eq!(f.call, call);
+                assert_eq!(f.stem, meta.stem, "fault names the stem, not the id");
             } else {
                 assert!(r.is_ok(), "call {call} should pass");
             }
@@ -907,7 +984,7 @@ mod tests {
         inj.set_default(FaultSpec::default().with_spikes(1.0, 5.0));
         let input = random_input(&meta, 1);
         let t0 = std::time::Instant::now();
-        inj.infer(&meta.stem, &input).unwrap();
+        inj.infer(R0, &input).unwrap();
         assert!(t0.elapsed() >= Duration::from_millis(4));
         assert_eq!(inj.stats.injected_spikes, 1);
     }
@@ -918,7 +995,7 @@ mod tests {
         let meta = synthetic_manifest(&reg)[0].clone();
         let mut inj = FaultInjector::new(StubEngine::new(), 3);
         inj.set_default(FaultSpec::default().with_load_failures(1.0));
-        let err = inj.load(&meta).unwrap_err();
+        let err = inj.load(R0, &meta).unwrap_err();
         assert_eq!(
             err.downcast_ref::<InjectedFault>().unwrap().kind,
             FaultKind::Load
@@ -926,8 +1003,8 @@ mod tests {
         assert_eq!(inj.stats.failed_loads, 1);
         // clearing the spec lets the load through
         inj.set_default(FaultSpec::default());
-        inj.load(&meta).unwrap();
-        assert!(inj.is_loaded(&meta.stem));
+        inj.load(R0, &meta).unwrap();
+        assert!(inj.is_loaded(R0));
     }
 
     #[test]
@@ -938,7 +1015,7 @@ mod tests {
         let input = random_input(&meta, 1);
         let t0 = std::time::Instant::now();
         // without a watchdog a hang is just a very late success
-        inj.infer(&meta.stem, &input).unwrap();
+        inj.infer(R0, &input).unwrap();
         assert!(t0.elapsed() >= Duration::from_millis(25));
         assert_eq!(inj.stats.injected_hangs, 1);
         assert_eq!(inj.fault_stats().unwrap().injected_hangs, 1);
@@ -958,23 +1035,25 @@ mod tests {
         })
         .unwrap();
         dog.set_call_deadline(Some(Duration::from_millis(25)));
-        dog.load(&meta).unwrap();
+        dog.load(R0, &meta).unwrap();
         let input = random_input(&meta, 1);
 
-        let err = dog.infer(&stem, &input).unwrap_err();
+        let err = dog.infer(R0, &input).unwrap_err();
         let typed = CarinError::find_in(&err).expect("typed timeout in chain");
         assert!(typed.is_timeout());
+        // the timeout's display name resolves through the resident set
+        assert!(err.to_string().contains(&stem), "{err:#}");
         assert_eq!(fault_kind_of(&err), Some(FaultKind::Timeout));
         assert_eq!(dog.stats.timeouts, 1);
         // the mirror survives the abandonment, so the respawned executor
         // will be route-complete
-        assert!(dog.is_loaded(&stem));
+        assert!(dog.is_loaded(R0));
         assert_eq!(dog.loaded_count(), 1);
 
         // after the wall-clock hang window ends, the next call respawns
         // a fresh executor, replays the resident set and succeeds
         std::thread::sleep(Duration::from_millis(160));
-        let out = dog.infer(&stem, &input).unwrap();
+        let out = dog.infer(R0, &input).unwrap();
         assert_eq!(out.len(), meta.outputs[0].numel());
         assert_eq!(dog.stats.respawns, 1);
     }
@@ -994,15 +1073,15 @@ mod tests {
         })
         .unwrap();
         dog.set_call_deadline(Some(Duration::from_millis(20)));
-        dog.load(&a).unwrap();
-        dog.load(&b).unwrap();
-        let err = dog.infer(&a.stem, &random_input(&a, 1)).unwrap_err();
+        dog.load(R0, &a).unwrap();
+        dog.load(R1, &b).unwrap();
+        let err = dog.infer(R0, &random_input(&a, 1)).unwrap_err();
         assert_eq!(fault_kind_of(&err), Some(FaultKind::Timeout));
         // the very next call runs on a fresh thread immediately — it is
         // not queued behind the stalled call, and the stalled call's
         // eventual (discarded) result can never surface here
         let t0 = Instant::now();
-        let out = dog.infer(&b.stem, &random_input(&b, 1)).unwrap();
+        let out = dog.infer(R1, &random_input(&b, 1)).unwrap();
         assert!(t0.elapsed() < Duration::from_millis(250), "stalled behind hung call");
         assert_eq!(out.len(), b.outputs[0].numel());
         assert_eq!(dog.stats.timeouts, 1);
@@ -1014,15 +1093,15 @@ mod tests {
         let reg = Registry::paper();
         let meta = synthetic_manifest(&reg)[0].clone();
         let mut dog = Watchdog::new(|| Ok(StubEngine::new())).unwrap();
-        dog.load(&meta).unwrap();
-        let out = dog.infer(&meta.stem, &random_input(&meta, 1)).unwrap();
+        dog.load(R0, &meta).unwrap();
+        let out = dog.infer(R0, &random_input(&meta, 1)).unwrap();
         assert_eq!(out.len(), meta.outputs[0].numel());
         assert_eq!(dog.stats.timeouts, 0);
         assert_eq!(dog.stats.respawns, 0);
         // fault stats forward through the sacrificial thread
         assert!(dog.fault_stats().is_none()); // StubEngine has none
-        dog.unload(&meta.stem);
-        assert!(!dog.is_loaded(&meta.stem));
+        dog.unload(R0);
+        assert!(!dog.is_loaded(R0));
     }
 
     #[test]
@@ -1037,12 +1116,12 @@ mod tests {
         let manifest = synthetic_manifest(&reg);
         let (a, b) = (manifest[0].clone(), manifest[1].clone());
         let mut inj = FaultInjector::new(StubEngine::new(), 9);
-        inj.load(&a).unwrap();
-        inj.load(&b).unwrap();
+        inj.load(R0, &a).unwrap();
+        inj.load(R1, &b).unwrap();
         inj.set_for(&a.stem, FaultSpec::transient(1.0));
         let ia = random_input(&a, 1);
         let ib = random_input(&b, 1);
-        assert!(inj.infer(&a.stem, &ia).is_err());
-        assert!(inj.infer(&b.stem, &ib).is_ok());
+        assert!(inj.infer(R0, &ia).is_err());
+        assert!(inj.infer(R1, &ib).is_ok());
     }
 }

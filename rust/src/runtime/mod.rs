@@ -14,7 +14,7 @@ pub mod artifact;
 pub mod engine;
 pub mod faults;
 
-pub use artifact::{load_manifest, ArtifactMeta, DType};
+pub use artifact::{load_manifest, ArtifactId, ArtifactMeta, DType};
 pub use engine::{InferenceEngine, LoadedModel, Tensor};
 pub use faults::{
     fault_kind_of, synthetic_manifest, FaultInjector, FaultKind, FaultSpec, FaultStats,

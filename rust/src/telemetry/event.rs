@@ -18,8 +18,11 @@ pub enum EventKind {
     Admitted { task: u32, id: u64 },
     /// Request parked in a dynamic batcher awaiting batch formation.
     Batched { task: u32, id: u64 },
-    /// Engine call issued for a request or a formed batch.
-    Dispatched { task: u32, occupancy: u32 },
+    /// Engine call issued for a request or a formed batch. `route` is
+    /// the interned [`crate::runtime::ArtifactId`] value — resolve it to
+    /// a display stem through the coordinator's route table at export
+    /// time; the event itself stays string-free.
+    Dispatched { task: u32, route: u32, occupancy: u32 },
     /// An engine call succeeded only after `attempts` tries.
     Retried { task: u32, attempts: u32 },
     /// Request shed at dequeue: its deadline was unreachable.

@@ -38,8 +38,9 @@ pub fn event_to_json(ev: &Event) -> Json {
             pairs.push(("id", num(id as f64)));
             pairs.push(("deadline_ns", num(deadline_ns as f64)));
         }
-        EventKind::Dispatched { task, occupancy } => {
+        EventKind::Dispatched { task, route, occupancy } => {
             pairs.push(("task", num(task as f64)));
+            pairs.push(("route", num(route as f64)));
             pairs.push(("occupancy", num(occupancy as f64)));
         }
         EventKind::Retried { task, attempts } => {
@@ -157,7 +158,7 @@ mod tests {
     fn jsonl_lines_parse_standalone() {
         let mut r = Recorder::new(16);
         r.record(EventKind::Admitted { task: 0, id: 1 });
-        r.record(EventKind::Dispatched { task: 0, occupancy: 1 });
+        r.record(EventKind::Dispatched { task: 0, route: 3, occupancy: 1 });
         r.record(EventKind::Switch {
             from: 0,
             to: 2,
@@ -176,6 +177,8 @@ mod tests {
             assert!(v.get("event").is_some());
             assert!(v.get("t_ns").is_some());
         }
+        let disp = Json::parse(lines[1]).unwrap();
+        assert_eq!(disp.get("route").unwrap().as_usize().unwrap(), 3);
         let sw = Json::parse(lines[2]).unwrap();
         assert_eq!(sw.get("event").unwrap().as_str().unwrap(), "switch");
         assert_eq!(sw.get("bad_mask").unwrap().as_usize().unwrap(), 1);

@@ -1,0 +1,323 @@
+//! Recycled `f32` buffers for the zero-copy serving hot path.
+//!
+//! The serving loop's steady state must not touch the heap (see ROADMAP
+//! "Memory path"): every formed batch and every stub/engine output needs
+//! an owned `Vec<f32>`-shaped buffer, and allocating one per request is
+//! exactly the framework overhead CARIn's responsiveness claims say to
+//! eliminate. [`BufferPool`] keeps a small fixed set of slots, each an
+//! `Arc<Vec<f32>>`, and *leases* them:
+//!
+//! - a **lease** finds a slot whose `Arc` strong count is 1 (nobody else
+//!   holds it) and whose capacity already covers the requested length,
+//!   mutates it in place through [`Arc::get_mut`] under the pool lock,
+//!   and hands out a clone of the *existing* `Arc` — zero allocations on
+//!   this path, in fully safe code;
+//! - the handle is a [`TensorBuf`], a cheap-to-clone `Arc`-backed slice.
+//!   Dropping the last outstanding clone **returns** the slot: the pool
+//!   observes the strong count back at 1 on a later sweep and reuses the
+//!   buffer. There is no drop glue to get wrong — return is a property
+//!   of the refcount, not of a guard object;
+//! - when no adequate slot is free the pool records a **miss**: it grows
+//!   a free undersized slot, adds a new slot while under `max_slots`, or
+//!   falls back to an unpooled one-shot buffer.
+//!
+//! Counters ([`BufferPool::stats`]) feed the
+//! `carin_bufpool_{hits,misses,returns}` registry series; the serving
+//! benches gate on a steady-state hit rate >= 0.95.
+
+use std::ops::Deref;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Default slot cap: enough for every in-flight batch/output buffer of a
+/// serving loop plus headroom, small enough to bound resident memory.
+pub const DEFAULT_POOL_SLOTS: usize = 64;
+
+/// An `Arc`-backed, immutable `f32` buffer.
+///
+/// This is the payload type of [`crate::runtime::Tensor::F32`] and of
+/// `batcher::Request`/`Batch`: cloning bumps a refcount instead of deep
+/// copying, so a sample can travel enqueue -> batch formation ->
+/// watchdog channel -> engine without ever being duplicated. Buffers
+/// leased from a [`BufferPool`] return to it automatically when the last
+/// clone drops.
+#[derive(Debug, Clone)]
+pub struct TensorBuf(Arc<Vec<f32>>);
+
+impl TensorBuf {
+    pub fn as_slice(&self) -> &[f32] {
+        &self.0
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+}
+
+impl Deref for TensorBuf {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.0
+    }
+}
+
+impl From<Vec<f32>> for TensorBuf {
+    fn from(v: Vec<f32>) -> Self {
+        TensorBuf(Arc::new(v))
+    }
+}
+
+impl PartialEq for TensorBuf {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+/// Cumulative pool counters (monotone; snapshot and diff per run).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BufPoolStats {
+    /// Leases served from a recycled slot without allocating.
+    pub hits: u64,
+    /// Leases that had to allocate (grow, new slot, or unpooled).
+    pub misses: u64,
+    /// Slots observed back at refcount 1 and made leasable again.
+    pub returns: u64,
+}
+
+impl BufPoolStats {
+    /// Hits as a fraction of all leases (0.0 when the pool is unused).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct Slots {
+    bufs: Vec<Arc<Vec<f32>>>,
+    /// `leased[i]` is set while slot `i` is handed out; cleared by the
+    /// sweep once its strong count is back to 1.
+    leased: Vec<bool>,
+}
+
+struct PoolShared {
+    slots: Mutex<Slots>,
+    max_slots: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    returns: AtomicU64,
+}
+
+/// A clonable handle to a shared pool of recyclable `f32` buffers. See
+/// the module docs for the lease/return contract.
+#[derive(Clone)]
+pub struct BufferPool {
+    shared: Arc<PoolShared>,
+}
+
+impl std::fmt::Debug for BufferPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        f.debug_struct("BufferPool")
+            .field("max_slots", &self.shared.max_slots)
+            .field("stats", &s)
+            .finish()
+    }
+}
+
+impl Default for BufferPool {
+    fn default() -> Self {
+        BufferPool::new(DEFAULT_POOL_SLOTS)
+    }
+}
+
+impl BufferPool {
+    /// A pool holding at most `max_slots` recycled buffers.
+    pub fn new(max_slots: usize) -> BufferPool {
+        BufferPool {
+            shared: Arc::new(PoolShared {
+                slots: Mutex::new(Slots { bufs: Vec::new(), leased: Vec::new() }),
+                max_slots,
+                hits: AtomicU64::new(0),
+                misses: AtomicU64::new(0),
+                returns: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// A pool that never recycles: every lease is an unpooled miss.
+    /// Used as the copy-path baseline in the memory-path benchmark.
+    pub fn disabled() -> BufferPool {
+        BufferPool::new(0)
+    }
+
+    /// Lease a buffer of exactly `len` elements. `fill` may push up to
+    /// `len` elements into the (empty) buffer; the remainder is padded
+    /// with `0.0`. On the steady-state hit path this performs zero heap
+    /// allocations.
+    pub fn lease_with(&self, len: usize, fill: impl FnOnce(&mut Vec<f32>)) -> TensorBuf {
+        let mut slots = self.shared.slots.lock().unwrap();
+        self.sweep_locked(&mut slots);
+
+        // Best free slot: any with enough capacity is a hit; otherwise
+        // remember the roomiest free one to grow (a miss, but it keeps
+        // the slot count bounded).
+        let mut fit: Option<usize> = None;
+        let mut grow: Option<usize> = None;
+        for i in 0..slots.bufs.len() {
+            if slots.leased[i] || Arc::strong_count(&slots.bufs[i]) != 1 {
+                continue;
+            }
+            let cap = slots.bufs[i].capacity();
+            if cap >= len {
+                fit = Some(i);
+                break;
+            }
+            let roomier = match grow {
+                None => true,
+                Some(g) => cap > slots.bufs[g].capacity(),
+            };
+            if roomier {
+                grow = Some(i);
+            }
+        }
+
+        if let Some(i) = fit.or(grow) {
+            let hit = fit.is_some();
+            let buf = Arc::get_mut(&mut slots.bufs[i]).expect("free slot has refcount 1");
+            buf.clear();
+            fill(buf);
+            buf.resize(len, 0.0);
+            slots.leased[i] = true;
+            let counter = if hit { &self.shared.hits } else { &self.shared.misses };
+            counter.fetch_add(1, Ordering::Relaxed);
+            return TensorBuf(slots.bufs[i].clone());
+        }
+
+        // No free slot at all: allocate, and keep it only while under
+        // the cap so a burst cannot grow the pool without bound.
+        self.shared.misses.fetch_add(1, Ordering::Relaxed);
+        let mut v = Vec::with_capacity(len);
+        fill(&mut v);
+        v.resize(len, 0.0);
+        let arc = Arc::new(v);
+        if slots.bufs.len() < self.shared.max_slots {
+            slots.bufs.push(arc.clone());
+            slots.leased.push(true);
+        }
+        TensorBuf(arc)
+    }
+
+    /// Lease a zero-filled buffer of `len` elements.
+    pub fn lease_zeroed(&self, len: usize) -> TensorBuf {
+        self.lease_with(len, |_| {})
+    }
+
+    /// Observe dropped leases now instead of waiting for the next
+    /// lease's sweep; call before reading final [`BufferPool::stats`].
+    pub fn sweep_returns(&self) {
+        let mut slots = self.shared.slots.lock().unwrap();
+        self.sweep_locked(&mut slots);
+    }
+
+    fn sweep_locked(&self, slots: &mut Slots) {
+        for i in 0..slots.bufs.len() {
+            if slots.leased[i] && Arc::strong_count(&slots.bufs[i]) == 1 {
+                slots.leased[i] = false;
+                self.shared.returns.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    pub fn stats(&self) -> BufPoolStats {
+        BufPoolStats {
+            hits: self.shared.hits.load(Ordering::Relaxed),
+            misses: self.shared.misses.load(Ordering::Relaxed),
+            returns: self.shared.returns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_lease_misses_then_reuse_hits() {
+        let pool = BufferPool::new(4);
+        let a = pool.lease_with(8, |v| v.extend_from_slice(&[1.0, 2.0]));
+        assert_eq!(&a[..2], &[1.0, 2.0]);
+        assert_eq!(a.len(), 8);
+        assert_eq!(a[7], 0.0, "padded with zeros");
+        assert_eq!(pool.stats(), BufPoolStats { hits: 0, misses: 1, returns: 0 });
+
+        let ptr = a.as_slice().as_ptr();
+        drop(a);
+        let b = pool.lease_zeroed(8);
+        assert!(std::ptr::eq(ptr, b.as_slice().as_ptr()), "slot recycled");
+        assert!(b.iter().all(|&x| x == 0.0), "stale contents cleared");
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses, s.returns), (1, 1, 1));
+    }
+
+    #[test]
+    fn concurrent_leases_get_distinct_buffers() {
+        let pool = BufferPool::new(4);
+        let a = pool.lease_zeroed(4);
+        let b = pool.lease_zeroed(4);
+        assert!(!std::ptr::eq(a.as_slice().as_ptr(), b.as_slice().as_ptr()));
+        assert_eq!(pool.stats().misses, 2);
+    }
+
+    #[test]
+    fn clone_keeps_slot_leased_until_last_drop() {
+        let pool = BufferPool::new(4);
+        let a = pool.lease_zeroed(4);
+        let a2 = a.clone();
+        drop(a);
+        pool.sweep_returns();
+        assert_eq!(pool.stats().returns, 0, "a clone is still live");
+        drop(a2);
+        pool.sweep_returns();
+        assert_eq!(pool.stats().returns, 1);
+    }
+
+    #[test]
+    fn disabled_pool_never_recycles() {
+        let pool = BufferPool::disabled();
+        let a = pool.lease_zeroed(4);
+        drop(a);
+        let _b = pool.lease_zeroed(4);
+        let s = pool.stats();
+        assert_eq!(s.hits, 0);
+        assert_eq!(s.misses, 2);
+    }
+
+    #[test]
+    fn smaller_lease_reuses_bigger_slot_without_allocating() {
+        let pool = BufferPool::new(4);
+        let a = pool.lease_zeroed(64);
+        drop(a);
+        let b = pool.lease_with(16, |v| v.push(7.0));
+        assert_eq!(b.len(), 16);
+        assert_eq!(b[0], 7.0);
+        assert_eq!(pool.stats().hits, 1);
+    }
+
+    #[test]
+    fn slot_cap_bounds_pool_growth() {
+        let pool = BufferPool::new(2);
+        let held: Vec<_> = (0..5).map(|_| pool.lease_zeroed(4)).collect();
+        drop(held);
+        pool.sweep_returns();
+        // only the two retained slots can come back
+        assert_eq!(pool.stats().returns, 2);
+    }
+}

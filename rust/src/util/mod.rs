@@ -1,14 +1,17 @@
 //! In-tree substrates for crates unavailable in the offline registry:
 //! a fast deterministic RNG, descriptive statistics, capped exponential
 //! backoff, a minimal JSON parser/writer (manifest loading, telemetry
-//! export) and a leveled stderr logger (`CARIN_LOG`).
+//! export), a leveled stderr logger (`CARIN_LOG`) and the recycled
+//! buffer pool backing the zero-copy serving hot path.
 
 pub mod backoff;
+pub mod bufpool;
 pub mod json;
 pub mod log;
 pub mod rng;
 pub mod stats;
 
 pub use backoff::Backoff;
+pub use bufpool::{BufPoolStats, BufferPool, TensorBuf};
 pub use rng::Rng;
 pub use stats::Summary;

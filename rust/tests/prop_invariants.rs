@@ -254,19 +254,23 @@ fn prop_batcher_conserves_requests() {
             let now = Instant::now();
             let r = carin::coordinator::batcher::Request {
                 id: i as u64,
-                payload: vec![0.0; 4],
+                payload: vec![0.0; 4].into(),
                 enqueued: now,
                 admitted: now,
                 deadline: None,
             };
-            if let Some(batch) = b.push(r) {
+            let formed = b.push(r).map_err(|e| format!("push rejected: {e}"))?;
+            out += formed.shed.len();
+            if let Some(batch) = formed.batch {
                 if batch.occupancy > cap {
                     return Err("batch over capacity".into());
                 }
                 out += batch.occupancy;
             }
         }
-        if let Some(batch) = b.flush() {
+        let formed = b.flush();
+        out += formed.shed.len();
+        if let Some(batch) = formed.batch {
             out += batch.occupancy;
         }
         if out != n {

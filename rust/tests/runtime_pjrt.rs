@@ -119,10 +119,10 @@ fn infer_validates_shape_and_dtype(engine: &mut InferenceEngine, manifest: &[Art
     let meta = find(manifest, "cnn_s_fp32");
     engine.load(meta).unwrap();
     // wrong dtype
-    let bad = Tensor::I8(vec![0; meta.input.numel()]);
+    let bad = Tensor::I8(vec![0; meta.input.numel()].into());
     assert!(engine.infer("cnn_s_fp32", &bad).is_err());
     // wrong size
-    let bad = Tensor::F32(vec![0.0; 3]);
+    let bad = Tensor::F32(vec![0.0; 3].into());
     assert!(engine.infer("cnn_s_fp32", &bad).is_err());
     // unknown model
     let ok = zero_input(meta);
